@@ -1,0 +1,53 @@
+"""Step-level co-execution benchmark: policies vs heterogeneous groups.
+
+The training-loop analogue of Fig. 5: three simulated pod groups with
+1.0/0.5/0.25 relative speeds train the same tiny LM; each policy's mean
+step time (barrier = slowest group) and its final assignment are reported.
+HGuided should approach the optimal 4:2:1 split; Static (equal hints)
+stays at the imbalanced 1:1:1.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.data import DataPipeline
+from repro.hetero import HeteroTrainer, make_policy
+from repro.models import build_model
+from repro.optim import AdamW
+
+SPEEDS = {"podA": 1.0, "podB": 0.5, "podC": 0.25}
+STEPS = 24
+MICROBATCHES = 14
+
+
+def run():
+    rows = []
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    for policy_name in ("static", "dyn5", "dynamic", "hguided"):
+        pipe = DataPipeline(seed=3, global_batch=MICROBATCHES,
+                            seq_len=32, vocab=cfg.vocab_size,
+                            num_shards=MICROBATCHES)
+        policy = make_policy(policy_name, {k: 1.0 for k in SPEEDS},
+                             total_steps=STEPS)
+        tr = HeteroTrainer(model, params0, optimizer=AdamW(lr=1e-3),
+                           policy=policy, pipeline=pipe,
+                           group_speeds=SPEEDS,
+                           total_microbatches=MICROBATCHES)
+        reports = tr.run(STEPS)
+        tail = reports[STEPS // 2:]
+        mean_step = float(np.mean([r.step_seconds for r in tail]))
+        per_group = {g: float(np.mean([r.group_seconds[g] for r in tail
+                                       if g in r.group_seconds]))
+                     for g in tr.monitor.alive()}
+        balance = min(per_group.values()) / max(per_group.values())
+        assignment = reports[-1].assignment
+        rows.append((f"hetero/{policy_name}",
+                     round(mean_step * 1e3, 1),
+                     f"balance={balance:.2f};assign={assignment};"
+                     f"compiles={tr.exec_cache.compilations};"
+                     f"loss={reports[-1].loss:.3f}"))
+    return rows

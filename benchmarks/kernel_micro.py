@@ -1,0 +1,86 @@
+"""Kernel microbenchmarks: real wall-time of the jitted production paths
+(XLA oracles on CPU; the Pallas kernels are TPU-target, validated in
+interpret mode — timing interpret mode would measure the interpreter).
+Prints name,us_per_call,derived rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import demo_spheres, ref
+
+
+def _time(fn, *args, warmup=2, iters=10):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    a = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    f = jax.jit(ref.matmul)
+    us = _time(f, a, b)
+    rows.append(("kernel/matmul_512", round(us, 1),
+                 f"gflops={2 * 512**3 / us / 1e3:.1f}"))
+
+    img = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
+    f = jax.jit(ref.gaussian_blur)
+    rows.append(("kernel/gaussian_1024", round(_time(f, img), 1),
+                 "5x5 separable"))
+
+    x = jnp.asarray(rng.uniform(-3, 3, size=(1 << 20,)), jnp.float32)
+    f = jax.jit(ref.taylor_sin)
+    rows.append(("kernel/taylor_1M", round(_time(f, x), 1), "12 terms"))
+
+    side = 512
+    re_ = np.linspace(-2.2, 0.8, side, dtype=np.float32)
+    im = np.linspace(-1.4, 1.4, side, dtype=np.float32)
+    cre, cim = [jnp.asarray(g) for g in np.meshgrid(re_, im)]
+    f = jax.jit(lambda a, b: ref.mandelbrot(a, b, max_iter=64))
+    rows.append(("kernel/mandelbrot_512", round(_time(f, cre, cim), 1),
+                 "64 iters"))
+
+    n = 1 << 18
+    dx, dy = rng.uniform(-.4, .4, (2, n)).astype(np.float32)
+    dz = np.sqrt(np.maximum(1 - dx**2 - dy**2, .5)).astype(np.float32)
+    sph = demo_spheres()
+    f = jax.jit(ref.raytrace)
+    rows.append(("kernel/ray_256k", round(
+        _time(f, jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz), sph),
+        1), "8 spheres"))
+
+    vals = jnp.asarray(rng.normal(size=(1 << 14, 128)), jnp.float32)
+    lens = jnp.asarray(rng.integers(0, 128, size=(1 << 14,)), jnp.int32)
+    f = jax.jit(ref.rap)
+    rows.append(("kernel/rap_16k", round(_time(f, vals, lens), 1),
+                 "L=128"))
+
+    B, H, T, D = 1, 8, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, 4, T, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, 4, T, D)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.attention(q, k, v))
+    rows.append(("kernel/attention_1k", round(_time(f, q, k, v), 1),
+                 "causal GQA"))
+
+    BH, T2, Dk = 8, 2048, 64
+    q2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)) * .2, jnp.float32)
+    v2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)), jnp.float32)
+    ld = jnp.asarray(-np.abs(rng.normal(size=(BH, T2)) * .1), jnp.float32)
+    f = jax.jit(lambda *a: ref.chunked_linear_attention(*a))
+    rows.append(("kernel/linattn_2k", round(_time(f, q2, k2, v2, ld), 1),
+                 "chunked SSD"))
+    return rows

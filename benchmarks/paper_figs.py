@@ -1,0 +1,124 @@
+"""Reproduction of the paper's tables/figures from the calibrated DES.
+
+One function per artifact; each returns rows of (name, value, derived)
+printed as CSV by run.py. Figures:
+  table1  — benchmark properties (straight from the specs)
+  fig5    — balancing efficiency + speedups, 4 configs × 2 memory models
+  fig6    — energy split (cores / gpu / uncore+dram) per config
+  fig7    — EDP ratio vs GPU-only (the 72 % geomean headline)
+  fig8    — size scalability sweeps with CPU/GPU/co-exec curves
+"""
+from __future__ import annotations
+
+from repro.core import (ALL_BENCHMARKS, MemoryModel, PAPER_POWER, SPECS,
+                        edp_ratio, geomean, make_scheduler, paper_workload,
+                        simulate, solo_run)
+from repro.core.workloads import effective_shares
+
+KINDS = {"gpu": "gpu", "cpu": "cpu"}
+POLICIES = ("static", "dyn5", "dyn200", "hguided")
+HINT_ERR = 0.25
+
+
+def _run(name, policy, mem, size_scale=1.0):
+    wl, cpu, gpu = paper_workload(name, size_scale=size_scale)
+    speeds = effective_shares(wl, cpu, gpu, hint_error=HINT_ERR)
+    kw = {"speeds": speeds} if policy in ("static", "hguided") else {}
+    sched = make_scheduler(policy, wl.total, 2, **kw)
+    res = simulate(sched, [cpu, gpu], wl, memory=mem)
+    return res, wl, cpu, gpu
+
+
+def table1():
+    rows = []
+    for name, s in SPECS.items():
+        rows.append((f"table1/{name}",
+                     s.work_items,
+                     f"lws={s.local_work_size};mem={s.mem_mib}MiB;"
+                     f"rw={s.read_write[0]}:{s.read_write[1]};"
+                     f"groups={s.groups}"))
+    return rows
+
+
+def fig5():
+    rows = []
+    for name in ALL_BENCHMARKS:
+        for mem in (MemoryModel.USM, MemoryModel.BUFFERS):
+            solo = None
+            for policy in POLICIES:
+                res, wl, cpu, gpu = _run(name, policy, mem)
+                if solo is None:
+                    solo = solo_run(gpu, wl, memory=mem)
+                bal = res.balance()
+                sp = solo.total_s / res.total_s
+                rows.append((f"fig5/{name}/{policy}/{mem.value}",
+                             round(sp, 3), f"balance={bal:.3f};"
+                             f"pkgs={res.num_packages}"))
+    for mem in ("usm", "buffers"):
+        for policy in POLICIES:
+            sps = [r[1] for r in rows
+                   if f"/{policy}/{mem}" in r[0]]
+            rows.append((f"fig5/geomean/{policy}/{mem}",
+                         round(geomean(sps), 3), "speedup-geomean"))
+    return rows
+
+
+def fig6():
+    rows = []
+    for name in ALL_BENCHMARKS:
+        res, wl, cpu, gpu = _run(name, "hguided", MemoryModel.USM)
+        solo = solo_run(gpu, wl)
+        e_co = res.energy(PAPER_POWER, KINDS)
+        e_gpu = solo.energy(PAPER_POWER, KINDS)
+        rows.append((f"fig6/{name}/coexec", round(e_co.total_J, 1),
+                     f"cores={e_co.per_unit_J.get('cpu', 0):.0f}J;"
+                     f"gpu={e_co.per_unit_J.get('gpu', 0):.0f}J;"
+                     f"uncore={e_co.uncore_dram_J:.0f}J"))
+        rows.append((f"fig6/{name}/gpu_only", round(e_gpu.total_J, 1),
+                     f"cores={e_gpu.per_unit_J.get('cpu', 0):.0f}J;"
+                     f"gpu={e_gpu.per_unit_J.get('gpu', 0):.0f}J;"
+                     f"uncore={e_gpu.uncore_dram_J:.0f}J"))
+    return rows
+
+
+def fig7():
+    rows = []
+    ratios = {}
+    for mem in (MemoryModel.USM, MemoryModel.BUFFERS):
+        for policy in POLICIES:
+            rs = []
+            for name in ALL_BENCHMARKS:
+                res, wl, cpu, gpu = _run(name, policy, mem)
+                solo = solo_run(gpu, wl, memory=mem)
+                r = edp_ratio(solo.energy(PAPER_POWER, KINDS),
+                              res.energy(PAPER_POWER, KINDS))
+                rows.append((f"fig7/{name}/{policy}/{mem.value}",
+                             round(r, 3), "edp_gpu/edp_coexec"))
+                rs.append(r)
+            ratios[(policy, mem.value)] = geomean(rs)
+            rows.append((f"fig7/geomean/{policy}/{mem.value}",
+                         round(geomean(rs), 3), "edp-geomean"))
+    headline = ratios[("hguided", "usm")]
+    rows.append(("fig7/HEADLINE/hguided/usm", round(headline, 3),
+                 "paper_claims=1.72"))
+    return rows
+
+
+def fig8():
+    rows = []
+    for name in ALL_BENCHMARKS:
+        for scale in (0.001, 0.01, 0.1, 0.5, 1.0, 2.0, 4.0, 8.0):
+            wl, cpu, gpu = paper_workload(name, size_scale=scale)
+            speeds = effective_shares(wl, cpu, gpu, hint_error=HINT_ERR)
+            sched = make_scheduler("hguided", wl.total, 2, speeds=speeds)
+            co = simulate(sched, [cpu, gpu], wl)
+            g = solo_run(gpu, wl)
+            c = solo_run(cpu, wl)
+            rows.append((f"fig8/{name}/x{scale}", round(co.total_s, 4),
+                         f"gpu={g.total_s:.4f};cpu={c.total_s:.4f};"
+                         f"speedup={g.total_s / co.total_s:.3f}"))
+    return rows
+
+
+ALL = {"table1": table1, "fig5": fig5, "fig6": fig6, "fig7": fig7,
+       "fig8": fig8}

@@ -1,0 +1,35 @@
+"""§Roofline table: read the dry-run JSONs and emit one row per cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    if not files:
+        return [("roofline/NO_DATA", 0,
+                 f"run `python -m repro.launch.dryrun --all` first "
+                 f"(looked in {RESULTS_DIR})")]
+    for path in files:
+        with open(path) as f:
+            d = json.load(f)
+        key = os.path.basename(path)[:-5].replace("__", "/")
+        if d.get("status") == "skipped":
+            rows.append((f"roofline/{key}", 0,
+                         f"SKIPPED:{d['reason'][:60]}"))
+            continue
+        bound_ms = max(d["t_compute"], d["t_memory"],
+                       d["t_collective"]) * 1e3
+        rows.append((
+            f"roofline/{key}", round(bound_ms, 2),
+            f"frac={d['roofline_frac']:.3f};bound={d['bottleneck']};"
+            f"t_comp={d['t_compute'] * 1e3:.1f}ms;"
+            f"t_mem={d['t_memory'] * 1e3:.1f}ms;"
+            f"t_coll={d['t_collective'] * 1e3:.1f}ms;"
+            f"hbm={(d.get('hbm_per_dev') or 0) / 2**30:.1f}GiB"))
+    return rows

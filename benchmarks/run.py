@@ -1,0 +1,32 @@
+"""Benchmark driver: one section per paper table/figure + framework
+benchmarks. Prints ``name,value,derived`` CSV rows.
+
+  python -m benchmarks.run                 # everything
+  python -m benchmarks.run fig5 fig7       # selected artifacts
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import hetero_bench, kernel_micro, paper_figs, roofline_table
+
+    suites = dict(paper_figs.ALL)
+    suites["kernels"] = kernel_micro.run
+    suites["hetero"] = hetero_bench.run
+    suites["roofline"] = roofline_table.run
+
+    wanted = sys.argv[1:] or list(suites)
+    print("name,value,derived")
+    for key in wanted:
+        if key not in suites:
+            print(f"# unknown suite {key}; have {sorted(suites)}",
+                  file=sys.stderr)
+            continue
+        for name, value, derived in suites[key]():
+            print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

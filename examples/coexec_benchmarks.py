@@ -1,0 +1,59 @@
+"""Co-execute the paper's six benchmarks (real kernels, real threads) and
+reproduce the scheduler comparison on this host's devices.
+
+    PYTHONPATH=src python examples/coexec_benchmarks.py [--n 16384]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.core import CoexecutorRuntime, counits_from_devices
+from repro.kernels import demo_spheres, package_kernel
+
+
+def inputs_for(name: str, n: int):
+    rng = np.random.default_rng(0)
+    if name == "taylor":
+        return [rng.uniform(-2, 2, n).astype(np.float32)]
+    if name == "mandelbrot":
+        side = int(np.sqrt(n))
+        re_ = np.linspace(-2.2, 0.8, side, dtype=np.float32)
+        im = np.linspace(-1.4, 1.4, side, dtype=np.float32)
+        cre, cim = np.meshgrid(re_, im)
+        return [cre.ravel(), cim.ravel()]
+    if name == "ray":
+        dx, dy = rng.uniform(-.4, .4, (2, n)).astype(np.float32)
+        dz = np.sqrt(np.maximum(1 - dx**2 - dy**2, .5)).astype(np.float32)
+        return [dx, dy, dz]
+    if name == "rap":
+        L = 64
+        return [rng.normal(size=(n, L)).astype(np.float32),
+                rng.integers(0, L, size=n).astype(np.int32)]
+    raise KeyError(name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 14)
+    args = ap.parse_args()
+
+    units = counits_from_devices(jax.local_devices() * 2,
+                                 kinds=["cpu", "cpu"],
+                                 speed_hints=[0.5, 0.5])
+    for name in ("taylor", "mandelbrot", "ray", "rap"):
+        ins = inputs_for(name, args.n)
+        total = len(ins[0])
+        print(f"== {name} ({total} items)")
+        for policy in ("static", "dyn16", "hguided"):
+            rt = CoexecutorRuntime(policy).config(units=units, dist=0.5)
+            t0 = time.perf_counter()
+            rt.launch(total, package_kernel(name), ins)
+            dt = time.perf_counter() - t0
+            print(f"   {policy:8s}: {dt * 1e3:7.1f} ms, "
+                  f"{rt.last_stats.num_packages:3d} packages")
+
+
+if __name__ == "__main__":
+    main()

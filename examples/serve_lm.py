@@ -1,0 +1,67 @@
+"""Batched serving example: prefill + greedy decode with the KV cache,
+reporting per-phase throughput. Works for every assigned arch (SSM/hybrid
+archs use their O(1) recurrent state instead of a KV ring).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch h2o-danube3-4b \
+        --batch 8 --prompt-len 64 --gen 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube3-4b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size)
+    cache = model.init_cache(B, P + G)
+    if model.prefill is not None:   # enc-dec: run the encoder once
+        batch = {"tokens": prompts,
+                 "frames": jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                                     jnp.bfloat16)}
+        cache = jax.jit(model.prefill)(params, batch, cache)
+    step = jax.jit(model.decode_step)
+
+    t0 = time.perf_counter()
+    for t in range(P):              # prefill via the cached decode path
+        logits, cache = step(params, prompts[:, t:t + 1], cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    cur = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None]
+    out = [cur]
+    t0 = time.perf_counter()
+    for _ in range(G - 1):
+        logits, cache = step(params, cur, cache)
+        cur = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None]
+        out.append(cur)
+    jax.block_until_ready(cur)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"arch={args.arch} batch={B}")
+    print(f"prefill: {B * P / t_prefill:8.0f} tok/s "
+          f"({t_prefill * 1e3:.0f} ms for {B * P} tokens)")
+    print(f"decode : {B * (G - 1) / t_decode:8.0f} tok/s "
+          f"({t_decode * 1e3 / (G - 1):.1f} ms/step)")
+    print(f"sample generation (row 0): {gen[0, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

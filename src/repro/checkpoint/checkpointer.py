@@ -1,0 +1,136 @@
+"""Checkpointing: atomic, async, reshard-on-restore.
+
+Trees are flattened to path-keyed arrays in a single .npz per checkpoint
+(one per step, `ckpt_<step>.npz` + `latest` pointer written atomically via
+rename). `save_async` hands the host copy to a writer thread so the train
+loop never blocks on disk — the checkpoint analogue of the Commander
+loop's compute/communication overlap. On restore, arrays are placed with
+whatever sharding the *current* mesh prescribes (elastic restart: a 4-group
+checkpoint restores onto 2 groups transparently, because the on-disk format
+is sharding-free).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "##"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template: PyTree, flat: dict[str, np.ndarray],
+                    place: Optional[Callable] = None) -> PyTree:
+    def fill(path, leaf):
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = flat[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        return place(arr, leaf) if place else arr
+    return jax.tree_util.tree_map_with_path(fill, template)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ----------------------------------------------------------
+    def _write(self, step: int, flat: dict[str, np.ndarray]) -> None:
+        try:
+            path = os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            os.replace(tmp, path)            # atomic publish
+            ptr = os.path.join(self.dir, "latest")
+            with open(ptr + ".tmp", "w") as f:
+                f.write(str(step))
+            os.replace(ptr + ".tmp", ptr)
+            self._gc()
+        except BaseException as e:           # surfaced on next wait()
+            self._error = e
+
+    def _gc(self) -> None:
+        ckpts = sorted(p for p in os.listdir(self.dir)
+                       if p.startswith("ckpt_") and p.endswith(".npz"))
+        for old in ckpts[:-self.keep]:
+            os.remove(os.path.join(self.dir, old))
+
+    def save(self, step: int, tree: PyTree) -> None:
+        self.wait()
+        self._write(step, _flatten(tree))
+
+    def save_async(self, step: int, tree: PyTree) -> None:
+        self.wait()                           # one outstanding save max
+        flat = _flatten(tree)                 # host copy happens here
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore --------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        ptr = os.path.join(self.dir, "latest")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            return int(f.read().strip())
+
+    def restore(self, template: PyTree, *, step: Optional[int] = None,
+                shardings: Optional[PyTree] = None) -> tuple[int, PyTree]:
+        """Restore into the template's structure; reshard if specs given."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+        if shardings is not None:
+            spec_flat = _flatten_specs(shardings)
+
+            def place(arr, leaf_path_key=None):
+                return arr
+            def fill(path, leaf):
+                key = _SEP.join(
+                    str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+                return jax.device_put(flat[key], spec_flat[key])
+            tree = jax.tree_util.tree_map_with_path(fill, template)
+        else:
+            tree = _unflatten_into(template, flat)
+        return step, tree
+
+
+def _flatten_specs(tree: PyTree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: hasattr(x, "spec") or x is None)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = leaf
+    return flat

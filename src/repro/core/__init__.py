@@ -1,0 +1,33 @@
+"""Coexecutor Runtime — the paper's contribution as a composable JAX module.
+
+Public surface:
+    CoexecutorRuntime, counits_from_devices     — real co-execution (Listing 1)
+    make_scheduler / Static / Dynamic / HGuided — load balancers (§3.2)
+    simulate, solo_run, Workload, SimUnit       — DES reproduction engine
+    MemoryModel, MemoryCosts                    — USM vs Buffers (§3.1)
+    PowerModel, energy_report, edp_ratio        — energy/EDP model (§5.2)
+    paper_workload, ALL_BENCHMARKS              — Table 1 profiles
+"""
+from .energy import (EnergyReport, PowerModel, PAPER_POWER, TPU_POWER,
+                     edp_ratio, energy_report, geomean)
+from .memory import MemoryCosts, MemoryModel, TPU_MEMORY_COSTS
+from .package import Package, Range, validate_cover
+from .profiler import EwmaThroughput, SpeedBoard
+from .runtime import CoexecutorRuntime, LaunchStats, counits_from_devices
+from .scheduler import (DynamicScheduler, HGuidedScheduler, Scheduler,
+                        StaticScheduler, make_scheduler)
+from .sim import SimResult, Workload, simulate, solo_run
+from .units import JaxUnit, SimUnit
+from .workloads import (ALL_BENCHMARKS, IRREGULAR, REGULAR, SPECS,
+                        paper_workload)
+
+__all__ = [
+    "ALL_BENCHMARKS", "CoexecutorRuntime", "DynamicScheduler",
+    "EnergyReport", "EwmaThroughput", "HGuidedScheduler", "IRREGULAR",
+    "JaxUnit", "LaunchStats", "MemoryCosts", "MemoryModel", "PAPER_POWER",
+    "Package", "PowerModel", "REGULAR", "Range", "SPECS", "Scheduler",
+    "SimResult", "SimUnit", "SpeedBoard", "StaticScheduler",
+    "TPU_MEMORY_COSTS", "TPU_POWER", "Workload", "counits_from_devices",
+    "edp_ratio", "energy_report", "geomean", "make_scheduler",
+    "paper_workload", "simulate", "solo_run", "validate_cover",
+]

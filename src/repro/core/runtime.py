@@ -1,0 +1,119 @@
+"""Public Coexecutor Runtime API (paper §3.3, Listing 1).
+
+Python rendering of the paper's C++ API::
+
+    rt = CoexecutorRuntime(policy="hguided")
+    rt.config(units=counits_cpu_gpu(), dist=0.35, memory="usm")
+    out = rt.launch(n, kernel, inputs)           # blocking co-execution
+
+`kernel(offset, *chunks) -> chunk_out` is a pure JAX function over a package
+slice — the analogue of the SYCL command-group lambda. The runtime splits the
+index space with the configured load balancer, co-executes on all units, and
+the results land in the expected host container, exactly as the paper
+describes ("the data resulting from the computation will be in the expected
+data structures").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from .director import Director
+from .memory import MemoryModel
+from .package import Package
+from .scheduler import make_scheduler
+from .units import JaxUnit
+
+
+def counits_from_devices(devices: Optional[Sequence["jax.Device"]] = None,
+                         *, kinds: Optional[Sequence[str]] = None,
+                         speed_hints: Optional[Sequence[float]] = None,
+                         ) -> list[JaxUnit]:
+    """One Coexecution Unit per device (default: all local jax devices).
+
+    On the paper's platform this is [CPU, GPU]; on a TPU host it is the
+    local chips; on this CPU-only container it degenerates to one unit
+    (co-execution still works — one unit serves all packages).
+    """
+    devices = list(devices if devices is not None else jax.local_devices())
+    units = []
+    for i, d in enumerate(devices):
+        kind = (kinds[i] if kinds else
+                ("tpu" if d.platform == "tpu" else d.platform))
+        hint = speed_hints[i] if speed_hints else 1.0
+        units.append(JaxUnit(f"{d.platform}:{d.id}", d, kind=kind,
+                             speed_hint=hint))
+    return units
+
+
+@dataclasses.dataclass
+class LaunchStats:
+    """Per-launch metrics mirroring the paper's measurements."""
+
+    total_s: float
+    packages: list[Package]
+    unit_busy_s: dict[str, float]
+
+    @property
+    def num_packages(self) -> int:
+        return len(self.packages)
+
+
+class CoexecutorRuntime:
+    """The paper's `coexecutor_runtime<policy>` object."""
+
+    def __init__(self, policy: str = "hguided"):
+        self.policy = policy
+        self._units: Optional[list[JaxUnit]] = None
+        self._memory = MemoryModel.USM
+        self._dist: Optional[Sequence[float]] = None
+        self._scheduler_kw: dict = {}
+        self.last_stats: Optional[LaunchStats] = None
+
+    # -- configuration (paper: runtime.config(CounitSet::CpuGpu, dist(0.35)))
+    def config(self, units: Optional[Sequence[JaxUnit]] = None,
+               *, dist: Optional[float | Sequence[float]] = None,
+               memory: str | MemoryModel = MemoryModel.USM,
+               **scheduler_kw) -> "CoexecutorRuntime":
+        self._units = list(units) if units is not None else None
+        if isinstance(dist, (int, float)):
+            # scalar hint = first unit's share, remainder spread evenly
+            # (the paper's dist(0.35) gives CPU 35 %, GPU 65 %).
+            n = len(self._units) if self._units else 2
+            rest = (1.0 - float(dist)) / max(n - 1, 1)
+            self._dist = [float(dist)] + [rest] * (n - 1)
+        elif dist is not None:
+            self._dist = [float(x) for x in dist]
+        self._memory = (memory if isinstance(memory, MemoryModel)
+                        else MemoryModel(str(memory).lower()))
+        self._scheduler_kw = scheduler_kw
+        return self
+
+    # -- launch (paper: runtime.launch(size, lambda)) -----------------------
+    def launch(self, total: int, kernel: Callable,
+               inputs: Sequence[np.ndarray],
+               out: Optional[np.ndarray] = None,
+               *, out_dtype=np.float32,
+               out_trailing_shape: tuple = (),
+               granularity: int = 1) -> np.ndarray:
+        units = self._units if self._units is not None else counits_from_devices()
+        kw = dict(self._scheduler_kw)
+        if self.policy.lower() in ("static", "hguided") and self._dist:
+            kw.setdefault("speeds", list(self._dist))
+        sched = make_scheduler(self.policy, total, len(units),
+                               granularity=granularity, **kw)
+        if out is None:
+            out = np.zeros((total, *out_trailing_shape), dtype=out_dtype)
+        director = Director(units, memory=self._memory)
+        import time as _time
+        t0 = _time.perf_counter()
+        pkgs = director.launch(sched, kernel, inputs, out)
+        total_s = _time.perf_counter() - t0
+        self.last_stats = LaunchStats(
+            total_s=total_s, packages=pkgs,
+            unit_busy_s={u.name: u.busy_s for u in units})
+        return out

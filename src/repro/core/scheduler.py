@@ -1,0 +1,212 @@
+"""Load-balancing algorithms of the Coexecutor Runtime (paper §3.2).
+
+Three policies, implemented exactly as defined in the paper and its
+antecedents (Maat [15], EngineCL [16], HGuided [18]):
+
+* ``Static``    — one package per unit, sized proportionally to the unit's
+                  relative computing speed. Minimal management; cannot adapt.
+* ``Dynamic``   — N equal packages, handed to units on demand as they go
+                  idle. Adapts to irregularity; pays one host⇄device round
+                  trip per package.
+* ``HGuided``   — package size for unit *i* when ``rem`` items remain:
+                  ``max(min_pkg, rem * speed_i / (K * sum(speeds)))``,
+                  so packages start large (∝ speed) and shrink as the
+                  execution progresses. Few synchronisation points, near-1.0
+                  balance, no per-benchmark tuning parameter.
+
+All schedulers hand out contiguous ranges aligned to ``granularity`` (the
+kernel's local work size / hardware vector width), except possibly the final
+package which takes whatever remains.
+
+Thread-safety: `next_package` is called under the Director's lock (real
+runtime) or single-threaded (simulator); schedulers themselves are not
+internally locked.
+"""
+from __future__ import annotations
+
+import abc
+import math
+from typing import Optional, Sequence
+
+from .package import Package, Range
+
+
+def _align_up(x: int, g: int) -> int:
+    return ((x + g - 1) // g) * g
+
+
+class Scheduler(abc.ABC):
+    """Base class: owns the remaining-work cursor and the package log."""
+
+    name: str = "base"
+
+    def __init__(self, total: int, num_units: int, *, granularity: int = 1):
+        if total <= 0:
+            raise ValueError("total work must be positive")
+        if num_units <= 0:
+            raise ValueError("need at least one Coexecution Unit")
+        if granularity <= 0:
+            raise ValueError("granularity must be positive")
+        self.total = int(total)
+        self.num_units = int(num_units)
+        self.granularity = int(granularity)
+        self._cursor = 0
+        self._seq = 0
+        self.issued: list[Package] = []
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self._cursor
+
+    def done(self) -> bool:
+        return self._cursor >= self.total
+
+    # -- policy hook ------------------------------------------------------
+    @abc.abstractmethod
+    def _package_size(self, unit: int) -> int:
+        """Size of the next package for `unit`, given current remaining."""
+
+    # -- public API (called by the Commander loop) -------------------------
+    def next_package(self, unit: int) -> Optional[Package]:
+        if self.done():
+            return None
+        size = self._package_size(unit)
+        size = max(1, min(size, self.remaining))
+        # align to granularity unless this is the tail
+        if size < self.remaining:
+            size = min(_align_up(size, self.granularity), self.remaining)
+        pkg = Package(rng=Range(self._cursor, size), seq=self._seq, unit=unit)
+        self._cursor += size
+        self._seq += 1
+        self.issued.append(pkg)
+        return pkg
+
+
+class StaticScheduler(Scheduler):
+    """One package per unit, split ∝ relative speed (paper's `Static`)."""
+
+    name = "static"
+
+    def __init__(self, total: int, num_units: int, *,
+                 speeds: Optional[Sequence[float]] = None, granularity: int = 1):
+        super().__init__(total, num_units, granularity=granularity)
+        if speeds is None:
+            speeds = [1.0] * num_units
+        if len(speeds) != num_units:
+            raise ValueError("speeds length must match num_units")
+        if any(s <= 0 for s in speeds):
+            raise ValueError("speeds must be positive")
+        self.speeds = [float(s) for s in speeds]
+        # Precompute the split from aligned cumulative boundaries: exact
+        # cover by construction (monotone boundaries, last pinned to
+        # `total`); a unit whose share rounds to zero simply gets no
+        # package. The tail unit absorbs any alignment remainder.
+        tot_speed = sum(self.speeds)
+        cum = 0.0
+        bounds = [0]
+        for s in self.speeds[:-1]:
+            cum += total * s / tot_speed
+            b = _align_up(int(round(cum)), granularity)
+            bounds.append(min(max(b, bounds[-1]), total))
+        bounds.append(total)
+        self._sizes = [bounds[i + 1] - bounds[i] for i in range(num_units)]
+        self._bounds = bounds
+        self._served: set[int] = set()
+
+    def _package_size(self, unit: int) -> int:  # pragma: no cover - unused
+        return self._sizes[unit]
+
+    def next_package(self, unit: int) -> Optional[Package]:
+        # Each unit gets exactly its precomputed share, once. Unit i's
+        # region is [bounds[i], bounds[i+1]) — deterministic placement, as
+        # the paper's static split fixes regions at configure time.
+        if unit in self._served or self.done():
+            return None
+        self._served.add(unit)
+        size = self._sizes[unit]
+        if size == 0:
+            return None     # share rounded away (tiny problem, many units)
+        pkg = Package(rng=Range(self._bounds[unit], size), seq=self._seq,
+                      unit=unit)
+        self._seq += 1
+        self._cursor += size
+        self.issued.append(pkg)
+        return pkg
+
+
+class DynamicScheduler(Scheduler):
+    """N equal packages served on demand (paper's `Dynamic`, Dyn5/Dyn200)."""
+
+    name = "dynamic"
+
+    def __init__(self, total: int, num_units: int, *, num_packages: int = 200,
+                 granularity: int = 1):
+        super().__init__(total, num_units, granularity=granularity)
+        if num_packages <= 0:
+            raise ValueError("num_packages must be positive")
+        self.num_packages = int(num_packages)
+        self._pkg_size = max(1, math.ceil(total / self.num_packages))
+
+    def _package_size(self, unit: int) -> int:
+        return self._pkg_size
+
+
+class HGuidedScheduler(Scheduler):
+    """Heterogeneous guided self-scheduling (paper's `HGuided`).
+
+    size_i = max(min_package, remaining * speed_i / (K * sum(speeds)))
+
+    `speeds` is the computational-power hint (the `dist` 0.35 in Listing 1
+    translates to speeds [0.35, 0.65] for [CPU, GPU]). K (the divisor)
+    defaults to 2 as in the reference implementation.
+    """
+
+    name = "hguided"
+
+    def __init__(self, total: int, num_units: int, *,
+                 speeds: Optional[Sequence[float]] = None,
+                 divisor: float = 2.0,
+                 min_package: int = 1,
+                 granularity: int = 1):
+        super().__init__(total, num_units, granularity=granularity)
+        if speeds is None:
+            speeds = [1.0] * num_units
+        if len(speeds) != num_units:
+            raise ValueError("speeds length must match num_units")
+        if any(s <= 0 for s in speeds):
+            raise ValueError("speeds must be positive")
+        if divisor <= 0:
+            raise ValueError("divisor must be positive")
+        self.speeds = [float(s) for s in speeds]
+        self.divisor = float(divisor)
+        self.min_package = max(int(min_package), granularity)
+
+    def _package_size(self, unit: int) -> int:
+        share = self.remaining * self.speeds[unit] / (
+            self.divisor * sum(self.speeds))
+        return max(self.min_package, int(share))
+
+    def update_speed(self, unit: int, speed: float) -> None:
+        """Online speed refinement from the profiler (EWMA throughput)."""
+        if speed > 0:
+            self.speeds[unit] = float(speed)
+
+
+_REGISTRY = {
+    "static": StaticScheduler,
+    "dynamic": DynamicScheduler,
+    "hguided": HGuidedScheduler,
+}
+
+
+def make_scheduler(policy: str, total: int, num_units: int, **kw) -> Scheduler:
+    """Factory: ``make_scheduler("hguided", n, 2, speeds=[0.35, 0.65])``."""
+    key = policy.lower()
+    if key.startswith("dyn") and key != "dynamic":
+        # convenience: "dyn5" / "dyn200" → Dynamic with N packages
+        kw.setdefault("num_packages", int(key[3:]))
+        key = "dynamic"
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown scheduling policy {policy!r}; "
+                       f"choose from {sorted(_REGISTRY)}")
+    return _REGISTRY[key](total, num_units, **kw)

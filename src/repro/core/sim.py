@@ -1,0 +1,213 @@
+"""Discrete-event simulation of the Commander loop (paper Figs. 2a/4).
+
+The simulator replays the exact Commander/Coexecution-Unit protocol:
+
+  unit idle ──request──▶ Scheduler.next_package ──▶ host launches package
+  (host is a serial resource: launch + collection costs serialize on it,
+  reproducing the paper's "CPU manages the runtime resources as the host,
+  increasing the CPU load") ──▶ unit computes ──▶ host collects output
+  (cost depends on the memory model: USM ≈ free, Buffers ∝ bytes).
+
+Compute time for a package is ``sum(weight[i]**alpha_u for i in range) /
+speed_u`` — `weights` capture data irregularity (Mandelbrot iteration
+counts, Ray scene density, Rap row lengths); regular kernels have
+weights = 1. While more than one unit is busy and the combined working set
+exceeds the shared LLC, a contention factor slows both units (the paper's
+MatMul observation in §5.3).
+
+The output timeline feeds the paper's metrics: balance = T_gpu/T_cpu,
+speedup = T_fastest_alone / T_coexec, energy via core.energy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .energy import EnergyReport, PowerModel, energy_report
+from .memory import MemoryCosts, MemoryModel
+from .package import Package, validate_cover
+from .scheduler import Scheduler
+from .units import SimUnit
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A data-parallel problem as the DES sees it.
+
+    weights — per-item relative cost (mean ≈ 1), or None for regular
+              kernels. Stored as a float64 array of length `total`.
+    """
+
+    name: str
+    total: int
+    bytes_in_per_item: float
+    bytes_out_per_item: float
+    working_set_bytes: float
+    weights: Optional[np.ndarray] = None
+    # LLC sensitivity: 1.0 for kernels with heavy temporal reuse (MatMul —
+    # the paper's §5.3 hardware-counter analysis: "the LLC memory suffers
+    # constant invalidations between CPU and GPU"); 0.0 for streaming
+    # kernels whose working set never profits from the LLC.
+    contention_scale: float = 0.0
+
+    def weights_prefix(self) -> Optional[np.ndarray]:
+        if self.weights is None:
+            return None
+        p = np.zeros(self.total + 1, dtype=np.float64)
+        np.cumsum(self.weights, out=p[1:])
+        return p
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Timeline + metrics of one simulated co-execution."""
+
+    workload: str
+    policy: str
+    memory: str
+    total_s: float
+    unit_finish_s: dict[str, float]      # last compute completion per unit
+    unit_busy_s: dict[str, float]        # total compute seconds per unit
+    host_busy_s: float                   # serialized launch+collect seconds
+    packages: list[Package]
+    num_packages: int
+
+    def balance(self, fast: str = "gpu", slow: str = "cpu") -> float:
+        """Paper's balancing efficiency T_fast/T_slow (1.0 = perfect)."""
+        num = self.unit_finish_s.get(fast, 0.0)
+        den = self.unit_finish_s.get(slow, 0.0)
+        return num / den if den > 0 else float("inf")
+
+    def energy(self, power: PowerModel,
+               kinds: dict[str, str]) -> EnergyReport:
+        busy: dict[str, float] = {}
+        for name, b in self.unit_busy_s.items():
+            kind = kinds[name]
+            busy[kind] = busy.get(kind, 0.0) + b
+        # host management burns CPU-core time on top of CPU compute
+        busy["cpu"] = busy.get("cpu", 0.0) + self.host_busy_s
+        return energy_report(power, busy, self.total_s)
+
+
+def _item_costs(workload: Workload, unit: SimUnit) -> np.ndarray:
+    """Per-item seconds for `unit` (prefix-summed by the caller)."""
+    if workload.weights is None:
+        return None
+    w = workload.weights.astype(np.float64)
+    if unit.alpha != 1.0:
+        # NOT renormalized: `speed` is the unit's throughput on *uniform*
+        # (weight=1) data; alpha>1 genuinely slows the unit on heavy items
+        # (branch divergence on the paper's iGPU). This is what makes
+        # irregular co-execution speedups exceed the uniform capacity bound
+        # 1 + s_cpu/s_gpu, as observed for Ray (1.48) and Rap (2.46).
+        w = np.power(w, unit.alpha)
+    return np.concatenate([[0.0], np.cumsum(w)])
+
+
+def simulate(scheduler: Scheduler, units: Sequence[SimUnit],
+             workload: Workload, *,
+             memory: MemoryModel = MemoryModel.USM,
+             costs: MemoryCosts = MemoryCosts(),
+             validate: bool = True) -> SimResult:
+    """Run the Commander loop in virtual time. Deterministic."""
+    n = len(units)
+    if scheduler.num_units != n:
+        raise ValueError("scheduler/unit count mismatch")
+
+    prefix = {u.name: _item_costs(workload, u) for u in units}
+
+    # Each Coexecution Unit has its own management thread (paper Fig. 2a):
+    # launch/collect costs are paid on the unit's own timeline, not on a
+    # global serial host. Units couple only through the scheduler (on-demand
+    # package order) and the shared-LLC contention factor. The host-side
+    # management seconds are accumulated for the energy model (the CPU does
+    # double duty as host — §5.1).
+    evq: list[tuple[float, int, int]] = []  # (t_idle, tiebreak, unit)
+    tie = 0
+    for i, u in enumerate(units):
+        heapq.heappush(evq, (u.setup_s, tie, i))
+        tie += 1
+
+    host_busy = 0.0
+    busy_until = [0.0] * n            # compute-busy horizon per unit
+    collector_free = [0.0] * n        # per-unit collection thread horizon
+    unit_finish = {u.name: 0.0 for u in units}
+    unit_busy = {u.name: 0.0 for u in units}
+    packages: list[Package] = []
+    last_collect = 0.0
+
+    while evq:
+        t, _, i = heapq.heappop(evq)
+        u = units[i]
+        pkg = scheduler.next_package(i)
+        if pkg is None:
+            continue  # unit retires from the Commander loop
+        pkg.t_issue = t
+        in_bytes = pkg.size * workload.bytes_in_per_item
+        out_bytes = pkg.size * workload.bytes_out_per_item
+
+        # package emission on this unit's manager thread
+        launch_cost = costs.launch_cost(memory, int(in_bytes))
+        host_busy += launch_cost
+        pkg.t_launch = t + launch_cost
+
+        # compute; LLC contention applies while any *other* unit is busy
+        pfx = prefix[u.name]
+        if pfx is None:
+            base = pkg.size / u.speed
+        else:
+            base = float(pfx[pkg.offset + pkg.size] - pfx[pkg.offset]) / u.speed
+        others_busy = any(busy_until[j] > pkg.t_launch
+                          for j in range(n) if j != i)
+        factor = 1.0
+        if others_busy and workload.contention_scale > 0.0:
+            pen = costs.contention_penalty(workload.working_set_bytes)
+            factor = 1.0 + workload.contention_scale * (pen - 1.0)
+        compute_end = pkg.t_launch + base * factor
+        busy_until[i] = compute_end
+        unit_busy[u.name] += compute_end - pkg.t_launch
+        unit_finish[u.name] = max(unit_finish[u.name], compute_end)
+        pkg.t_complete = compute_end
+
+        # collection on the unit's manager thread; overlaps the unit's next
+        # compute (paper: "overlapping computation and communication") but
+        # collections of one unit serialize among themselves.
+        collect_start = max(compute_end, collector_free[i])
+        collect_cost = costs.collect_cost(memory, int(out_bytes))
+        collector_free[i] = collect_start + collect_cost
+        host_busy += collect_cost
+        pkg.t_collected = collector_free[i]
+        last_collect = max(last_collect, pkg.t_collected)
+
+        packages.append(pkg)
+        # the unit may request its next package as soon as compute ends
+        heapq.heappush(evq, (compute_end, tie, i))
+        tie += 1
+
+    if validate:
+        validate_cover(packages, workload.total)
+
+    return SimResult(
+        workload=workload.name,
+        policy=scheduler.name,
+        memory=memory.value,
+        total_s=last_collect,
+        unit_finish_s=unit_finish,
+        unit_busy_s=unit_busy,
+        host_busy_s=host_busy,
+        packages=packages,
+        num_packages=len(packages),
+    )
+
+
+def solo_run(unit: SimUnit, workload: Workload, *,
+             memory: MemoryModel = MemoryModel.USM,
+             costs: MemoryCosts = MemoryCosts()) -> SimResult:
+    """Baseline: the whole problem on one device, one package."""
+    from .scheduler import StaticScheduler
+
+    sched = StaticScheduler(workload.total, 1, speeds=[unit.speed])
+    return simulate(sched, [unit], workload, memory=memory, costs=costs)

@@ -1,0 +1,131 @@
+"""Coexecution Units (paper Fig. 2a).
+
+A *Coexecution Unit* owns one execution resource and a management thread that
+talks to the Commander loop. Two substrates implement the same interface:
+
+* ``SimUnit`` — used by the discrete-event simulator: a calibrated relative
+  speed plus an irregularity exponent (`alpha`) modeling how much the unit
+  suffers on computationally heavy items (branch divergence on the paper's
+  iGPU). Reproduces the paper's scheduler dynamics deterministically.
+* ``JaxUnit`` — real execution: dispatches jitted package kernels onto a
+  ``jax.Device`` asynchronously (JAX's async dispatch stream plays the role
+  of the oneAPI DAG) and reports completion when the output buffer is ready.
+
+Package kernels have the signature ``fn(offset, chunk_inputs...) -> chunk_out``
+and are compiled per package-size bucket (dynamic package sizes would
+otherwise trigger unbounded recompilation — sizes are padded up to the
+bucket, then sliced).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+try:  # jax is always present in this repo, but keep the DES importable alone
+    import jax
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jax = None
+    jnp = None
+
+
+@dataclasses.dataclass
+class SimUnit:
+    """Discrete-event-simulated device for scheduler evaluation.
+
+    speed   — work-items/second on unit-weight data.
+    alpha   — irregularity exponent: cost(item) = weight**alpha / speed.
+              alpha > 1 models divergence-sensitive devices (the paper's
+              iGPU on Ray/Mandelbrot); alpha = 1 is cost ∝ weight.
+    setup_s — one-time init before the unit joins the Commander loop
+              (queue/context creation; the paper's initialization phase).
+    kind    — energy-model class ("cpu" / "gpu" / "tpu").
+    """
+
+    name: str
+    kind: str
+    speed: float
+    alpha: float = 1.0
+    setup_s: float = 2e-3
+
+    def package_seconds(self, weights_prefix: Optional[np.ndarray],
+                        offset: int, size: int) -> float:
+        """Compute time for items [offset, offset+size)."""
+        if weights_prefix is None:  # regular kernel: every item costs 1
+            return size / self.speed
+        w = weights_prefix[offset + size] - weights_prefix[offset]
+        return float(w) / self.speed
+
+
+class JaxUnit:
+    """A real Coexecution Unit backed by a jax.Device.
+
+    The management thread (owned by the Director) calls :meth:`run_package`;
+    dispatch is asynchronous and completion is detected by blocking on the
+    output buffer, mirroring the event-driven collection of the paper.
+    """
+
+    def __init__(self, name: str, device: "jax.Device", *, kind: str = "cpu",
+                 speed_hint: float = 1.0,
+                 size_buckets: Sequence[int] = ()):
+        self.name = name
+        self.kind = kind
+        self.device = device
+        self.speed_hint = float(speed_hint)
+        self._compiled: dict[tuple[Any, int], Any] = {}
+        self._size_buckets = sorted(size_buckets)
+        self.busy_s = 0.0
+        self._lock = threading.Lock()
+
+    # -- size bucketing ----------------------------------------------------
+    def bucket(self, size: int) -> int:
+        if self._size_buckets:
+            i = bisect.bisect_left(self._size_buckets, size)
+            if i < len(self._size_buckets):
+                return self._size_buckets[i]
+        # default: next power of two — bounds compilations to O(log total)
+        b = 1
+        while b < size:
+            b <<= 1
+        return b
+
+    def _get_compiled(self, fn: Callable) -> Any:
+        # One jit per kernel; the package-size *bucket* is implicit in the
+        # padded chunk shape, so XLA caches one executable per bucket.
+        # Computation placement follows the committed (device_put) inputs.
+        got = self._compiled.get(fn)
+        if got is None:
+            got = jax.jit(fn)
+            self._compiled[fn] = got
+        return got
+
+    # -- execution ---------------------------------------------------------
+    def run_package(self, fn: Callable, offset: int, size: int,
+                    inputs: Sequence[np.ndarray]) -> np.ndarray:
+        """Execute ``fn(offset_scalar, *padded_chunks) -> chunk_out``.
+
+        Inputs are the *full* host arrays; this unit slices its package range,
+        pads to the bucket size, dispatches, and returns the unpadded result.
+        The kernel sees the real offset (for index-dependent work such as
+        Mandelbrot pixel coordinates) and a fixed-bucket chunk.
+        """
+        bucket = self.bucket(size)
+        chunks = []
+        for arr in inputs:
+            chunk = np.asarray(arr[offset:offset + size])
+            if bucket != size:
+                pad = [(0, bucket - size)] + [(0, 0)] * (chunk.ndim - 1)
+                chunk = np.pad(chunk, pad)
+            chunks.append(jax.device_put(chunk, self.device))
+        compiled = self._get_compiled(fn)
+        t0 = time.perf_counter()
+        out = compiled(jnp.int32(offset), *chunks)
+        out = np.asarray(out)  # blocks until ready (completion event)
+        with self._lock:
+            self.busy_s += time.perf_counter() - t0
+        return out[:size]

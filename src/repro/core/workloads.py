@@ -1,0 +1,223 @@
+"""The paper's six benchmarks as DES workload profiles (Table 1 + §5).
+
+Each profile carries the paper's Table 1 parameters (work-items, memory
+footprint, read:write buffer ratio, local work size) and a calibration of the
+two Coexecution Units (CPU = i5-7500 4C, GPU = HD Graphics 630):
+
+* ``ratio``  — GPU/CPU throughput on uniform data (§5.3 gives 13.5, 4.8 and
+               4.6 for Gaussian, Mandelbrot and Ray; the others are
+               calibrated to the paper's HGuided speedups: Taylor ≈ 1.95,
+               Rap = 2.46 ⇒ CPU is 1.46× the iGPU on Rap).
+* ``alpha``  — the GPU's irregularity exponent (divergence sensitivity);
+               1.0 for regular kernels.
+* weights    — per-workgroup cost profile: real Mandelbrot escape-iteration
+               counts, a synthetic Ray scene-density field, Rap row lengths.
+
+DES items are *workgroups* (Table 1 local work size), not single work-items:
+the scheduler granularity is exactly one workgroup, as in the reference
+runtime. The GPU processes the full problem in ~10 s (paper §5.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from .sim import Workload
+from .units import SimUnit
+
+GPU_SOLO_SECONDS = 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """Table 1 row + device calibration.
+
+    ``capacity_ratio`` is the §5.3 compute-capacity GPU/CPU ratio (13.5,
+    4.8, 4.6 for Gaussian/Mandelbrot/Ray) — it governs *small*,
+    cache-resident problem sizes. ``bw_ratio`` is the asymptotic ratio once
+    the working set spills to shared DRAM and both devices ride the same
+    memory bus (≈ 2 for the memory-bound regular kernels). The effective
+    ratio at a given size blends the two by working-set size; this is what
+    makes the paper's Fig. 5 speedups, Fig. 7 EDP and §5.3 turning points
+    mutually consistent.
+    """
+
+    name: str
+    work_items: int            # Table 1 (N x 1e5)
+    local_work_size: int       # Table 1
+    mem_mib: float             # Table 1
+    read_write: tuple[int, int]  # Table 1 read:write buffers
+    uses_local_mem: bool       # Table 1
+    capacity_ratio: float      # GPU/CPU at cache-resident sizes
+    bw_ratio: float            # GPU/CPU once DRAM-bandwidth-bound
+    gpu_alpha: float           # divergence exponent of the iGPU
+    irregular: bool
+
+    @property
+    def groups(self) -> int:
+        return max(1, self.work_items // self.local_work_size)
+
+    def effective_ratio(self, working_set_bytes: float,
+                        cache_transition_bytes: float = 8 * 2**20) -> float:
+        """Blend capacity→bandwidth ratio as the working set spills caches."""
+        f = 1.0 / (1.0 + working_set_bytes / cache_transition_bytes)
+        return self.bw_ratio + (self.capacity_ratio - self.bw_ratio) * f
+
+
+SPECS: dict[str, BenchSpec] = {
+    "gaussian": BenchSpec("gaussian", 262 * 10**5, 128, 195.0, (2, 1), False,
+                          capacity_ratio=13.5, bw_ratio=2.0,
+                          gpu_alpha=1.0, irregular=False),
+    "matmul": BenchSpec("matmul", 237 * 10**5, 64, 264.0, (2, 1), True,
+                        capacity_ratio=3.3, bw_ratio=1.75,
+                        gpu_alpha=1.0, irregular=False),
+    "taylor": BenchSpec("taylor", 10 * 10**5, 64, 46.0, (3, 2), True,
+                        capacity_ratio=1.05, bw_ratio=1.05,
+                        gpu_alpha=1.0, irregular=False),
+    "ray": BenchSpec("ray", 94 * 10**5, 128, 35.0, (1, 1), True,
+                     capacity_ratio=4.6, bw_ratio=4.6,
+                     gpu_alpha=2.0, irregular=True),
+    "rap": BenchSpec("rap", 5 * 10**5, 128, 6.0, (2, 1), False,
+                     capacity_ratio=0.685, bw_ratio=0.685,
+                     gpu_alpha=1.1, irregular=True),
+    "mandelbrot": BenchSpec("mandelbrot", 703 * 10**5, 256, 1072.0, (0, 1),
+                            False, capacity_ratio=4.8, bw_ratio=4.8,
+                            gpu_alpha=1.5, irregular=True),
+}
+
+
+# ---------------------------------------------------------------------------
+# Irregular weight profiles (per workgroup, mean normalized to 1.0)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _mandelbrot_profile(groups: int, max_iter: int = 256) -> np.ndarray:
+    """Real escape-iteration counts over the classic viewport, row-major,
+    resampled to `groups` workgroups."""
+    side = 512
+    re = np.linspace(-2.2, 0.8, side)[None, :]
+    im = np.linspace(-1.4, 1.4, side)[:, None]
+    c = re + 1j * im
+    z = np.zeros_like(c)
+    iters = np.full(c.shape, max_iter, dtype=np.float64)
+    alive = np.ones(c.shape, dtype=bool)
+    for k in range(max_iter):
+        z[alive] = z[alive] ** 2 + c[alive]
+        esc = alive & (np.abs(z) > 2.0)
+        iters[esc] = k
+        alive &= ~esc
+    flat = iters.ravel()
+    idx = np.linspace(0, flat.size - 1, groups).astype(int)
+    w = flat[idx] + 1.0
+    return w / w.mean()
+
+
+@functools.lru_cache(maxsize=None)
+def _ray_profile(groups: int) -> np.ndarray:
+    """Synthetic scene density: cheap background + heavy object blobs.
+
+    Calibrated so that mean(w)=1 with a bimodal shape (80 % light rays at
+    ~0.45, 20 % heavy intersections at ~3.2) — with the iGPU's alpha=2 this
+    yields the paper's Ray speedup of ≈1.48 over GPU-only.
+    """
+    rng = np.random.default_rng(7)
+    w = np.full(groups, 0.45)
+    # spatial coherence: heavy objects occupy contiguous scanline runs of
+    # ~2 % of the image each, covering 20 % of all rays. The exact bimodal
+    # mass (80 % @ 0.45, 20 % @ 3.2 ⇒ mean 1.0, mean(w²) ≈ 2.21) is what
+    # yields the paper's Ray co-execution speedup of ≈ 1.48 with alpha = 2.
+    run = max(1, groups // 50)
+    heavy_runs = max(1, int(0.20 * groups / run))
+    starts = rng.choice(groups - run, size=heavy_runs, replace=False)
+    for s in starts:
+        w[s:s + run] = 3.2
+    return w / w.mean()
+
+
+@functools.lru_cache(maxsize=None)
+def _rap_profile(groups: int) -> np.ndarray:
+    """Resource-allocation rows of linearly growing length (triangular
+    work distribution — the classic irregular RAP shape)."""
+    w = np.linspace(0.2, 1.8, groups)
+    return w / w.mean()
+
+
+def _weights(spec: BenchSpec) -> np.ndarray | None:
+    if not spec.irregular:
+        return None
+    if spec.name == "mandelbrot":
+        return _mandelbrot_profile(spec.groups)
+    if spec.name == "ray":
+        return _ray_profile(spec.groups)
+    if spec.name == "rap":
+        return _rap_profile(spec.groups)
+    raise KeyError(spec.name)
+
+
+# ---------------------------------------------------------------------------
+# Public factory
+# ---------------------------------------------------------------------------
+
+def paper_workload(name: str, *, size_scale: float = 1.0
+                   ) -> tuple[Workload, SimUnit, SimUnit]:
+    """Build (workload, cpu_unit, gpu_unit) for one paper benchmark.
+
+    size_scale scales the problem size (Fig. 8 scalability sweeps); device
+    speeds are fixed, so GPU-solo time scales linearly with it.
+    """
+    spec = SPECS[name]
+    groups = max(16, int(spec.groups * size_scale))
+    weights = _weights(spec)
+    if weights is not None and groups != len(weights):
+        idx = np.linspace(0, len(weights) - 1, groups).astype(int)
+        weights = weights[idx]
+
+    bytes_per_group = spec.mem_mib * 2**20 / spec.groups
+    r, w = spec.read_write
+    frac_out = w / max(r + w, 1)
+    wl = Workload(
+        name=spec.name,
+        total=groups,
+        bytes_in_per_item=bytes_per_group * (1 - frac_out),
+        bytes_out_per_item=bytes_per_group * frac_out,
+        working_set_bytes=spec.mem_mib * 2**20 * size_scale,
+        weights=weights,
+        # only MatMul has the temporal reuse that LLC invalidations destroy
+        contention_scale=1.0 if spec.uses_local_mem and spec.name == "matmul"
+        else 0.0,
+    )
+    gpu_speed = spec.groups / GPU_SOLO_SECONDS  # uniform-data groups/s
+    ratio = spec.effective_ratio(wl.working_set_bytes)
+    cpu = SimUnit("cpu", "cpu", speed=gpu_speed / ratio, alpha=1.0,
+                  setup_s=1e-3)
+    gpu = SimUnit("gpu", "gpu", speed=gpu_speed, alpha=spec.gpu_alpha,
+                  setup_s=3e-3)
+    return wl, cpu, gpu
+
+
+def effective_shares(wl: Workload, cpu: SimUnit, gpu: SimUnit,
+                     *, hint_error: float = 0.0) -> list[float]:
+    """Per-application computing-power hint (the paper's ``dist(0.35)``).
+
+    The programmer measures each device's throughput *on this workload*
+    (alpha-inflated for irregular data) and passes the CPU's share; a
+    positive ``hint_error`` over-estimates the CPU, as off-line estimates
+    typically drift — HGuided absorbs the drift, Static cannot (§2).
+    """
+    def eff_speed(u: SimUnit) -> float:
+        if wl.weights is None or u.alpha == 1.0:
+            return u.speed
+        inflation = float(np.mean(wl.weights ** u.alpha))
+        return u.speed / max(inflation, 1e-12)
+
+    s_cpu, s_gpu = eff_speed(cpu), eff_speed(gpu)
+    share = s_cpu / (s_cpu + s_gpu)
+    share = min(0.9, share * (1.0 + hint_error))
+    return [share, 1.0 - share]
+
+
+REGULAR = ("gaussian", "matmul", "taylor")
+IRREGULAR = ("mandelbrot", "rap", "ray")
+ALL_BENCHMARKS = REGULAR + IRREGULAR

@@ -1,0 +1,158 @@
+"""HeteroTrainer: co-executed data-parallel training across unequal groups.
+
+The training-step analogue of the Coexecutor Runtime: the global batch is a
+queue of microbatch *packages*; each device group receives a quantized
+share (policy-driven: static / dynamic / hguided), computes its partial
+gradient, and the step closes with a weighted gradient combine — the
+collect/merge phase of the Commander loop.
+
+On this CPU-only container the groups are *simulated*: every group runs on
+the local device but reports a virtual wall time scaled by its
+heterogeneity factor (e.g. a 0.5x group is a half-speed pod slice or a
+straggling, thermally-throttled slice). The gradient math is identical to
+homogeneous data-parallel training — assignments change *where* microbatches
+run, never their content — so loss trajectories are bit-comparable across
+policies, which tests/test_hetero.py asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import DataPipeline
+from ..optim import AdamW, clip_by_global_norm
+from .monitor import GroupMonitor
+from .rebalance import RebalancePolicy
+from .sharder import ExecutableCache, quantize_shares
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class StepReport:
+    step: int
+    loss: float
+    assignment: dict[str, int]
+    group_seconds: dict[str, float]   # virtual per-group wall time
+    step_seconds: float               # max over groups (barrier)
+    rebalanced: bool
+
+
+class HeteroTrainer:
+    def __init__(self, model, params: PyTree, *, optimizer: AdamW,
+                 policy: RebalancePolicy, pipeline: DataPipeline,
+                 group_speeds: dict[str, float],
+                 total_microbatches: int,
+                 grad_clip: float = 1.0,
+                 monitor: Optional[GroupMonitor] = None):
+        self.model = model
+        self.params = params
+        self.optimizer = optimizer
+        self.opt_state = optimizer.init(params)
+        self.policy = policy
+        self.pipeline = pipeline
+        self.group_speeds = dict(group_speeds)
+        self.total_microbatches = total_microbatches
+        self.grad_clip = grad_clip
+        self.monitor = monitor or GroupMonitor(list(group_speeds))
+        self.step = 0
+        self.exec_cache = ExecutableCache(lambda key: self._compiled_fns)
+        self.history: list[StepReport] = []
+
+        def loss_fn(params, batch):
+            return self.model.loss(params, batch)
+
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+        def apply_updates(params, opt_state, grads):
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+            params, opt_state = self.optimizer.update(grads, opt_state,
+                                                      params)
+            return params, opt_state, gnorm
+
+        self._apply = jax.jit(apply_updates)
+        self._compiled_fns = (self._grad_fn, self._apply)
+
+    # ------------------------------------------------------------------
+    def _assignment(self) -> dict[str, int]:
+        alive = self.monitor.alive()
+        shares = {k: v for k, v in self.policy.shares.items() if k in alive}
+        tot = sum(shares.values())
+        shares = {k: v / tot for k, v in shares.items()}
+        return quantize_shares(shares, self.total_microbatches)
+
+    def kill_group(self, name: str) -> None:
+        """Elastic scale-down (node failure / preemption)."""
+        self.monitor.mark_dead(name)
+        self.policy.drop_group(name)
+
+    def train_step(self) -> StepReport:
+        assignment = self._assignment()
+        self.exec_cache.get(assignment)      # compile-count accounting
+
+        # deterministic global partition: microbatch i of this step is
+        # identical no matter which group runs it
+        mb_ids = list(range(self.total_microbatches))
+        cursor = 0
+        total_loss = 0.0
+        grads_sum = None
+        group_seconds: dict[str, float] = {}
+
+        for name, count in assignment.items():
+            ids = mb_ids[cursor:cursor + count]
+            cursor += count
+            t0 = time.perf_counter()
+            for i in ids:
+                batch = self.pipeline.batch_at(self.step, shard=i)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                (loss, _), grads = self._grad_fn(self.params, batch)
+                total_loss += float(loss)
+                grads_sum = grads if grads_sum is None else jax.tree.map(
+                    jnp.add, grads_sum, grads)
+            real = time.perf_counter() - t0
+            virtual = real / self.group_speeds[name]
+            group_seconds[name] = virtual
+            tokens = count * self.pipeline.seq_len * (
+                self.pipeline.global_batch // self.pipeline.num_shards)
+            self.monitor.record(name, tokens, virtual)
+
+        scale = 1.0 / self.total_microbatches
+        grads = jax.tree.map(lambda g: g * scale, grads_sum)
+        self.params, self.opt_state, _ = self._apply(
+            self.params, self.opt_state, grads)
+
+        measured = self.monitor.shares()
+        rebalanced = self.policy.update(self.step, measured)
+        report = StepReport(
+            step=self.step,
+            loss=total_loss / self.total_microbatches,
+            assignment=assignment,
+            group_seconds=group_seconds,
+            step_seconds=max(group_seconds.values()),
+            rebalanced=rebalanced,
+        )
+        self.history.append(report)
+        self.step += 1
+        return report
+
+    def run(self, steps: int) -> list[StepReport]:
+        return [self.train_step() for _ in range(steps)]
+
+    # -- checkpoint integration ----------------------------------------
+    def state_tree(self) -> PyTree:
+        return {"params": self.params,
+                "m": self.opt_state.m, "v": self.opt_state.v,
+                "opt_step": self.opt_state.step,
+                "step": jnp.asarray(self.step)}
+
+    def load_state_tree(self, tree: PyTree) -> None:
+        from ..optim.adamw import AdamWState
+        self.params = tree["params"]
+        self.opt_state = AdamWState(step=jnp.asarray(tree["opt_step"]),
+                                    m=tree["m"], v=tree["v"])
+        self.step = int(tree["step"])

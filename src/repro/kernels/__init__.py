@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's six benchmarks + production kernels.
+
+Layout per kernel: `<name>.py` holds the `pl.pallas_call` + BlockSpec
+implementation, `ref.py` the pure-jnp oracle, `ops.py` the jit'd wrapper
+with impl dispatch and the Coexecutor package adapters.
+"""
+from . import ref
+from .flash_attention import flash_attention
+from .gaussian import gaussian_blur
+from .linear_attention import linear_attention
+from .mandelbrot import mandelbrot
+from .matmul import matmul
+from .ops import (flash_attention_op, gaussian_op, linear_attention_op,
+                  mandelbrot_op, matmul_op, package_kernel, rap_op,
+                  raytrace_op, taylor_op)
+from .rap import rap
+from .raytrace import demo_spheres, raytrace
+from .taylor import taylor_sin
+
+__all__ = [
+    "demo_spheres", "flash_attention", "flash_attention_op", "gaussian_blur",
+    "gaussian_op", "linear_attention", "linear_attention_op", "mandelbrot",
+    "mandelbrot_op", "matmul", "matmul_op", "package_kernel", "rap",
+    "rap_op", "raytrace", "raytrace_op", "ref", "taylor_op", "taylor_sin",
+]

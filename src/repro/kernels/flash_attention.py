@@ -1,0 +1,140 @@
+"""Blockwise-softmax (flash) attention Pallas kernel, TPU-native.
+
+Used by the prefill/serve paths of the LM stack (training defaults to the
+differentiable XLA path; see models/attention.py). Features: causal masking,
+GQA (q-head blocks index their kv head via the index map), and sliding
+windows (SWA) for h2o-danube3/zamba2-style configs.
+
+Layout: grid (B*Hq, Tq/bq, Tk/bk) with the key axis innermost — TPU executes
+it sequentially, so the running max/denominator/accumulator live in VMEM
+scratch across key steps (online softmax). Fully-masked key blocks are
+skipped with `pl.when`, which on real silicon elides both the DMA waits and
+the MXU work for ~half the blocks under causal masking (and all but w/bk
+blocks under SWA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, seq_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # block-level reachability: causal ⇒ keys cannot start after the last
+    # query; SWA ⇒ keys cannot end before the window of the first query.
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window is not None:
+        reachable = reachable & (k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(reachable)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= q_idx >= k_idx
+        if window is not None:
+            mask &= q_idx - k_idx < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_ref[...] = corr * l_ref[...] + \
+            jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finalize():
+        # rows with no reachable keys keep l = 0 → emit zeros, not NaNs
+        l = l_ref[:, :1]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, T, D); k, v: (B, Hkv, T, D). Returns (B, Hq, T, D).
+
+    Tq == Tk (prefill). Head dim D should be lane-aligned (≥128 ideal);
+    smaller D is padded. GQA handled via the kv index map.
+    """
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    bq = min(bq, T)
+    bk = min(bk, T)
+    pt = (-T) % max(bq, bk)
+    Dp = max(D, 128)
+    pd = Dp - D
+    if pt or pd:
+        pad = ((0, 0), (0, 0), (0, pt), (0, pd))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    Tp = T + pt
+
+    qf = q.reshape(B * Hq, Tp, Dp)
+    kf = k.reshape(B * Hkv, Tp, Dp)
+    vf = v.reshape(B * Hkv, Tp, Dp)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, seq_k=Tp)
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tp, Dp), q.dtype),
+        grid=(B * Hq, Tp // bq, Tp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dp), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, Dp), lambda h, i, j, G=G: (h // G, j, 0)),
+            pl.BlockSpec((1, bk, Dp), lambda h, i, j, G=G: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dp), lambda h, i, j: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-bcast)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, Dp), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, Hq, Tp, Dp)
+    return out[:, :, :T, :D]

@@ -1,0 +1,115 @@
+"""Jit'd public wrappers + implementation dispatch for all kernels.
+
+``impl="pallas"`` runs the Pallas kernel (interpret mode off-TPU),
+``impl="ref"`` the pure-jnp oracle. ``package_kernel(name)`` adapts a
+benchmark to the Coexecutor Runtime's package signature
+``fn(offset, *chunks) -> chunk_out`` so the paper's six benchmarks can be
+co-executed exactly like Listing 1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .gaussian import gaussian_blur
+from .linear_attention import linear_attention
+from .mandelbrot import mandelbrot
+from .matmul import matmul
+from .rap import rap
+from .raytrace import demo_spheres, raytrace
+from .taylor import taylor_sin
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _dispatch(pallas_fn: Callable, ref_fn: Callable, impl: str, *a, **kw):
+    if impl == "ref":
+        return ref_fn(*a, **kw)
+    if impl == "pallas":
+        return pallas_fn(*a, interpret=not _on_tpu(), **kw)
+    raise ValueError(f"impl must be 'pallas' or 'ref', got {impl!r}")
+
+
+def matmul_op(a, b, *, impl: str = "pallas", **kw):
+    return _dispatch(matmul, ref.matmul, impl, a, b, **kw)
+
+
+def gaussian_op(img, *, impl: str = "pallas", **kw):
+    return _dispatch(gaussian_blur, ref.gaussian_blur, impl, img, **kw)
+
+
+def taylor_op(x, *, impl: str = "pallas", **kw):
+    return _dispatch(taylor_sin, ref.taylor_sin, impl, x, **kw)
+
+
+def mandelbrot_op(cre, cim, *, impl: str = "pallas", **kw):
+    return _dispatch(mandelbrot, ref.mandelbrot, impl, cre, cim, **kw)
+
+
+def raytrace_op(dx, dy, dz, spheres, *, impl: str = "pallas", **kw):
+    return _dispatch(raytrace, ref.raytrace, impl, dx, dy, dz, spheres, **kw)
+
+
+def rap_op(values, lengths, *, impl: str = "pallas", **kw):
+    return _dispatch(rap, ref.rap, impl, values, lengths, **kw)
+
+
+def flash_attention_op(q, k, v, *, impl: str = "pallas", **kw):
+    return _dispatch(flash_attention, ref.attention, impl, q, k, v, **kw)
+
+
+def linear_attention_op(q, k, v, log_decay, *, impl: str = "pallas", **kw):
+    return _dispatch(linear_attention, ref.linear_attention, impl,
+                     q, k, v, log_decay, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Coexecutor package adapters (the paper's Listing-1 shape)
+# ---------------------------------------------------------------------------
+
+def package_kernel(name: str) -> Callable:
+    """Package-form kernel ``fn(offset, *chunks) -> chunk`` for `name`.
+
+    Index spaces match the DES workload profiles: rows for gaussian/matmul/
+    rap, flat elements (row-blocks of 128 lanes) for taylor/mandelbrot/ray.
+    """
+    if name == "taylor":
+        def fn(offset, chunk):
+            return ref.taylor_sin(chunk)
+        return fn
+    if name == "gaussian":
+        def fn(offset, s0, s1, s2, s3, s4):
+            t = [float(x) for x in ref.GAUSS_TAPS]
+            vert = (t[0] * s0 + t[1] * s1 + t[2] * s2 + t[3] * s3 +
+                    t[4] * s4)
+            xp = jnp.pad(vert, ((0, 0), (2, 2)))
+            W = vert.shape[1]
+            return (t[0] * xp[:, 0:W] + t[1] * xp[:, 1:W + 1] +
+                    t[2] * xp[:, 2:W + 2] + t[3] * xp[:, 3:W + 3] +
+                    t[4] * xp[:, 4:W + 4])
+        return fn
+    if name == "matmul":
+        def fn(offset, a_rows, b):
+            return ref.matmul(a_rows, b)
+        return fn
+    if name == "mandelbrot":
+        def fn(offset, cre, cim):
+            return ref.mandelbrot(cre, cim)
+        return fn
+    if name == "ray":
+        spheres = demo_spheres()
+        def fn(offset, dx, dy, dz):
+            return ref.raytrace(dx, dy, dz, spheres)
+        return fn
+    if name == "rap":
+        def fn(offset, values, lengths):
+            return ref.rap(values, lengths)
+        return fn
+    raise KeyError(name)

@@ -1,0 +1,46 @@
+"""Resource Allocation Problem Pallas kernel (paper benchmark: Rap).
+
+Row-parallel diminishing-returns utility over variable-length candidate
+lists. Row lengths differ wildly (the benchmark's irregularity); the kernel
+masks with a broadcasted iota against the per-row length column. On TPU the
+sublane reduction lands in a (bm, 1) output block — the wrapper squeezes it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rap_kernel(val_ref, len_ref, o_ref):
+    vals = val_ref[...]                      # (bm, L)
+    lens = len_ref[...]                      # (bm, 1) int32
+    L = vals.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    mask = col < lens                        # broadcast (bm, 1) -> (bm, L)
+    util = jnp.log1p(jnp.maximum(vals, 0.0))
+    o_ref[...] = jnp.where(mask, util, 0.0).sum(axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def rap(values: jax.Array, lengths: jax.Array, *, bm: int = 256,
+        interpret: bool = True) -> jax.Array:
+    """values: (N, L) f32, lengths: (N,) int32 -> (N,) f32 utilities."""
+    N, L = values.shape
+    bm = min(bm, N)
+    pn = (-N) % bm
+    vals = jnp.pad(values, ((0, pn), (0, 0)))
+    lens = jnp.pad(lengths, (0, pn)).reshape(-1, 1)
+    Np = N + pn
+    out = pl.pallas_call(
+        _rap_kernel,
+        out_shape=jax.ShapeDtypeStruct((Np, 1), values.dtype),
+        grid=(Np // bm,),
+        in_specs=[pl.BlockSpec((bm, L), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        interpret=interpret,
+    )(vals, lens)
+    return out[:N, 0]

@@ -1,0 +1,239 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each Pallas kernel in `kernels/` is validated against the function of the
+same name here (shape/dtype sweeps in tests/test_kernels.py). These are also
+the implementations used on backends without Pallas support and inside
+differentiable training paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Paper benchmarks (Table 1)
+# ---------------------------------------------------------------------------
+
+# 5-tap binomial Gaussian filter (separable), the classic blur stencil.
+GAUSS_TAPS = np.array([1.0, 4.0, 6.0, 4.0, 1.0]) / 16.0
+
+
+def gaussian_blur(img: jax.Array) -> jax.Array:
+    """Separable 5x5 Gaussian blur with zero padding. img: (H, W) f32."""
+    taps = jnp.asarray(GAUSS_TAPS, dtype=img.dtype)
+    padded = jnp.pad(img, ((2, 2), (0, 0)))
+    vert = sum(taps[d] * padded[d:d + img.shape[0], :] for d in range(5))
+    padded = jnp.pad(vert, ((0, 0), (2, 2)))
+    return sum(taps[d] * padded[:, d:d + img.shape[1]] for d in range(5))
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32
+                      ).astype(a.dtype)
+
+
+def taylor_sin(x: jax.Array, terms: int = 12) -> jax.Array:
+    """sin(x) via its Taylor series (the paper's transcendental kernel)."""
+    acc = jnp.zeros_like(x)
+    term = x
+    for k in range(terms):
+        acc = acc + term
+        n = 2 * k + 2
+        term = -term * x * x / (n * (n + 1))
+    return acc
+
+
+def mandelbrot(cre: jax.Array, cim: jax.Array, max_iter: int = 64
+               ) -> jax.Array:
+    """Escape iteration count (float32) per point; the irregular classic."""
+    def body(_, st):
+        zr, zi, it, alive = st
+        zr2, zi2 = zr * zr, zi * zi
+        new_alive = alive & (zr2 + zi2 <= 4.0)
+        zr, zi = jnp.where(new_alive, zr2 - zi2 + cre, zr), \
+            jnp.where(new_alive, 2.0 * zr * zi + cim, zi)
+        it = it + new_alive.astype(jnp.float32)
+        return zr, zi, it, new_alive
+
+    zr = jnp.zeros_like(cre)
+    zi = jnp.zeros_like(cim)
+    it = jnp.zeros_like(cre)
+    alive = jnp.ones(cre.shape, dtype=bool)
+    zr, zi, it, alive = jax.lax.fori_loop(0, max_iter, body,
+                                          (zr, zi, it, alive))
+    return it
+
+
+def raytrace(dirx: jax.Array, diry: jax.Array, dirz: jax.Array,
+             spheres: jax.Array) -> jax.Array:
+    """Nearest-hit Lambert shading of unit rays from the origin.
+
+    spheres: (S, 5) rows [cx, cy, cz, radius, albedo]. Output: intensity.
+    """
+    light = jnp.asarray([0.577, 0.577, 0.577], dtype=dirx.dtype)
+    best_t = jnp.full(dirx.shape, jnp.inf, dtype=dirx.dtype)
+    shade = jnp.zeros(dirx.shape, dtype=dirx.dtype)
+    for s in range(spheres.shape[0]):
+        cx, cy, cz, r, alb = [spheres[s, j] for j in range(5)]
+        # |o + t d - c|^2 = r^2 with o = 0: t^2 - 2 t (d.c) + |c|^2 - r^2
+        b = dirx * cx + diry * cy + dirz * cz
+        c = cx * cx + cy * cy + cz * cz - r * r
+        disc = b * b - c
+        hit = disc > 0.0
+        t = b - jnp.sqrt(jnp.maximum(disc, 0.0))
+        hit = hit & (t > 1e-3) & (t < best_t)
+        # normal at hit point
+        nx, ny, nz = dirx * t - cx, diry * t - cy, dirz * t - cz
+        inv = 1.0 / jnp.maximum(r, 1e-6)
+        lam = jnp.maximum(0.0, (nx * light[0] + ny * light[1] +
+                                nz * light[2]) * inv)
+        best_t = jnp.where(hit, t, best_t)
+        shade = jnp.where(hit, alb * lam, shade)
+    return shade
+
+
+def rap(values: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Resource Allocation Problem row kernel (irregular).
+
+    For each row i, accumulate a diminishing-returns utility over its first
+    ``lengths[i]`` candidate resources: sum_j log1p(relu(v_ij)) — rows have
+    wildly different lengths, which is the irregularity the paper's dynamic
+    schedulers exploit. values: (N, L), lengths: (N,) int32. Output: (N,).
+    """
+    L = values.shape[1]
+    mask = jnp.arange(L)[None, :] < lengths[:, None]
+    util = jnp.log1p(jnp.maximum(values, 0.0))
+    return jnp.where(mask, util, 0.0).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Production kernels
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None) -> jax.Array:
+    """Multi-head attention oracle with GQA + sliding window.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D) with Hq % Hkv == 0.
+    `window` limits attention to the last `window` keys (SWA).
+    Computation in f32, output in q.dtype.
+    """
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, Hkv, G, Tq, D)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    Tk = k.shape[2]
+    q_idx = jnp.arange(Tq)[:, None] + (Tk - Tq)   # align ends (decode case)
+    k_idx = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), dtype=bool)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= q_idx - k_idx < window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(B, Hq, Tq, D).astype(q.dtype)
+
+
+def linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     log_decay: jax.Array) -> jax.Array:
+    """Gated linear attention / SSD oracle (exact sequential recurrence).
+
+    q, k: (BH, T, Dk); v: (BH, T, Dv); log_decay: (BH, T) with entries <= 0.
+    Recurrence per head:  S_t = exp(log_decay_t) * S_{t-1} + k_t^T v_t
+                          o_t = q_t S_t
+    This is Mamba-2's scalar-decay SSD and the mLSTM memory update (without
+    the exp-gate stabilizer, which the model layer adds on top).
+    """
+    def step(S, inp):
+        qt, kt, vt, ld = inp
+        S = jnp.exp(ld)[..., None, None] * S + \
+            kt[..., :, None] * vt[..., None, :]
+        ot = jnp.einsum("...k,...kv->...v", qt, S)
+        return S, ot
+
+    from ..xscan import xscan
+
+    BH, T, Dk = q.shape
+    Dv = v.shape[-1]
+    S0 = jnp.zeros((BH, Dk, Dv), dtype=jnp.float32)
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(log_decay, 1, 0).astype(jnp.float32))
+    _, out = xscan(step, S0, xs, name="linattn_steps")
+    return jnp.moveaxis(out, 0, 1).astype(q.dtype)
+
+
+def chunked_linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             log_decay: jax.Array, *, chunk: int = 128,
+                             remat_chunks: bool = True) -> jax.Array:
+    """Chunk-parallel form of `linear_attention` in pure (differentiable)
+    jnp — the XLA production path for training SSD/mLSTM mixers (the Pallas
+    kernel serves inference; this is its grad-friendly twin, same math).
+
+    `remat_chunks` recomputes the per-chunk work in the backward pass so
+    only the carried (Dk, Dv) states are stashed — without it the mLSTM's
+    1024x1024 matrix memories stash O(T/chunk · B·H · Dk·Dv) f32
+    (~2.1 TB/device on xlstm-1.3b train_4k; §Perf iteration 2).
+    """
+    from ..xscan import xscan
+
+    BH, T, Dk = q.shape
+    Dv = v.shape[-1]
+    if T % chunk:
+        pt = (-T) % chunk
+        q = jnp.pad(q, ((0, 0), (0, pt), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pt), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pt), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pt)))
+    Tp = q.shape[1]
+    nc = Tp // chunk
+
+    def resh(a):
+        return jnp.moveaxis(
+            a.reshape(BH, nc, chunk, a.shape[-1]).astype(jnp.float32),
+            1, 0)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    lds = jnp.moveaxis(log_decay.reshape(BH, nc, chunk), 1,
+                       0).astype(jnp.float32)
+    row = jnp.arange(chunk)[:, None]
+    col = jnp.arange(chunk)[None, :]
+
+    def step(S, inp):
+        qc, kc, vc, ld = inp                       # (BH,C,D*) / (BH,C)
+        cum = jnp.cumsum(ld, axis=-1)              # (BH,C)
+        total = cum[:, -1]
+        gamma = jnp.exp(cum[:, :, None] - cum[:, None, :])
+        s = jnp.einsum("bid,bjd->bij", qc, kc)
+        a = jnp.where(row >= col, s * gamma, 0.0)
+        intra = jnp.einsum("bij,bjv->biv", a, vc)
+        q_dec = qc * jnp.exp(cum)[..., None]
+        inter = jnp.einsum("bik,bkv->biv", q_dec, S)
+        k_dec = kc * jnp.exp(total[:, None] - cum)[..., None]
+        S = jnp.exp(total)[:, None, None] * S + \
+            jnp.einsum("bjk,bjv->bkv", k_dec, vc)
+        return S, intra + inter
+
+    S0 = jnp.zeros((BH, Dk, Dv), jnp.float32)
+    # GSPMD treats an unconstrained while-carry as replicated, which
+    # replicates the whole loop body (and its transpose) and all-gathers
+    # the batch-sharded q/k/v EVERY chunk step (measured 1 GiB × 42 blocks
+    # per gather on xlstm-1.3b — §Perf iteration 3). Pin the state to the
+    # batch sharding of its heads dim.
+    from ..models.sharding import shard
+    S0 = shard(S0, ("pod", "data"), None, None)
+    _, out = xscan(step, S0, (qs, ks, vs, lds), name="linattn_chunks",
+                   remat=remat_chunks)
+    out = jnp.moveaxis(out, 0, 1).reshape(BH, Tp, Dv)
+    return out[:, :T].astype(q.dtype)

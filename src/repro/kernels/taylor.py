@@ -1,0 +1,56 @@
+"""Taylor-series sine Pallas kernel (paper benchmark: Taylor).
+
+Pure-VPU transcendental kernel: each (bm, 128) VMEM block runs the series
+in registers via fori_loop. The paper's OpenCL version keeps coefficients in
+local memory; on TPU the recurrence needs no table at all (each term is
+derived from the previous one), which removes the local-memory pressure and
+leaves the kernel entirely compute-bound — the regular-workload extreme of
+the benchmark set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _taylor_kernel(x_ref, o_ref, *, terms: int):
+    x = x_ref[...]
+    x2 = x * x
+
+    def body(k, carry):
+        acc, term = carry
+        acc = acc + term
+        n = (2.0 * k + 2.0) * (2.0 * k + 3.0)
+        term = -term * x2 / n
+        return acc, term
+
+    acc, _ = jax.lax.fori_loop(
+        0, terms, body, (jnp.zeros_like(x), x))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("terms", "bm", "interpret"))
+def taylor_sin(x: jax.Array, *, terms: int = 12, bm: int = 256,
+               interpret: bool = True) -> jax.Array:
+    """Elementwise sin(x) via `terms` Taylor terms. x: any shape, f32."""
+    shape = x.shape
+    n = x.size
+    lanes = 128
+    rows = -(-n // lanes)
+    bm = min(bm, rows)
+    pr = (-rows) % bm
+    flat = jnp.pad(x.reshape(-1), (0, rows * lanes - n))
+    grid_rows = rows + pr
+    flat = jnp.pad(flat.reshape(rows, lanes), ((0, pr), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_taylor_kernel, terms=terms),
+        out_shape=jax.ShapeDtypeStruct((grid_rows, lanes), x.dtype),
+        grid=(grid_rows // bm,),
+        in_specs=[pl.BlockSpec((bm, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, lanes), lambda i: (i, 0)),
+        interpret=interpret,
+    )(flat)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import warnings          # noqa: E402
+
+warnings.filterwarnings("ignore")
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, get_config           # noqa: E402
+from ..models import (build_model, cache_specs, count_params,  # noqa: E402
+                      param_specs)
+from ..models.sharding import batch_spec                      # noqa: E402
+from ..optim import AdamW, clip_by_global_norm                # noqa: E402
+from ..roofline import (Roofline, cell_bytes, cell_flops,     # noqa: E402
+                        collective_bytes)
+from .mesh import make_production_mesh                        # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op),
+  * the per-device footprint fits (memory_analysis),
+  * and it yields the §Roofline terms (cost_analysis + HLO collectives).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes(structs, specs, mesh) -> float:
+    """Per-device bytes of a ShapeDtypeStruct tree under `specs`."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0.0
+    for leaf, spec in zip(jax.tree_util.tree_leaves(structs),
+                          jax.tree_util.tree_leaves(
+                              specs, is_leaf=lambda x: isinstance(x, P))):
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                shards *= sizes.get(ax, 1)
+        total += leaf.size * leaf.dtype.itemsize / shards
+    return total
+
+
+def make_batch_specs(cfg, shape, mesh):
+    """ShapeDtypeStructs + shardings for one input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    sh = lambda arr_shape, dtype: jax.ShapeDtypeStruct(arr_shape, dtype)
+    structs: dict = {}
+    if shape.kind in ("train", "prefill"):
+        structs["tokens"] = sh((B, S), jnp.int32)
+        if shape.kind == "train":
+            structs["labels"] = sh((B, S), jnp.int32)
+        if cfg.family == "encdec":
+            structs["frames"] = sh((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+        if cfg.family == "vlm":
+            structs["vision_embeds"] = sh((B, cfg.vision_tokens,
+                                           cfg.d_model), jnp.float32)
+    else:  # decode: one new token against a seq_len-deep cache
+        structs["tokens"] = sh((B, 1), jnp.int32)
+    shards = {k: NamedSharding(mesh, batch_spec(v.shape))
+              for k, v in structs.items()}
+    return structs, shards
+
+
+# microbatch count per heavy train cell (activation stash / accum)
+GRAD_ACCUM: dict[tuple[str, str], int] = {
+    ("qwen1.5-110b", "train_4k"): 2,
+    ("qwen3-moe-235b-a22b", "train_4k"): 2,
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): 2,
+    ("minicpm-2b", "train_4k"): 2,
+}
+
+
+def model_flops_for(cfg, shape, n_params: int) -> float:
+    n_active = cfg.n_active_params() if cfg.family == "moe" else n_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/row
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full quadratic attention; see DESIGN.md §5"}
+
+    # full configs lower with chunked attention (O(T·c) memory), the
+    # chunked SSD/mLSTM mixer (the per-timestep oracle would scan T steps
+    # and stash the matrix memory at every one), and remat
+    cfg = dataclasses.replace(cfg, attn_impl="chunked",
+                              mixer_impl="chunked", remat=True)
+    # FSDP (ZeRO-3) for configs whose f32 params+Adam state exceed a
+    # v5e's HBM under TP-16-only sharding (>8 GB/device replicated)
+    from ..models.sharding import set_fsdp
+    set_fsdp(cfg.n_params() * 12 / 16 > 8e9)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    with jax.sharding.set_mesh(mesh):
+        params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        n_params = count_params(params_struct)
+        p_specs = param_specs(params_struct)
+        p_shard = _named(mesh, p_specs)
+        batch_structs, batch_shards = make_batch_specs(cfg, shape, mesh)
+
+        if shape.kind == "train":
+            optimizer = AdamW(lr=1e-4)
+            opt_struct = jax.eval_shape(optimizer.init, params_struct)
+            opt_shard = type(opt_struct)(
+                step=NamedSharding(mesh, P()),
+                m=p_shard, v=p_shard)
+            accum = GRAD_ACCUM.get((arch, shape_name), 1)
+
+            def train_step(params, opt_state, batch):
+                if accum > 1:
+                    # microbatched gradient accumulation: divides the
+                    # remat activation stash by `accum` so the monster
+                    # configs fit a 16 GB v5e
+                    from ..xscan import xscan
+
+                    def micro(carry, mb):
+                        g_acc, l_acc = carry
+                        (l, _), g = jax.value_and_grad(
+                            model.loss, has_aux=True)(params, mb)
+                        g_acc = jax.tree.map(jnp.add, g_acc, g)
+                        return (g_acc, l_acc + l), None
+
+                    mbs = jax.tree.map(
+                        lambda x: x.reshape(accum, x.shape[0] // accum,
+                                            *x.shape[1:]), batch)
+                    zero = jax.tree.map(jnp.zeros_like, params)
+                    (grads, loss), _ = xscan(
+                        micro, (zero, jnp.zeros((), jnp.float32)), mbs,
+                        name="grad_accum")
+                    grads = jax.tree.map(lambda g: g / accum, grads)
+                    loss = loss / accum
+                else:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, batch)
+                grads, gnorm = clip_by_global_norm(grads, 1.0)
+                params, opt_state = optimizer.update(grads, opt_state,
+                                                     params)
+                return params, opt_state, loss
+
+            fn = jax.jit(
+                train_step,
+                in_shardings=(p_shard, opt_shard, batch_shards),
+                out_shardings=(p_shard, opt_shard,
+                               NamedSharding(mesh, P())))
+            args = (params_struct, opt_struct, batch_structs)
+
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return model.prefill_logits(params, batch)
+
+            fn = jax.jit(prefill_step,
+                         in_shardings=(p_shard, batch_shards),
+                         out_shardings=NamedSharding(mesh, P(
+                             ("pod", "data") if multi_pod else ("data",))))
+            args = (params_struct, batch_structs)
+
+        else:  # decode
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch,
+                                         shape.seq_len))
+            c_specs = cache_specs(cache_struct)
+            c_shard = _named(mesh, c_specs)
+
+            def serve_step(params, cache, tokens):
+                return model.decode_step(params, tokens, cache)
+
+            fn = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard,
+                              batch_shards["tokens"]),
+                out_shardings=(NamedSharding(mesh, P()), c_shard))
+            args = (params_struct, cache_struct, batch_structs["tokens"])
+
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+
+        # per-device footprint of the sharded state
+        param_bytes_dev = sharded_bytes(params_struct, p_specs, mesh)
+        if shape.kind == "train":
+            state_bytes_dev = 3 * param_bytes_dev      # + m + v
+            cache_bytes_dev = 0.0
+        elif shape.kind == "decode":
+            cache_bytes_dev = sharded_bytes(cache_struct, c_specs, mesh)
+            state_bytes_dev = param_bytes_dev + cache_bytes_dev
+        else:
+            cache_bytes_dev = 0.0
+            state_bytes_dev = param_bytes_dev
+
+    # ---- artifacts -----------------------------------------------------
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:   # CPU backend may not implement it
+        mem["error"] = str(e)
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) \
+        else (cost_list or {})
+    hlo = compiled.as_text()
+
+    dp_shards = chips // 16                    # pod×data axes (model = 16)
+    flops_global = cell_flops(cfg, shape)["total_flops"]
+    bytes_dev = cell_bytes(cfg, shape,
+                           param_bytes_per_dev=param_bytes_dev,
+                           cache_bytes_per_dev=cache_bytes_dev,
+                           chips=chips, dp_shards=dp_shards)
+    coll = collective_bytes(hlo)
+    hbm_footprint = None
+    if "argument_size_in_bytes" in mem:
+        hbm_footprint = (mem["argument_size_in_bytes"] +
+                         mem.get("temp_size_in_bytes", 0) +
+                         mem.get("output_size_in_bytes", 0))
+    roof = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_dev=flops_global / chips,
+        bytes_per_dev=bytes_dev,
+        coll_bytes_per_dev=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops_for(cfg, shape, n_params),
+        xla_raw_flops=float(cost.get("flops", 0.0)),
+        xla_raw_bytes=float(cost.get("bytes accessed", 0.0)),
+        hbm_per_dev=hbm_footprint,
+    )
+    out = {"status": "ok", "n_params": n_params,
+           "compile_seconds": round(time.time() - t0, 1),
+           "state_bytes_per_dev": state_bytes_dev,
+           "memory_analysis": mem, **roof.to_dict()}
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] "
+              f"compile={out['compile_seconds']}s "
+              f"t_comp={roof.t_compute*1e3:.1f}ms "
+              f"t_mem={roof.t_memory*1e3:.1f}ms "
+              f"t_coll={roof.t_collective*1e3:.1f}ms "
+              f"bound={roof.bottleneck} "
+              f"frac={roof.roofline_frac:.3f} "
+              f"hbm/dev={(hbm_footprint or 0)/2**30:.2f}GiB")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mesh in ("single", "multi"):
+                    cells.append((arch, shape, mesh))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required without --all")
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shape, mesh in cells:
+        key = f"{arch}__{shape}__{mesh}".replace("/", "_")
+        path = os.path.join(args.out, key + ".json")
+        if os.path.exists(path):
+            print(f"[skip existing] {key}")
+            continue
+        result = run_cell(arch, shape, mesh == "multi")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Production training launcher.
+
+Two modes:
+  * default      — run the hetero-DP training loop on this host (reduced
+                   configs; groups simulated). This is the runnable path.
+  * --dry-run    — delegate to dryrun.py semantics for the full config on
+                   the production mesh (lower+compile only).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 100 --policy hguided --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--policy", default="hguided",
+                    choices=["static", "dynamic", "hguided"])
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--groups", default="podA:1.0,podB:0.6,podC:0.3",
+                    help="name:speed pairs for the device groups")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="full config on the production mesh, "
+                         "lower+compile only")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from .dryrun import run_cell
+        run_cell(args.arch, args.shape, args.multi_pod)
+        return
+
+    import tempfile
+
+    import jax
+
+    from ..checkpoint import Checkpointer
+    from ..configs import get_config
+    from ..data import DataPipeline
+    from ..ft import Supervisor
+    from ..hetero import HeteroTrainer, make_policy
+    from ..models import build_model, count_params
+    from ..optim import AdamW, make_schedule
+
+    groups = {}
+    for part in args.groups.split(","):
+        name, speed = part.split(":")
+        groups[name] = float(speed)
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[train] {args.arch} ({count_params(params):,} params, "
+          f"reduced) × {len(groups)} groups, policy={args.policy}")
+
+    pipe = DataPipeline(seed=1, global_batch=args.microbatches,
+                        seq_len=args.seq_len, vocab=cfg.vocab_size,
+                        num_shards=args.microbatches)
+    trainer = HeteroTrainer(
+        model, params,
+        optimizer=AdamW(lr=make_schedule(cfg.schedule, 3e-3, 10,
+                                         args.steps)),
+        policy=make_policy(args.policy, {g: 1.0 for g in groups},
+                           total_steps=args.steps),
+        pipeline=pipe, group_speeds=groups,
+        total_microbatches=args.microbatches)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="train_ckpt_")
+    ck = Checkpointer(ckpt_dir)
+    if args.resume and ck.latest_step() is not None:
+        step, tree = ck.restore(trainer.state_tree())
+        trainer.load_state_tree(tree)
+        print(f"[train] resumed from step {step}")
+    sup = Supervisor(trainer, ck, ckpt_every=args.ckpt_every)
+    report = sup.run(args.steps)
+    print(f"[train] done: {report.steps_run} steps, "
+          f"loss {report.losses[0]:.4f} → {report.losses[-1]:.4f}, "
+          f"ckpts in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: every assigned architecture behind `build_model(cfg)`."""
+from .model import Model, build_model, count_params
+from .sharding import batch_spec, cache_specs, param_specs, shard
+
+__all__ = ["Model", "batch_spec", "build_model", "cache_specs",
+           "count_params", "param_specs", "shard"]

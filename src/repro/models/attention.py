@@ -1,0 +1,181 @@
+"""Attention layer: GQA, qk-norm (qwen3), QKV bias (qwen1.5), sliding
+window (h2o-danube3 / zamba2-long), RoPE, KV cache for decode.
+
+Training/prefill can route through the Pallas flash kernel
+(`impl="flash"`) or the XLA einsum oracle (`impl="xla"`, differentiable —
+the training default). Decode always uses the einsum path against the
+cache (memory-bound; one q position).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import flash_attention, ref as kref
+from .layers import apply_rope, dense, init_dense, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, qk_norm: bool = False,
+                   qkv_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(kq, d_model, num_heads * head_dim, bias=qkv_bias),
+        "wk": init_dense(kk, d_model, num_kv_heads * head_dim,
+                         bias=qkv_bias),
+        "wv": init_dense(kv, d_model, num_kv_heads * head_dim,
+                         bias=qkv_bias),
+        "wo": init_dense(ko, num_heads * head_dim, d_model,
+                         scale=(num_heads * head_dim) ** -0.5),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(head_dim)
+        p["k_norm"] = init_rmsnorm(head_dim)
+    return p
+
+
+def _project_qkv(p: dict, x: Array, num_heads: int, num_kv_heads: int,
+                 head_dim: int, positions: Array, rope_freqs: Array,
+                 ) -> tuple[Array, Array, Array]:
+    B, T, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, T, num_heads, head_dim)
+    k = dense(p["wk"], x).reshape(B, T, num_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(B, T, num_kv_heads, head_dim)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    from .sharding import shard
+    q = jnp.swapaxes(q, 1, 2)   # (B, H, T, D)
+    k = jnp.swapaxes(k, 1, 2)
+    v = jnp.swapaxes(v, 1, 2)
+    if rope_freqs is not None:
+        q = apply_rope(q, positions[:, None, :], rope_freqs)
+        k = apply_rope(k, positions[:, None, :], rope_freqs)
+    # pin head sharding (TP) so remat/while boundaries can't drop it
+    q = shard(q, ("pod", "data"), "model", None, None)
+    k = shard(k, ("pod", "data"), "model", None, None)
+    v = shard(v, ("pod", "data"), "model", None, None)
+    return q, k, v
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      chunk: int = 512) -> Array:
+    """Blockwise (lax.scan over query chunks) attention, O(T·chunk) memory.
+
+    The XLA analogue of the flash kernel: differentiable, no O(T²) logits
+    materialization — this is what makes 32k-prefill lowering fit. Shapes
+    as ref.attention: q (B,Hq,T,D); k,v (B,Hkv,T,D).
+    """
+    from .sharding import shard
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    scale = D ** -0.5
+    if Hkv != Hq:
+        # GQA as an explicit head broadcast: q head h reads kv head h//G,
+        # so repeating kv kv-major keeps a plain (B, Hq, ·, ·) layout that
+        # the TP head sharding maps onto directly. Splitting Hq into
+        # (Hkv, G) instead breaks the mapping and makes GSPMD all-gather
+        # the q chunks every loop iteration (measured: 6×32 MiB ×
+        # layers×chunks on qwen3 — see EXPERIMENTS.md §Perf iteration 1).
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    k = shard(k, ("pod", "data"), "model", None, None)
+    v = shard(v, ("pod", "data"), "model", None, None)
+    if T % chunk:
+        chunk = T  # fallback for odd sizes (smoke tests)
+    qc = jnp.moveaxis(q.reshape(B, Hq, T // chunk, chunk, D), 2, 0)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    k_idx = jnp.arange(T)
+
+    def one_chunk(ci, qblk):
+        qf = qblk.astype(jnp.float32) * scale         # (B, Hq, c, D)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+        q_idx = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, T), dtype=bool)
+        if causal:
+            mask &= q_idx[:, None] >= k_idx[None, :]
+        if window is not None:
+            mask &= q_idx[:, None] - k_idx[None, :] < window
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+
+    from ..xscan import xmap_seq
+    out = xmap_seq(lambda args: one_chunk(*args),
+                   (jnp.arange(T // chunk), qc), name="attn_chunks")
+    out = jnp.moveaxis(out, 0, 2)                     # (B, Hq, nc, c, D)
+    return out.reshape(B, Hq, T, D).astype(q.dtype)
+
+
+def attention_train(p: dict, x: Array, *, num_heads: int, num_kv_heads: int,
+                    head_dim: int, rope_freqs: Optional[Array],
+                    window: Optional[int] = None, causal: bool = True,
+                    impl: str = "xla") -> Array:
+    """Full-sequence attention (training / prefill). x: (B, T, d)."""
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
+                           positions, rope_freqs)
+    if impl == "flash":
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=jax.default_backend() != "tpu")
+    elif impl == "chunked":
+        out = chunked_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = kref.attention(q, k, v, causal=causal, window=window)
+    out = jnp.swapaxes(out, 1, 2).reshape(B, T, num_heads * head_dim)
+    return dense(p["wo"], out)
+
+
+def init_kv_cache(batch: int, num_kv_heads: int, max_len: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> dict:
+    """Ring-buffer cache. For SWA models max_len can be the window size."""
+    return {
+        "k": jnp.zeros((batch, num_kv_heads, max_len, head_dim), dtype),
+        "v": jnp.zeros((batch, num_kv_heads, max_len, head_dim), dtype),
+        # filled length (== next write slot until the ring wraps)
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def attention_decode(p: dict, x: Array, cache: dict, *, num_heads: int,
+                     num_kv_heads: int, head_dim: int,
+                     rope_freqs: Optional[Array],
+                     window: Optional[int] = None) -> tuple[Array, dict]:
+    """Single-token decode with cache update. x: (B, 1, d)."""
+    B = x.shape[0]
+    max_len = cache["k"].shape[2]
+    pos = cache["len"]                       # scalar: absolute position
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim,
+                           positions, rope_freqs)
+    slot = jnp.mod(pos, max_len)             # ring write (SWA wraps)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, slot, 0))
+
+    # valid positions: ages 0..min(pos, max_len)-1 relative to the new token
+    idx = jnp.arange(max_len)
+    age = jnp.mod(slot - idx, max_len)       # age of each slot
+    valid = age <= jnp.minimum(pos, max_len - 1)
+    if window is not None:
+        valid &= age < window
+
+    G = num_heads // num_kv_heads
+    qf = q.astype(jnp.float32).reshape(B, num_kv_heads, G, head_dim) \
+        * head_dim ** -0.5
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qf, ck.astype(jnp.float32))
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, num_heads * head_dim).astype(x.dtype)
+    new_cache = {"k": ck, "v": cv, "len": pos + 1}
+    return dense(p["wo"], out), new_cache

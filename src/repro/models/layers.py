@@ -1,0 +1,173 @@
+"""Base layers: norms, MLPs, embeddings, RoPE, losses.
+
+Pure-JAX (no flax): params are pytrees of jnp arrays created by `init_*`
+functions; `apply`-style functions are pure. Sharding is annotated at the
+model level via logical PartitionSpecs (see models/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: Optional[float] = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"kernel": _normal(key, (d_in, d_out), scale)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: dict, x: Array) -> Array:
+    y = jnp.einsum("...d,df->...f", x, p["kernel"].astype(x.dtype))
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+def init_mlp(key, d: int, d_ff: int) -> dict:
+    """Gated SiLU MLP (llama-style)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi_gate": init_dense(k1, d, d_ff),
+            "wi_up": init_dense(k2, d, d_ff),
+            "wo": init_dense(k3, d_ff, d, scale=d_ff ** -0.5)}
+
+
+def mlp(p: dict, x: Array) -> Array:
+    from .sharding import shard
+    h = jax.nn.silu(dense(p["wi_gate"], x)) * dense(p["wi_up"], x)
+    # pin the TP sharding of the hidden activation: GSPMD propagation can
+    # lose it across remat/while boundaries, which materializes replicated
+    # (B,T,ff) tensors and all-reduces them in the backward pass
+    h = shard(h, ("pod", "data"), None, "model")
+    return dense(p["wo"], h)
+
+
+def init_gelu_mlp(key, d: int, d_ff: int) -> dict:
+    """Plain GELU MLP (whisper/ViT-style)."""
+    k1, k2 = jax.random.split(key)
+    return {"wi": init_dense(k1, d, d_ff, bias=True),
+            "wo": init_dense(k2, d_ff, d, bias=True, scale=d_ff ** -0.5)}
+
+
+def gelu_mlp(p: dict, x: Array) -> Array:
+    return dense(p["wo"], jax.nn.gelu(dense(p["wi"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings & positions
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int) -> dict:
+    # d^-0.5 keeps tied-unembedding logits O(1) at init
+    return {"table": _normal(key, (vocab, d), d ** -0.5)}
+
+
+def embed(p: dict, tokens: Array, dtype=jnp.bfloat16) -> Array:
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed(p: dict, x: Array, pad_to: Optional[int] = None) -> Array:
+    """Logits from the (possibly tied) embedding table. f32 output.
+
+    `pad_to` zero-pads the vocab dim so it divides the "model" mesh axis —
+    unshardable vocabs (minicpm's 122753) would otherwise force replicated
+    (B,T,V) f32 logits (~32 GB/device at train_4k). cross_entropy masks
+    the padding columns to -inf.
+    """
+    table = p["table"].astype(jnp.float32)
+    if pad_to is not None and pad_to > table.shape[0]:
+        table = jnp.pad(table, ((0, pad_to - table.shape[0]), (0, 0)))
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32) -> Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)],
+                           axis=-1).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                      # (head_dim/2,)
+
+
+def apply_rope(x: Array, positions: Array, freqs: Array) -> Array:
+    """x: (..., T, D); positions: broadcastable to (..., T)."""
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: Array, labels: Array,
+                  mask: Optional[Array] = None,
+                  valid_vocab: Optional[int] = None) -> Array:
+    """Mean token NLL in f32. logits: (..., Vp) f32; labels int32.
+
+    Shard-friendly: the gold logit is extracted with a select+reduce over
+    the (possibly "model"-sharded, possibly padded) vocab dim instead of
+    take_along_axis, so GSPMD lowers it to a local reduce + psum rather
+    than a cross-shard gather. Columns ≥ valid_vocab (padding) are -inf'd.
+    """
+    Vp = logits.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1)
+    if valid_vocab is not None and valid_vocab < Vp:
+        logits = jnp.where(col < valid_vocab, logits, -jnp.inf)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.where(col == labels[..., None], logits, 0.0).sum(axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,660 @@
+"""Model builder: every assigned architecture behind one interface.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    loss, aux = model.loss(params, batch)             # training forward
+    logits = model.prefill_logits(params, batch)      # last-pos logits
+    cache = model.init_cache(batch, max_len)
+    logits, cache = model.decode_step(params, tokens, cache)
+
+Layer stacks are `lax.scan` over stacked block params (MaxText-style) to
+keep HLO size O(1) in depth; `cfg.remat` wraps blocks in jax.checkpoint.
+Families: dense (minicpm/qwen3/qwen1.5/h2o), moe (qwen3-moe/phi3.5-moe),
+encdec (whisper), ssm (xlstm), hybrid (zamba2), vlm (internvl2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..xscan import xmap_seq, xscan
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import (cross_entropy, dense, embed, gelu_mlp, init_dense,
+                     init_embedding, init_gelu_mlp, init_layernorm, init_mlp,
+                     init_rmsnorm, layernorm, mlp, rmsnorm,
+                     rope_frequencies, sinusoidal_positions, unembed)
+from .sharding import shard
+
+Array = jax.Array
+PyTree = Any
+
+
+def _stack_init(init_fn: Callable, key, n: int) -> PyTree:
+    """vmap an init over layer keys → stacked (n, ...) params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _maybe_remat(fn: Callable, enable: bool) -> Callable:
+    return jax.checkpoint(fn) if enable else fn
+
+
+# ===========================================================================
+# Decoder block (dense / moe / vlm families share it)
+# ===========================================================================
+
+def _init_decoder_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, hd,
+                                    qk_norm=cfg.qk_norm,
+                                    qkv_bias=cfg.qkv_bias),
+        "ln2": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(k2, cfg.d_model, cfg.moe_d_ff,
+                                    cfg.num_experts)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _decoder_block_train(p: dict, x: Array, cfg: ModelConfig,
+                         rope: Optional[Array]) -> tuple[Array, Array]:
+    h = attn.attention_train(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_freqs=rope,
+        window=cfg.window, impl=cfg.attn_impl)
+    x = x + h
+    x = shard(x, ("pod", "data"), "model", None)
+    hn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        h2, aux = moe_mod.moe_layer(p["moe"], hn,
+                                    num_experts=cfg.num_experts,
+                                    top_k=cfg.top_k,
+                                    capacity_factor=cfg.capacity_factor)
+    else:
+        h2, aux = mlp(p["mlp"], hn), jnp.zeros((), jnp.float32)
+    x = x + h2
+    return shard(x, ("pod", "data"), "model", None), aux
+
+
+def _decoder_block_decode(p: dict, x: Array, cache: dict, cfg: ModelConfig,
+                          rope: Optional[Array]) -> tuple[Array, dict]:
+    h, cache = attn.attention_decode(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cache,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_freqs=rope, window=cfg.window)
+    x = x + h
+    hn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        h2, _ = moe_mod.moe_layer(p["moe"], hn,
+                                  num_experts=cfg.num_experts,
+                                  top_k=cfg.top_k, capacity_factor=2.0)
+    else:
+        h2 = mlp(p["mlp"], hn)
+    return x + h2, cache
+
+
+# ===========================================================================
+# Model object
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Array], PyTree]
+    forward: Callable[..., tuple[Array, Array]]   # (params, batch) -> logits, aux
+    init_cache: Callable[..., PyTree]
+    decode_step: Callable[..., tuple[Array, PyTree]]
+    prefill: Optional[Callable[..., PyTree]] = None
+
+    # ---- derived entry points -------------------------------------------
+    def loss(self, params: PyTree, batch: dict) -> tuple[Array, dict]:
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"], batch.get("mask"),
+                           valid_vocab=self.cfg.vocab_size)
+        total = ce + 0.01 * aux
+        return total, {"loss": total, "ce": ce, "aux": aux}
+
+    def prefill_logits(self, params: PyTree, batch: dict) -> Array:
+        """Serving prefill: logits at the final position only."""
+        logits, _ = self.forward(params, batch)
+        return logits[:, -1, :]
+
+
+def count_params(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def _pad_vocab(cfg: ModelConfig) -> Optional[int]:
+    """Pad the unembedding vocab to 16·128 alignment so logits shard over
+    the "model" axis (unshardable vocabs force replicated (B,T,V) f32
+    logits — 32 GB/device for minicpm train_4k)."""
+    V = cfg.vocab_size
+    if V % 2048 == 0:
+        return None
+    return -(-V // 2048) * 2048
+
+
+def _mask_pad_cols(logits: Array, valid: int) -> Array:
+    if logits.shape[-1] == valid:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1)
+    return jnp.where(col < valid, logits, -jnp.inf)
+
+
+# ===========================================================================
+# dense / moe / vlm decoder-only LM
+# ===========================================================================
+
+def _build_decoder_lm(cfg: ModelConfig) -> Model:
+    rope = (rope_frequencies(cfg.resolved_head_dim, cfg.rope_theta)
+            if cfg.rope_theta else None)
+
+    def init(key) -> PyTree:
+        ke, kl, kh = jax.random.split(key, 3)
+        p = {
+            "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model),
+            "layers": _stack_init(
+                lambda k: _init_decoder_block(k, cfg), kl, cfg.num_layers),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init_dense(kh, cfg.d_model, cfg.vocab_size)
+        if cfg.family == "vlm":
+            # stub projector for the (frozen, external) InternViT features
+            p["vision_proj"] = init_dense(kh, cfg.d_model, cfg.d_model)
+        return p
+
+    def embed_inputs(params, batch) -> Array:
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = dense(params["vision_proj"],
+                       batch["vision_embeds"].astype(x.dtype))
+            nv = ve.shape[1]
+            x = jnp.concatenate([ve, x[:, nv:, :]], axis=1)
+        return shard(x, ("pod", "data"), "model", None)
+
+    def forward(params, batch):
+        x = embed_inputs(params, batch)
+
+        def body(carry, layer_p):
+            x, aux = carry
+            x, a = _decoder_block_train(layer_p, x, cfg, rope)
+            return (x, aux + a), None
+
+        (x, aux), _ = xscan(body, (x, jnp.zeros((), jnp.float32)),
+                            params["layers"], name="layers",
+                            remat=cfg.remat)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, pad_to=_pad_vocab(cfg))
+        else:
+            logits = dense(params["lm_head"],
+                           x.astype(jnp.float32))
+        logits = shard(logits, ("pod", "data"), None, "model")
+        return logits, aux / cfg.num_layers
+
+    def init_cache(batch: int, max_len: int) -> PyTree:
+        eff = min(max_len, cfg.window) if cfg.window else max_len
+        one = lambda _: attn.init_kv_cache(batch, cfg.num_kv_heads, eff,
+                                           cfg.resolved_head_dim)
+        caches = jax.vmap(one)(jnp.arange(cfg.num_layers))
+        return caches
+
+    def decode_step(params, tokens: Array, cache: PyTree
+                    ) -> tuple[Array, PyTree]:
+        """tokens: (B, 1) int32 → (B, vocab) logits + new cache."""
+        x = embed(params["embed"], tokens)
+
+        def body(x, scanned):
+            layer_p, layer_cache = scanned
+            x, new_cache = _decoder_block_decode(layer_p, x, layer_cache,
+                                                 cfg, rope)
+            return x, new_cache
+
+        x, new_caches = xscan(body, x, (params["layers"], cache),
+                              name="layers")
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, pad_to=_pad_vocab(cfg))
+        else:
+            logits = dense(params["lm_head"], x.astype(jnp.float32))
+        logits = _mask_pad_cols(logits, cfg.vocab_size)
+        return logits[:, 0, :], new_caches
+
+    return Model(cfg=cfg, init=init, forward=forward,
+                 init_cache=init_cache, decode_step=decode_step)
+
+
+# ===========================================================================
+# enc-dec (whisper)
+# ===========================================================================
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": init_layernorm(cfg.d_model),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, hd),
+        "ln2": init_layernorm(cfg.d_model),
+        "mlp": init_gelu_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": init_layernorm(cfg.d_model),
+        "self_attn": attn.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                         cfg.num_kv_heads, hd),
+        "ln_x": init_layernorm(cfg.d_model),
+        "cross_attn": attn.init_attention(k2, cfg.d_model, cfg.num_heads,
+                                          cfg.num_kv_heads, hd),
+        "ln2": init_layernorm(cfg.d_model),
+        "mlp": init_gelu_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _cross_attend(p, x, enc_k, enc_v, cfg):
+    """Cross-attention against precomputed encoder K/V."""
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, T, cfg.num_heads, hd)
+    q = jnp.swapaxes(q, 1, 2)
+    from ..kernels import ref as kref
+    out = kref.attention(q, enc_k, enc_v, causal=False)
+    out = jnp.swapaxes(out, 1, 2).reshape(B, T, cfg.num_heads * hd)
+    return dense(p["wo"], out)
+
+
+def _encoder_kv(p, enc_out, cfg):
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = dense(p["wk"], enc_out).reshape(B, S, cfg.num_kv_heads, hd)
+    v = dense(p["wv"], enc_out).reshape(B, S, cfg.num_kv_heads, hd)
+    return jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def init(key) -> PyTree:
+        ke, kenc, kdec, kh = jax.random.split(key, 4)
+        return {
+            "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model),
+            "encoder_layers": _stack_init(
+                lambda k: _init_enc_block(k, cfg), kenc, cfg.encoder_layers),
+            "enc_norm": init_layernorm(cfg.d_model),
+            "layers": _stack_init(
+                lambda k: _init_dec_block(k, cfg), kdec, cfg.num_layers),
+            "final_norm": init_layernorm(cfg.d_model),
+        }
+
+    def encode(params, frames: Array) -> Array:
+        """frames: (B, S_enc, d) stub embeddings from the conv frontend."""
+        S = frames.shape[1]
+        x = frames + sinusoidal_positions(S, cfg.d_model,
+                                          frames.dtype)[None]
+        x = shard(x, ("pod", "data"), "model", None)
+
+        def body(x, p):
+            h = attn.attention_train(
+                p["attn"], layernorm(p["ln1"], x),
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_freqs=None,
+                causal=False, impl=cfg.attn_impl)
+            x = x + h
+            x = x + gelu_mlp(p["mlp"], layernorm(p["ln2"], x))
+            return shard(x, ("pod", "data"), "model", None), None
+
+        x, _ = xscan(body, x, params["encoder_layers"],
+                     name="enc_layers", remat=cfg.remat)
+        return layernorm(params["enc_norm"], x)
+
+    def forward(params, batch):
+        enc = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = embed(params["embed"], tokens)
+        x = x + sinusoidal_positions(T, cfg.d_model, x.dtype)[None]
+
+        def body(x, p):
+            h = attn.attention_train(
+                p["self_attn"], layernorm(p["ln1"], x),
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_freqs=None,
+                impl=cfg.attn_impl)
+            x = x + h
+            ek, ev = _encoder_kv(p["cross_attn"], enc, cfg)
+            x = x + _cross_attend(p["cross_attn"],
+                                  layernorm(p["ln_x"], x), ek, ev, cfg)
+            x = x + gelu_mlp(p["mlp"], layernorm(p["ln2"], x))
+            return shard(x, ("pod", "data"), "model", None), None
+
+        x, _ = xscan(body, x, params["layers"], name="dec_layers",
+                     remat=cfg.remat)
+        x = layernorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x, pad_to=_pad_vocab(cfg))
+        logits = shard(logits, ("pod", "data"), None, "model")
+        return logits, jnp.zeros((), jnp.float32)
+
+    def init_cache(batch: int, max_len: int) -> PyTree:
+        hd = cfg.resolved_head_dim
+        self_c = jax.vmap(lambda _: attn.init_kv_cache(
+            batch, cfg.num_kv_heads, max_len, hd))(
+                jnp.arange(cfg.num_layers))
+        cross = {
+            "k": jnp.zeros((cfg.num_layers, batch, cfg.num_kv_heads,
+                            cfg.encoder_seq, hd), jnp.bfloat16),
+            "v": jnp.zeros((cfg.num_layers, batch, cfg.num_kv_heads,
+                            cfg.encoder_seq, hd), jnp.bfloat16),
+        }
+        return {"self": self_c, "cross": cross}
+
+    def prefill(params, batch, cache) -> PyTree:
+        """Run the encoder once and stash cross K/V in the cache."""
+        enc = encode(params, batch["frames"])
+
+        def per_layer(p):
+            k, v = _encoder_kv(p["cross_attn"], enc, cfg)
+            return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+        ks, vs = xmap_seq(per_layer, params["layers"], name="xkv_layers")
+        return {"self": cache["self"], "cross": {"k": ks, "v": vs}}
+
+    def decode_step(params, tokens: Array, cache: PyTree
+                    ) -> tuple[Array, PyTree]:
+        B = tokens.shape[0]
+        pos = cache["self"]["len"][0]
+        x = embed(params["embed"], tokens)
+        x = x + sinusoidal_positions(8192, cfg.d_model,
+                                     x.dtype)[pos][None, None]
+
+        def body(x, scanned):
+            p, self_c, ck, cv = scanned
+            h, self_c = attn.attention_decode(
+                p["self_attn"], layernorm(p["ln1"], x), self_c,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_freqs=None)
+            x = x + h
+            x = x + _cross_attend(p["cross_attn"],
+                                  layernorm(p["ln_x"], x), ck, cv, cfg)
+            x = x + gelu_mlp(p["mlp"], layernorm(p["ln2"], x))
+            return x, self_c
+
+        x, new_self = xscan(
+            body, x, (params["layers"], cache["self"],
+                      cache["cross"]["k"], cache["cross"]["v"]),
+            name="dec_layers")
+        x = layernorm(params["final_norm"], x)
+        logits = _mask_pad_cols(
+            unembed(params["embed"], x, pad_to=_pad_vocab(cfg)),
+            cfg.vocab_size)
+        return logits[:, 0, :], {"self": new_self, "cross": cache["cross"]}
+
+    return Model(cfg=cfg, init=init, forward=forward,
+                 init_cache=init_cache, decode_step=decode_step,
+                 prefill=prefill)
+
+
+# ===========================================================================
+# xLSTM (ssm family)
+# ===========================================================================
+
+def _build_xlstm(cfg: ModelConfig) -> Model:
+    per_super = cfg.slstm_every                     # 8 ⇒ 7 mLSTM + 1 sLSTM
+    n_super = cfg.num_layers // per_super
+    n_m = per_super - 1
+
+    def init(key) -> PyTree:
+        ke, km, ks = jax.random.split(key, 3)
+
+        def init_super(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "mlstm": _stack_init(
+                    lambda kk: {"ln": init_rmsnorm(cfg.d_model),
+                                "mlstm": xlstm_mod.init_mlstm(
+                                    kk, cfg.d_model, cfg.num_heads)},
+                    k1, n_m),
+                "slstm": {"ln": init_rmsnorm(cfg.d_model),
+                          "slstm": xlstm_mod.init_slstm(
+                              k2, cfg.d_model, cfg.num_heads)},
+            }
+
+        return {
+            "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model),
+            "superblocks": _stack_init(init_super, km, n_super),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+
+    def forward(params, batch):
+        x = embed(params["embed"], batch["tokens"])
+        x = shard(x, ("pod", "data"), "model", None)
+
+        def m_block(x, p):
+            return x + xlstm_mod.mlstm_train(
+                p["mlstm"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                num_heads=cfg.num_heads, impl=cfg.mixer_impl), None
+
+        def super_body(x, p):
+            x, _ = xscan(m_block, x, p["mlstm"], name="mlstm_blocks")
+            x = x + xlstm_mod.slstm_train(
+                p["slstm"]["slstm"],
+                rmsnorm(p["slstm"]["ln"], x, cfg.norm_eps),
+                num_heads=cfg.num_heads)
+            return shard(x, ("pod", "data"), "model", None), None
+
+        # remat at the SUPERBLOCK level: only superblock-boundary
+        # activations persist; the mLSTM chunk states (1024x1024 matrix
+        # memories, the dominant stash) are recomputed in the bwd pass
+        x, _ = xscan(super_body, x, params["superblocks"],
+                     name="superblocks", remat=cfg.remat)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, pad_to=_pad_vocab(cfg))
+        logits = shard(logits, ("pod", "data"), None, "model")
+        return logits, jnp.zeros((), jnp.float32)
+
+    def init_cache(batch: int, max_len: int) -> PyTree:
+        del max_len   # recurrent state is O(1) in sequence length
+        m = jax.vmap(lambda _: jax.vmap(lambda __: xlstm_mod.init_mlstm_cache(
+            batch, cfg.d_model, cfg.num_heads))(jnp.arange(n_m)))(
+                jnp.arange(n_super))
+        s = jax.vmap(lambda _: xlstm_mod.init_slstm_state(
+            batch, cfg.d_model, cfg.num_heads))(jnp.arange(n_super))
+        return {"mlstm": m, "slstm": s, "len": jnp.zeros((), jnp.int32)}
+
+    def decode_step(params, tokens, cache):
+        x = embed(params["embed"], tokens)
+
+        def super_body(x, scanned):
+            p, mc, sc = scanned
+
+            def m_block(x, inner):
+                bp, bc = inner
+                h, bc = xlstm_mod.mlstm_decode(
+                    bp["mlstm"], rmsnorm(bp["ln"], x, cfg.norm_eps),
+                    bc, num_heads=cfg.num_heads)
+                return x + h, bc
+
+            x, mc = xscan(m_block, x, (p["mlstm"], mc),
+                          name="mlstm_blocks")
+            h, sc = xlstm_mod.slstm_decode(
+                p["slstm"]["slstm"],
+                rmsnorm(p["slstm"]["ln"], x, cfg.norm_eps), sc,
+                num_heads=cfg.num_heads)
+            return x + h, (mc, sc)
+
+        x, (mc, sc) = xscan(
+            super_body, x, (params["superblocks"], cache["mlstm"],
+                            cache["slstm"]), name="superblocks")
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _mask_pad_cols(
+            unembed(params["embed"], x, pad_to=_pad_vocab(cfg)),
+            cfg.vocab_size)
+        return logits[:, 0, :], {"mlstm": mc, "slstm": sc,
+                                 "len": cache["len"] + 1}
+
+    return Model(cfg=cfg, init=init, forward=forward,
+                 init_cache=init_cache, decode_step=decode_step)
+
+
+# ===========================================================================
+# zamba2 (hybrid: mamba2 + shared attention)
+# ===========================================================================
+
+def _build_zamba(cfg: ModelConfig) -> Model:
+    per = cfg.attn_every                              # 6 mamba per attn
+    n_super = cfg.num_layers // per                   # 13 for 81 layers
+    n_tail = cfg.num_layers - n_super * per           # 3
+
+    def init_mamba_block(k):
+        return {"ln": init_rmsnorm(cfg.d_model),
+                "mamba": ssm_mod.init_mamba2(k, cfg.d_model, cfg.ssm_state,
+                                             cfg.ssm_head_dim)}
+
+    def init(key) -> PyTree:
+        ke, km, kt, ka, kf = jax.random.split(key, 5)
+        k1, k2 = jax.random.split(ka)
+        shared = {
+            "ln1": init_rmsnorm(cfg.d_model),
+            "shared_attn": attn.init_attention(
+                k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim),
+            "ln2": init_rmsnorm(cfg.d_model),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+        }
+        return {
+            "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model),
+            "superblocks": _stack_init(
+                lambda k: _stack_init(init_mamba_block, k, per), km,
+                n_super),
+            "tail_blocks": _stack_init(init_mamba_block, kt, n_tail),
+            "shared": shared,
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+
+    def _mamba_scan(x, blocks):
+        def body(x, p):
+            h = ssm_mod.mamba2_train(
+                p["mamba"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                impl=cfg.mixer_impl)
+            return x + h, None
+
+        x, _ = xscan(body, x, blocks, name="mamba_blocks",
+                     remat=cfg.remat)
+        return x
+
+    def _shared_attn_apply(shared, x):
+        h = attn.attention_train(
+            shared["shared_attn"], rmsnorm(shared["ln1"], x, cfg.norm_eps),
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_freqs=None,
+            window=cfg.window, impl=cfg.attn_impl)
+        x = x + h
+        x = x + mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps))
+        return shard(x, ("pod", "data"), "model", None)
+
+    def forward(params, batch):
+        x = embed(params["embed"], batch["tokens"])
+        x = shard(x, ("pod", "data"), "model", None)
+
+        def super_body(x, blocks):
+            x = _mamba_scan(x, blocks)
+            x = _shared_attn_apply(params["shared"], x)
+            return x, None
+
+        x, _ = xscan(super_body, x, params["superblocks"],
+                     name="superblocks")
+        x = _mamba_scan(x, params["tail_blocks"])
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, pad_to=_pad_vocab(cfg))
+        logits = shard(logits, ("pod", "data"), None, "model")
+        return logits, jnp.zeros((), jnp.float32)
+
+    def init_cache(batch: int, max_len: int) -> PyTree:
+        eff = min(max_len, cfg.window) if cfg.window else max_len
+        mamba_c = lambda n: jax.vmap(lambda _: ssm_mod.init_mamba2_cache(
+            batch, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim))(
+                jnp.arange(n))
+        attn_c = jax.vmap(lambda _: attn.init_kv_cache(
+            batch, cfg.num_kv_heads, eff, cfg.resolved_head_dim))(
+                jnp.arange(n_super))
+        return {
+            "super": jax.vmap(lambda _: mamba_c(per))(jnp.arange(n_super)),
+            "tail": mamba_c(n_tail),
+            "attn": attn_c,
+        }
+
+    def decode_step(params, tokens, cache):
+        x = embed(params["embed"], tokens)
+
+        def mamba_step(x, inner):
+            p, c = inner
+            h, c = ssm_mod.mamba2_decode(
+                p["mamba"], rmsnorm(p["ln"], x, cfg.norm_eps), c,
+                d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+            return x + h, c
+
+        def super_body(x, scanned):
+            blocks, mc, ac = scanned
+            x, mc = xscan(mamba_step, x, (blocks, mc),
+                          name="mamba_blocks")
+            h, ac = attn.attention_decode(
+                params["shared"]["shared_attn"],
+                rmsnorm(params["shared"]["ln1"], x, cfg.norm_eps), ac,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_freqs=None,
+                window=cfg.window)
+            x = x + h
+            x = x + mlp(params["shared"]["mlp"],
+                        rmsnorm(params["shared"]["ln2"], x, cfg.norm_eps))
+            return x, (mc, ac)
+
+        x, (mc, ac) = xscan(
+            super_body, x,
+            (params["superblocks"], cache["super"], cache["attn"]),
+            name="superblocks")
+        x, tc = xscan(mamba_step, x,
+                      (params["tail_blocks"], cache["tail"]),
+                      name="tail_blocks")
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = _mask_pad_cols(
+            unembed(params["embed"], x, pad_to=_pad_vocab(cfg)),
+            cfg.vocab_size)
+        return logits[:, 0, :], {"super": mc, "tail": tc, "attn": ac}
+
+    return Model(cfg=cfg, init=init, forward=forward,
+                 init_cache=init_cache, decode_step=decode_step)
+
+
+# ===========================================================================
+# factory
+# ===========================================================================
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _build_decoder_lm(cfg)
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    if cfg.family == "ssm":
+        return _build_xlstm(cfg)
+    if cfg.family == "hybrid":
+        return _build_zamba(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer (qwen3-moe 128e/top-8, phi3.5-moe 16e/top-2).
+
+Sort-based capacity dispatch (no (N,E,C) one-hot blow-up):
+  1. top-k routing with renormalized gates,
+  2. flat (token, k) slots sorted by expert id,
+  3. rank-within-expert → capacity slot; overflow tokens are dropped
+     (their combine weight is zeroed, residual passes through),
+  4. gathered (E, C, d) activations → per-expert gated-SiLU MLP via
+     batched einsum over the expert axis,
+  5. scatter-add back through the inverse permutation.
+
+Sharding: the expert axis maps to the "model" mesh axis (EP); token axes
+map to ("pod","data"). GSPMD turns the gather/scatter into all-to-alls —
+exactly the dispatch/combine collective pattern of GShard/Switch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, init_dense
+
+Array = jax.Array
+
+
+def init_moe(key, d_model: int, moe_d_ff: int, num_experts: int,
+             *, router_scale: float = None) -> dict:
+    kr, kg, ku, ko = jax.random.split(key, 4)
+    scale = d_model ** -0.5
+    return {
+        "router": init_dense(kr, d_model, num_experts, scale=scale),
+        "wi_gate": scale * jax.random.normal(
+            kg, (num_experts, d_model, moe_d_ff), jnp.float32),
+        "wi_up": scale * jax.random.normal(
+            ku, (num_experts, d_model, moe_d_ff), jnp.float32),
+        "wo": moe_d_ff ** -0.5 * jax.random.normal(
+            ko, (num_experts, moe_d_ff, d_model), jnp.float32),
+    }
+
+
+def moe_layer(p: dict, x: Array, *, num_experts: int, top_k: int,
+              capacity_factor: float = 1.25) -> tuple[Array, Array]:
+    """x: (B, T, d) -> (out, aux_loss). Router in f32."""
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+
+    logits = dense(p["router"], xf.astype(jnp.float32))        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)         # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], num_experts), axis=0)
+    router_mean = probs.mean(axis=0)
+    aux = num_experts * jnp.sum(density * router_mean)
+
+    capacity = max(1, int(capacity_factor * N * top_k / num_experts))
+
+    # ---- dispatch ----------------------------------------------------
+    flat_expert = expert_idx.reshape(-1)                        # (N*k,)
+    flat_token = jnp.repeat(jnp.arange(N), top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                            # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # rank within expert = position - start of that expert's run
+    counts = jnp.bincount(sorted_expert, length=num_experts)    # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(N * top_k) - starts[sorted_expert]
+    keep = rank < capacity
+    slot = sorted_expert * capacity + jnp.where(keep, rank, 0)
+
+    # gather tokens into (E*C, d); dropped slots are zeroed
+    from .sharding import shard
+    gathered = jnp.where(keep[:, None], xf[sorted_token], 0.0)
+    gathered = shard(gathered, ("pod", "data"), None)
+    # the scatter target must be born sharded: an unconstrained zeros
+    # operand makes GSPMD replicate the whole scatter (and its transpose),
+    # all-gathering every (N·k, d) token tensor per layer (§Perf iter. 4)
+    buf = shard(jnp.zeros((num_experts * capacity, d), x.dtype),
+                "model", None)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], gathered, 0.0))
+    buf = shard(buf.reshape(num_experts, capacity, d),
+                "model", None, None)        # EP: dispatch all-to-all here
+
+    # ---- expert MLPs (batched over E; EP-sharded) ---------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               p["wi_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(x.dtype))
+    h = shard(h, "model", None, None)
+    out_e = shard(jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype)),
+                  "model", None, None)
+    out_flat = out_e.reshape(num_experts * capacity, d)
+
+    # ---- combine ------------------------------------------------------
+    expert_out = shard(out_flat[slot], ("pod", "data"), None)   # (N*k, d)
+    contrib = expert_out * (sorted_gate * keep)[:, None]
+    combined = shard(jnp.zeros((N, d), x.dtype), ("pod", "data"), None)
+    combined = combined.at[sorted_token].add(contrib)
+    return combined.reshape(B, T, d), aux

@@ -1,0 +1,159 @@
+"""Mamba-2 (SSD) block — the sequence mixer of zamba2-7b.
+
+Scalar-decay state space duality: per head h with state (d_state × d_head),
+    decay_t = exp(-softplus(dt_t) · A_h)
+    S_t     = decay_t · S_{t-1} + (softplus(dt_t) · B_t)ᵀ x_t
+    y_t     = C_t · S_t + D_h · x_t
+Training/prefill uses the chunked form (kernels/linear_attention — Pallas on
+TPU, exact-oracle path otherwise); decode updates the (H, d_state, d_head)
+state in place, O(1) per token — this is why zamba2 runs the long_500k
+shape. The depthwise causal conv (width 4) before the SSD follows Mamba-2;
+n_groups=1 (B/C shared across heads, GQA-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import linear_attention, ref as kref
+from .layers import dense, init_dense, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+CONV_WIDTH = 4
+
+
+def init_mamba2(key, d_model: int, d_state: int, head_dim: int = 64,
+                expand: int = 2) -> dict:
+    d_inner = expand * d_model
+    heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "in_proj": init_dense(ks[0], d_model,
+                              2 * d_inner + 2 * d_state + heads),
+        "conv_w": 0.5 * jax.random.normal(
+            ks[1], (CONV_WIDTH, conv_dim), jnp.float32) / CONV_WIDTH,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)),   # A_h > 0
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((heads,), 0.01))),
+        "norm": init_rmsnorm(d_inner),
+        "out_proj": init_dense(ks[2], d_inner, d_model,
+                               scale=d_inner ** -0.5),
+    }
+
+
+def _split_proj(proj: Array, d_inner: int, d_state: int, heads: int):
+    z, xc, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+               2 * d_inner + 2 * d_state], axis=-1)
+    return z, xc, B, C, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along time. x: (B, T, C); w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(W))
+    return out + b.astype(x.dtype)
+
+
+def mamba2_train(p: dict, x: Array, *, d_state: int, head_dim: int = 64,
+                 expand: int = 2, impl: str = "ref") -> Array:
+    """Full-sequence SSD. x: (B, T, d_model)."""
+    Bsz, T, d_model = x.shape
+    d_inner = expand * d_model
+    heads = d_inner // head_dim
+
+    proj = dense(p["in_proj"], x)
+    z, xc, Bmat, Cmat, dt = _split_proj(proj, d_inner, d_state, heads)
+    # conv is applied over [x, B, C] jointly (Mamba-2); dt bypasses it
+    xbc = jnp.concatenate([xc, Bmat, Cmat], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = jnp.exp(p["A_log"])                                      # (H,)
+    log_decay = -dt * A                                          # (B,T,H)
+
+    # head-major layout for the chunked kernel: (B*H, T, ·)
+    xh = xs.reshape(Bsz, T, heads, head_dim)
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (Bsz, T, heads, d_state))
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (Bsz, T, heads, d_state))
+    k = k * dt[..., None].astype(k.dtype)
+    ld = jnp.moveaxis(log_decay, -1, 1).reshape(Bsz * heads, T)
+
+    from .sharding import shard
+
+    def hm(a):  # (B,T,H,D) -> (B*H,T,D)
+        # batch-parallel SSD: see xlstm.py — avoids per-chunk all-reduces
+        a = shard(a, ("pod", "data"), None, None, None)
+        return jnp.moveaxis(a, 2, 1).reshape(Bsz * heads, T, a.shape[-1])
+
+    if impl == "pallas":
+        y = linear_attention(hm(q), hm(k), hm(xh), ld,
+                             interpret=jax.default_backend() != "tpu")
+    elif impl == "chunked":
+        y = kref.chunked_linear_attention(hm(q), hm(k), hm(xh), ld)
+    else:
+        y = kref.linear_attention(hm(q), hm(k), hm(xh), ld)
+    y = y.reshape(Bsz, heads, T, head_dim).swapaxes(1, 2)        # (B,T,H,D)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bsz, T, d_inner)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return dense(p["out_proj"], y)
+
+
+def init_mamba2_cache(batch: int, d_model: int, d_state: int,
+                      head_dim: int = 64, expand: int = 2,
+                      dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "state": jnp.zeros((batch, heads, d_state, head_dim), dtype),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(p: dict, x: Array, cache: dict, *, d_state: int,
+                  head_dim: int = 64, expand: int = 2
+                  ) -> tuple[Array, dict]:
+    """One-token step. x: (B, 1, d_model)."""
+    Bsz, _, d_model = x.shape
+    d_inner = expand * d_model
+    heads = d_inner // head_dim
+
+    proj = dense(p["in_proj"], x)
+    z, xc, Bmat, Cmat, dt = _split_proj(proj, d_inner, d_state, heads)
+    xbc = jnp.concatenate([xc, Bmat, Cmat], axis=-1)
+
+    # rolling conv buffer
+    hist = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    w = p["conv_w"]
+    conv = sum(hist[:, i, :] * w[i].astype(xbc.dtype)
+               for i in range(CONV_WIDTH)) + p["conv_b"].astype(xbc.dtype)
+    xc1 = jax.nn.silu(conv)[:, None, :]
+    new_conv = hist[:, 1:, :].astype(cache["conv"].dtype)
+
+    xs, Bm, Cm = jnp.split(xc1, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    A = jnp.exp(p["A_log"])
+    decay = jnp.exp(-dt * A)[..., 0, :]                           # (B,H)
+
+    xh = xs.reshape(Bsz, heads, head_dim).astype(jnp.float32)
+    Bv = Bm[:, 0, :].astype(jnp.float32)                          # (B,S)
+    Cv = Cm[:, 0, :].astype(jnp.float32)
+    dtv = dt[:, 0, :]                                             # (B,H)
+
+    # S ← decay·S + (dt·B)ᵀ x
+    S = cache["state"] * decay[..., None, None]
+    S = S + (dtv[..., None] * Bv[:, None, :])[..., None] * xh[:, :, None, :]
+    y = jnp.einsum("bs,bhsd->bhd", Cv, S)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), {"state": S, "conv": new_conv}

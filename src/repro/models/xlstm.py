@@ -1,0 +1,220 @@
+"""xLSTM blocks (xlstm-1.3b): mLSTM (matrix memory, 7 of 8 blocks) and
+sLSTM (scalar memory with recurrent mixing, 1 of 8).
+
+mLSTM is a gated linear-attention recurrence:
+    C_t = f_t · C_{t-1} + i_t · k_tᵀ v_t          (matrix memory)
+    n_t = f_t · n_{t-1} + i_t · k_t               (normalizer)
+    h_t = (q_t C_t) / max(|q_t n_t|, 1)
+We run it through kernels/linear_attention by folding the input gate into
+k and appending a ones-column to v so one kernel pass yields both the
+numerator and the normalizer. Gates use sigmoid (rather than the paper's
+exp + running-max stabilizer) — numerically equivalent up to the
+stabilizer, noted in DESIGN.md §9.
+
+sLSTM keeps per-head scalar memories with block-diagonal recurrent mixing
+(R_z/R_i/R_f/R_o) and therefore cannot be parallelized over time — it is a
+`lax.scan`, exactly as the original formulation demands.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import linear_attention, ref as kref
+from .layers import dense, init_dense, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, num_heads: int, expand: int = 2) -> dict:
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 8)
+    s = d_model ** -0.5
+    return {
+        "up_gate": init_dense(ks[0], d_model, d_inner),
+        "up": init_dense(ks[1], d_model, d_inner),
+        "wq": init_dense(ks[2], d_inner, d_inner),
+        "wk": init_dense(ks[3], d_inner, d_inner),
+        "wv": init_dense(ks[4], d_inner, d_inner),
+        "w_if": init_dense(ks[5], d_inner, 2 * num_heads),
+        "norm": init_rmsnorm(d_inner),
+        "down": init_dense(ks[6], d_inner, d_model,
+                           scale=d_inner ** -0.5),
+    }
+
+
+def mlstm_train(p: dict, x: Array, *, num_heads: int, expand: int = 2,
+                impl: str = "ref") -> Array:
+    B, T, d_model = x.shape
+    d_inner = expand * d_model
+    hd = d_inner // num_heads
+
+    u = dense(p["up"], x)
+    gate = dense(p["up_gate"], x)
+    q = dense(p["wq"], u).reshape(B, T, num_heads, hd)
+    k = dense(p["wk"], u).reshape(B, T, num_heads, hd) * hd ** -0.5
+    v = dense(p["wv"], u).reshape(B, T, num_heads, hd)
+    gif = dense(p["w_if"], u).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gif[..., :num_heads])        # (B,T,H)
+    log_f = jax.nn.log_sigmoid(gif[..., num_heads:])     # (B,T,H)
+
+    from .sharding import shard
+
+    def hm(a):  # (B,T,H,D) -> (B*H,T,D)
+        # batch-parallel recurrence: pin to batch-only sharding before the
+        # head merge — the projections leave a "model" sharding on the
+        # merged d_inner that the (B*H, T, hd) reshape cannot express,
+        # which otherwise costs an all-reduce per chunk step
+        a = shard(a, ("pod", "data"), None, None, None)
+        return jnp.moveaxis(a, 2, 1).reshape(B * num_heads, T, a.shape[-1])
+
+    # fold input gate into k; ones-column in v gives the normalizer n_t
+    k_g = k * i_gate[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((B, T, num_heads, 1), v.dtype)], axis=-1)
+    ld = jnp.moveaxis(log_f, -1, 1).reshape(B * num_heads, T)
+
+    if impl == "pallas":
+        out = linear_attention(hm(q), hm(k_g), hm(v_aug), ld,
+                               interpret=jax.default_backend() != "tpu")
+    elif impl == "chunked":
+        out = kref.chunked_linear_attention(hm(q), hm(k_g), hm(v_aug), ld)
+    else:
+        out = kref.linear_attention(hm(q), hm(k_g), hm(v_aug), ld)
+    num = out[..., :hd]
+    den = out[..., hd:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(B, num_heads, T, hd).swapaxes(1, 2).reshape(B, T, d_inner)
+    h = rmsnorm(p["norm"], h) * jax.nn.silu(gate)
+    return dense(p["down"], h)
+
+
+def init_mlstm_cache(batch: int, d_model: int, num_heads: int,
+                     expand: int = 2) -> dict:
+    d_inner = expand * d_model
+    hd = d_inner // num_heads
+    return {"C": jnp.zeros((batch, num_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, hd), jnp.float32)}
+
+
+def mlstm_decode(p: dict, x: Array, cache: dict, *, num_heads: int,
+                 expand: int = 2) -> tuple[Array, dict]:
+    B, _, d_model = x.shape
+    d_inner = expand * d_model
+    hd = d_inner // num_heads
+
+    u = dense(p["up"], x)
+    gate = dense(p["up_gate"], x)
+    q = dense(p["wq"], u).reshape(B, num_heads, hd).astype(jnp.float32)
+    k = (dense(p["wk"], u) * hd ** -0.5).reshape(
+        B, num_heads, hd).astype(jnp.float32)
+    v = dense(p["wv"], u).reshape(B, num_heads, hd).astype(jnp.float32)
+    gif = dense(p["w_if"], u).astype(jnp.float32)[:, 0]
+    i_g = jax.nn.sigmoid(gif[:, :num_heads])             # (B,H)
+    f_g = jax.nn.sigmoid(gif[:, num_heads:])
+
+    C = cache["C"] * f_g[..., None, None] + \
+        (i_g[..., None] * k)[..., :, None] * v[..., None, :]
+    n = cache["n"] * f_g[..., None] + i_g[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.einsum("bhk,bhk->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    h = h.reshape(B, 1, d_inner).astype(x.dtype)
+    h = rmsnorm(p["norm"], h) * jax.nn.silu(gate)
+    return dense(p["down"], h), {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, num_heads: int) -> dict:
+    hd = d_model // num_heads
+    ks = jax.random.split(key, 9)
+    s = d_model ** -0.5
+    p = {"w_" + g: init_dense(k, d_model, d_model, bias=True)
+         for g, k in zip("zifo", ks[:4])}
+    # block-diagonal recurrent mixing: per head (hd, hd)
+    for g, k in zip("zifo", ks[4:8]):
+        p["r_" + g] = hd ** -0.5 * jax.random.normal(
+            k, (num_heads, hd, hd), jnp.float32)
+    p["norm"] = init_rmsnorm(d_model)
+    p["down"] = init_dense(ks[8], d_model, d_model, scale=s)
+    return p
+
+
+def init_slstm_state(batch: int, d_model: int, num_heads: int) -> dict:
+    hd = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z}
+
+
+def _slstm_step(p: dict, st: dict, zx, ix, fx, ox, num_heads: int):
+    """One timestep. zx/ix/fx/ox: (B, H, hd) pre-activations from x."""
+    from .sharding import shard
+    h_prev = st["h"]
+
+    def mix(name):
+        return jnp.einsum("bhk,hkj->bhj", h_prev, p["r_" + name])
+
+    z = jnp.tanh(zx + mix("z"))
+    i = jax.nn.sigmoid(ix + mix("i"))
+    f = jax.nn.sigmoid(fx + mix("f"))
+    o = jax.nn.sigmoid(ox + mix("o"))
+    c = f * st["c"] + i * z
+    n = f * st["n"] + i
+    h = o * c / jnp.maximum(n, 1.0)
+    # pin the carry sharding: unconstrained while-carries go replicated
+    # and drag the whole time loop with them (§Perf iteration 3)
+    bsh = lambda a: shard(a, ("pod", "data"), None, None)
+    return {"c": bsh(c), "n": bsh(n), "h": bsh(h)}
+
+
+def slstm_train(p: dict, x: Array, *, num_heads: int) -> Array:
+    B, T, d_model = x.shape
+    hd = d_model // num_heads
+
+    from ..xscan import xscan
+    from .sharding import shard
+
+    def pre(name):
+        a = dense(p["w_" + name], x).reshape(
+            B, T, num_heads, hd).astype(jnp.float32)
+        # CRITICAL: materialize the pre-activations batch-sharded-only
+        # BEFORE entering the time scan. The projection output inherits a
+        # "model" sharding on hd; the recurrent mix then contracts a
+        # sharded dim → one all-reduce PER TIMESTEP (measured 4.2e6 ms of
+        # collectives on xlstm-1.3b prefill_32k — EXPERIMENTS.md §Perf
+        # iteration 2). One gather here replaces T of them.
+        return shard(a, ("pod", "data"), None, None, None)
+
+    zx, ix, fx, ox = pre("z"), pre("i"), pre("f"), pre("o")
+
+    def step(st, t_in):
+        st = _slstm_step(p, st, *t_in, num_heads=num_heads)
+        return st, st["h"]
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (zx, ix, fx, ox))
+    st0 = init_slstm_state(B, d_model, num_heads)
+    _, hs = xscan(step, st0, xs, name="slstm_steps")
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, d_model).astype(x.dtype)
+    return dense(p["down"], rmsnorm(p["norm"], h))
+
+
+def slstm_decode(p: dict, x: Array, state: dict, *, num_heads: int
+                 ) -> tuple[Array, dict]:
+    B, _, d_model = x.shape
+    hd = d_model // num_heads
+
+    def pre(name):
+        return dense(p["w_" + name], x).reshape(
+            B, num_heads, hd).astype(jnp.float32)
+
+    st = _slstm_step(p, state, pre("z"), pre("i"), pre("f"), pre("o"),
+                     num_heads=num_heads)
+    h = st["h"].reshape(B, 1, d_model).astype(x.dtype)
+    return dense(p["down"], rmsnorm(p["norm"], h)), st

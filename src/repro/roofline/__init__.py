@@ -1,0 +1,6 @@
+from .analysis import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
+                       collective_bytes)
+from .flops import cell_bytes, cell_flops, forward_flops_per_token
+
+__all__ = ["HBM_BW", "LINK_BW", "PEAK_FLOPS", "Roofline", "cell_bytes",
+           "cell_flops", "collective_bytes", "forward_flops_per_token"]

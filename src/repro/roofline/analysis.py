@@ -1,0 +1,141 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = FLOPs_per_device / peak_FLOP/s
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+The compiled module is the per-device SPMD program, so HLO-derived numbers
+are already per-device. Collective bytes are parsed from
+``compiled.as_text()`` by summing result-shape sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, multiplied
+by the enclosing loop trip counts (models tag every scan with
+``xscan[N]`` in op_name — XLA cost_analysis counts while bodies once, a
+verified limitation on this backend, so FLOPs/bytes use the analytic
+accounting in flops.py and cost_analysis is reported as a cross-check).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16, per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s*(\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}]+)\s+"
+    r"(" + "|".join(_COLL_KINDS) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_XSCAN_RE = re.compile(r"xscan\[(\d+)\]")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes per collective kind, loop-trip-count corrected."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if re.search(r"(" + "|".join(_COLL_KINDS) + r")-done\(", line):
+            continue                      # count -start, skip -done
+        bytes_ = _shape_bytes(m.group(1))
+        mult = 1
+        nm = _OPNAME_RE.search(line)
+        if nm:
+            for c in _XSCAN_RE.findall(nm.group(1)):
+                mult *= int(c)
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0.0) + float(bytes_ * mult)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float          # analytic, loop-aware
+    bytes_per_dev: float          # analytic HBM traffic model
+    coll_bytes_per_dev: float     # HLO-parsed, xscan-corrected
+    coll_breakdown: dict[str, float]
+    model_flops: float            # 6·N·D (train) / 2·N·D (serve), global
+    xla_raw_flops: float = 0.0    # cost_analysis cross-check (loops-once)
+    xla_raw_bytes: float = 0.0
+    hbm_per_dev: Optional[float] = None   # memory_analysis footprint
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / accounted FLOPs — remat/redundancy waste."""
+        total = self.flops_per_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Useful-compute time / bound time ∈ (0, 1]: the score."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        t_useful = self.model_flops / self.chips / PEAK_FLOPS
+        return t_useful / bound if bound > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "xla_raw_flops": self.xla_raw_flops,
+            "xla_raw_bytes": self.xla_raw_bytes,
+            "hbm_per_dev": self.hbm_per_dev,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }

@@ -1,0 +1,36 @@
+"""Scan wrapper that embeds loop trip counts into HLO op metadata.
+
+XLA's cost_analysis counts while-loop bodies exactly once, so any
+scan-based model under-reports FLOPs/bytes/collective traffic by its trip
+count. `xscan` tags every op inside the loop (forward *and* the transposed
+backward loop — named scopes survive jvp/transpose) with ``xscan[N]`` in
+`op_name`; roofline/analysis.py multiplies in-loop collective payloads by
+the product of enclosing scan counts. Nested scans compose naturally:
+"…xscan[13]/…/xscan[6]/…" ⇒ ×78.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+Carry = Any
+
+
+def xscan(body: Callable, carry: Carry, xs: Any, *,
+          name: str = "layers", length: Optional[int] = None,
+          remat: bool = False) -> tuple[Carry, Any]:
+    if length is None:
+        length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    fn = jax.checkpoint(body) if remat else body
+    with jax.named_scope(f"{name}.xscan[{length}]"):
+        return jax.lax.scan(fn, carry, xs)
+
+
+def xmap_seq(fn: Callable, xs: Any, *, name: str = "map",
+             length: Optional[int] = None) -> Any:
+    """lax.map with the same trip-count tagging."""
+    if length is None:
+        length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    with jax.named_scope(f"{name}.xscan[{length}]"):
+        return jax.lax.map(fn, xs)

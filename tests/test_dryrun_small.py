@@ -1,0 +1,99 @@
+"""Dry-run machinery on a small fake mesh (subprocess: own XLA_FLAGS).
+
+The production 512-device sweep runs via `python -m repro.launch.dryrun`;
+here we prove the same path (shardings, lower, compile, roofline terms) on
+an 8-device fake mesh with reduced configs, in a subprocess so the main
+test process keeps its single-device view.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.filterwarnings("ignore")
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models import build_model, cache_specs, param_specs
+from repro.models.sharding import batch_spec
+from repro.optim import AdamW
+from repro.roofline import collective_bytes
+
+results = {}
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+assert mesh.devices.size == 8
+
+for arch in ["qwen3-0.6b", "phi3.5-moe-42b-a6.6b", "zamba2-7b"]:
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    with jax.sharding.set_mesh(mesh):
+        ps = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_specs = param_specs(ps)
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+        B, T = 8, 32
+        batch = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+        b_sh = {k: NamedSharding(mesh, batch_spec(v.shape))
+                for k, v in batch.items()}
+        opt = AdamW(lr=1e-3)
+        os_ = jax.eval_shape(opt.init, ps)
+        o_sh = type(os_)(step=NamedSharding(mesh, P()), m=p_sh, v=p_sh)
+
+        def train_step(params, opt_state, b, model=model, opt=opt):
+            (l, m), g = jax.value_and_grad(model.loss, has_aux=True)(
+                params, b)
+            params, opt_state = opt.update(g, opt_state, params)
+            return params, opt_state, l
+
+        fn = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())))
+        compiled = fn.lower(ps, os_, batch).compile()
+        coll = collective_bytes(compiled.as_text())
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+
+        # decode path too
+        cache = jax.eval_shape(lambda m=model: m.init_cache(B, T))
+        c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            cache_specs(cache),
+                            is_leaf=lambda x: isinstance(x, P))
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        sfn = jax.jit(lambda p, c, t, m=model: m.decode_step(p, t, c),
+                      in_shardings=(p_sh, c_sh,
+                                    NamedSharding(mesh,
+                                                  batch_spec((B, 1)))),
+                      out_shardings=(NamedSharding(mesh, P()), c_sh))
+        sfn.lower(ps, cache, tok).compile()
+
+    results[arch] = {"collectives": {k: int(v) for k, v in coll.items()},
+                     "flops": float(cost.get("flops", 0))}
+
+print("RESULT" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_all_families():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    results = json.loads(line[len("RESULT"):])
+    assert set(results) == {"qwen3-0.6b", "phi3.5-moe-42b-a6.6b",
+                            "zamba2-7b"}
+    for arch, r in results.items():
+        # sharded training must move *some* collective traffic
+        assert sum(r["collectives"].values()) > 0, arch

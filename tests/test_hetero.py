@@ -1,0 +1,153 @@
+"""Step-level co-execution: policies, quantization, the hetero trainer."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.data import DataPipeline
+from repro.hetero import (DynamicPolicy, GroupMonitor, HGuidedPolicy,
+                          HeteroTrainer, StaticPolicy, make_policy,
+                          quantize_shares)
+from repro.models import build_model
+from repro.optim import AdamW
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@given(n_groups=st.integers(1, 6), total=st.integers(6, 64),
+       seed=st.integers(0, 100))
+@settings(max_examples=60, deadline=None)
+def test_quantize_preserves_total_and_minimum(n_groups, total, seed):
+    rng = np.random.default_rng(seed)
+    raw = rng.random(n_groups) + 0.01
+    shares = {f"g{i}": float(v / raw.sum()) for i, v in enumerate(raw)}
+    q = quantize_shares(shares, total)
+    assert sum(q.values()) == total
+    assert all(v >= 1 for v in q.values())
+    # quantization error below one microbatch per group
+    for k in shares:
+        assert abs(q[k] - shares[k] * total) <= n_groups
+
+
+def test_quantize_rejects_impossible():
+    with pytest.raises(ValueError):
+        quantize_shares({"a": 0.5, "b": 0.5}, 1)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+MEASURED = {"fast": 2 / 3, "slow": 1 / 3}
+
+
+def test_static_never_moves():
+    p = StaticPolicy({"fast": 1.0, "slow": 1.0})
+    for s in range(20):
+        assert not p.update(s, MEASURED)
+    assert p.shares["fast"] == pytest.approx(0.5)
+
+
+def test_dynamic_jumps_to_measured():
+    p = DynamicPolicy({"fast": 1.0, "slow": 1.0}, period=5)
+    assert not p.update(1, MEASURED)          # off-period
+    assert p.update(5, MEASURED)
+    assert p.shares["fast"] == pytest.approx(2 / 3)
+
+
+def test_hguided_converges_with_damping_and_floor():
+    p = HGuidedPolicy({"fast": 1.0, "slow": 1.0}, total_steps=100,
+                      min_share=0.05)
+    hist = []
+    for s in range(100):
+        p.update(s, {"fast": 0.97, "slow": 0.03})
+        hist.append(p.shares["fast"])
+    # converges toward the target but never starves the slow group
+    assert hist[-1] > 0.9
+    assert p.shares["slow"] >= 0.05 - 1e-9
+    # early corrections bigger than late ones (the HGuided signature)
+    assert (hist[1] - hist[0]) >= 0.8 * (hist[60] - hist[59])
+
+
+def test_policy_elastic_drop_and_add():
+    p = make_policy("hguided", {"a": 1.0, "b": 1.0, "c": 2.0},
+                    total_steps=10)
+    p.drop_group("c")
+    assert set(p.shares) == {"a", "b"}
+    assert sum(p.shares.values()) == pytest.approx(1.0)
+    p.add_group("d", 0.25)
+    assert p.shares["d"] == pytest.approx(0.25)
+    assert sum(p.shares.values()) == pytest.approx(1.0)
+
+
+def test_monitor_straggler_detection():
+    m = GroupMonitor(["a", "b", "c"], straggler_factor=0.6)
+    for _ in range(5):
+        m.record("a", 1000, 1.0)
+        m.record("b", 1000, 1.05)
+        m.record("c", 1000, 4.0)     # 4x slower
+    assert m.stragglers() == ["c"]
+    m.mark_dead("c")
+    assert set(m.alive()) == {"a", "b"}
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+def make_trainer(policy_name="hguided", speeds=None, steps=20):
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = DataPipeline(seed=5, global_batch=8, seq_len=16,
+                        vocab=cfg.vocab_size, num_shards=8)
+    speeds = speeds or {"A": 1.0, "B": 0.5}
+    policy = make_policy(policy_name, {k: 1.0 for k in speeds},
+                         total_steps=steps)
+    return HeteroTrainer(model, params, optimizer=AdamW(lr=1e-3),
+                         policy=policy, pipeline=pipe,
+                         group_speeds=speeds, total_microbatches=8)
+
+
+def test_trainer_loss_decreases():
+    tr = make_trainer()
+    reports = tr.run(15)
+    assert reports[-1].loss < reports[0].loss
+
+
+def test_hguided_assignment_tracks_speeds():
+    tr = make_trainer("hguided", {"A": 1.0, "B": 0.25}, steps=25)
+    tr.run(25)
+    a = tr.history[-1].assignment
+    assert a["A"] > a["B"]            # 4x speed ⇒ more microbatches
+    assert a["A"] + a["B"] == 8
+
+
+def test_gradients_invariant_to_policy():
+    """Assignments move *where* microbatches run, never their content —
+    the loss trajectory must be identical across policies."""
+    t1 = make_trainer("static")
+    t2 = make_trainer("hguided")
+    l1 = [r.loss for r in t1.run(5)]
+    l2 = [r.loss for r in t2.run(5)]
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+
+
+def test_step_time_improves_under_hguided():
+    tr = make_trainer("hguided", {"A": 1.0, "B": 0.2}, steps=30)
+    reports = tr.run(30)
+    first = np.mean([r.step_seconds for r in reports[1:4]])
+    last = np.mean([r.step_seconds for r in reports[-3:]])
+    assert last < first * 0.9         # rebalancing shortened the barrier
+
+
+def test_kill_group_redistributes():
+    tr = make_trainer("hguided", {"A": 1.0, "B": 1.0, "C": 1.0})
+    tr.run(3)
+    tr.kill_group("C")
+    rep = tr.train_step()
+    assert "C" not in rep.assignment
+    assert sum(rep.assignment.values()) == 8

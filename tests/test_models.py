@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (reduced configs) + decode equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.models import build_model, count_params
+from repro.optim import AdamW
+
+B, T = 2, 32
+rng = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, tokens=None):
+    if tokens is None:
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                    cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (B, cfg.encoder_seq, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_shapes(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    assert count_params(params) > 0
+    batch = make_batch(cfg)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape[:2] == (B, T)
+    assert logits.shape[2] >= cfg.vocab_size   # possibly padded vocab
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    opt = AdamW(lr=1e-3)
+    state = opt.init(params)
+    batch = make_batch(cfg)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, m), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    params2, state2, loss = step(params, state, batch)
+    assert jnp.isfinite(loss)
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: bool(jnp.any(a != b)), params, params2)
+    assert any(jax.tree_util.tree_leaves(moved))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "h2o-danube3-4b",
+                                  "minicpm-2b", "internvl2-1b",
+                                  "whisper-medium", "xlstm-1.3b",
+                                  "zamba2-7b"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, T), 0,
+                                cfg.vocab_size)
+    batch = make_batch(cfg, tokens)
+    # VLM: the decode path is text-only (the vision prefix enters via a
+    # prefill pass in real serving); compare text-only forward vs decode
+    batch.pop("vision_embeds", None)
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+
+    cache = model.init_cache(B, T)
+    if model.prefill is not None:
+        cache = jax.jit(model.prefill)(params, batch, cache)
+    step = jax.jit(model.decode_step)
+    worst = 0.0
+    for t in range(T):
+        lg, cache = step(params, tokens[:, t:t + 1], cache)
+        err = float(jnp.max(jnp.abs(
+            lg[:, :cfg.vocab_size] -
+            logits_full[:, t, :cfg.vocab_size])))
+        worst = max(worst, err)
+    assert worst < 0.12, worst
+
+
+def test_moe_decode_matches_with_capacity():
+    cfg = dataclasses.replace(
+        get_config("phi3.5-moe-42b-a6.6b").reduced(), capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(rng)
+    tokens = jax.random.randint(jax.random.PRNGKey(9), (B, T), 0,
+                                cfg.vocab_size)
+    logits_full, _ = jax.jit(model.forward)(
+        params, {"tokens": tokens, "labels": tokens})
+    cache = model.init_cache(B, T)
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        lg, cache = step(params, tokens[:, t:t + 1], cache)
+        assert float(jnp.max(jnp.abs(lg - logits_full[:, t]))) < 1e-4
+
+
+def test_swa_ring_buffer_wraps():
+    """h2o's sliding window: decode beyond the window stays correct."""
+    cfg = get_config("h2o-danube3-4b").reduced()   # window 32
+    assert cfg.window == 32
+    model = build_model(cfg)
+    params = model.init(rng)
+    T2 = 48                                        # > window
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, T2), 0,
+                                cfg.vocab_size)
+    logits_full, _ = jax.jit(model.forward)(
+        params, {"tokens": tokens, "labels": tokens})
+    cache = model.init_cache(B, T2)                # ring of size window
+    assert cache["k"].shape[3] == cfg.window
+    step = jax.jit(model.decode_step)
+    worst = 0.0
+    for t in range(T2):
+        lg, cache = step(params, tokens[:, t:t + 1], cache)
+        worst = max(worst, float(jnp.max(jnp.abs(
+            lg[:, :cfg.vocab_size] -
+            logits_full[:, t, :cfg.vocab_size]))))
+    assert worst < 0.12, worst
+
+
+def test_long_shape_applicability_flags():
+    sub = {a for a in ARCH_IDS if get_config(a).subquadratic}
+    assert sub == {"h2o-danube3-4b", "xlstm-1.3b", "zamba2-7b"}
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+def test_mixer_impl_consistency():
+    for arch in ("zamba2-7b", "xlstm-1.3b"):
+        cfg = get_config(arch).reduced()
+        m_ref = build_model(dataclasses.replace(cfg, mixer_impl="ref"))
+        m_chk = build_model(dataclasses.replace(cfg, mixer_impl="chunked"))
+        params = m_ref.init(rng)
+        batch = make_batch(cfg)
+        l1, _ = jax.jit(m_ref.forward)(params, batch)
+        l2, _ = jax.jit(m_chk.forward)(params, batch)
+        assert float(jnp.max(jnp.abs(l1 - l2))) < 0.05, arch

@@ -1,0 +1,87 @@
+"""Roofline machinery: HLO collective parser, xscan multipliers, analytic
+FLOPs sanity."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import (PEAK_FLOPS, cell_flops, collective_bytes,
+                            forward_flops_per_token)
+from repro.xscan import xscan
+
+HLO_SAMPLE = """
+  %ar = f32[16,1024]{1,0} all-reduce(%x), metadata={op_name="jit(f)/foo"}
+  %ag.1 = bf16[8,256]{1,0} all-gather-start(%y), metadata={op_name="jit(f)/layers.xscan[28]/while/body/bar"}
+  %rs = (f32[4,4]{1,0}, f32[4,4]{1,0}) reduce-scatter(%a, %b), metadata={op_name="jit(f)/t"}
+  %aa = f32[2,2]{1,0} all-to-all(%c), metadata={op_name="jit(f)/layers.xscan[4]/while/body/attn.xscan[8]/while/body/q"}
+  %done = f32[16,1024]{1,0} all-reduce-done(%ar)
+"""
+
+
+def test_collective_parser_kinds_and_multipliers():
+    got = collective_bytes(HLO_SAMPLE)
+    assert got["all-reduce"] == 16 * 1024 * 4            # -done skipped
+    assert got["all-gather"] == 8 * 256 * 2 * 28         # xscan x28
+    assert got["reduce-scatter"] == 2 * 16 * 4           # tuple summed
+    assert got["all-to-all"] == 4 * 4 * (4 * 8)          # nested scans
+
+
+def test_xscan_tag_appears_in_hlo():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        c, _ = xscan(body, x, ws, name="lyr")
+        return c.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, ws).compile().as_text()
+    assert "lyr.xscan[7]" in txt
+
+
+def test_analytic_flops_train_factor():
+    """Remat'd train step = 4x the forward pass at the same shape."""
+    cfg = get_config("qwen3-0.6b")
+    t1 = cell_flops(cfg, SHAPES["train_4k"])["total_flops"]
+    fwd = 256 * 4096 * forward_flops_per_token(cfg, 4096)
+    assert t1 / fwd == pytest.approx(4.0, rel=0.01)
+    # prefill spends more FLOPs per token (longer attended context)
+    pref = cell_flops(cfg, SHAPES["prefill_32k"])["total_flops"]
+    assert pref / (32 * 32768) > fwd / (256 * 4096)
+
+
+def test_analytic_flops_close_to_6nd():
+    """For dense models at moderate seq, layer flops/token ≈ 6·N_layer."""
+    cfg = get_config("qwen1.5-110b")
+    fwd = forward_flops_per_token(cfg, 4096)
+    n = cfg.n_params()
+    # fwd ≈ 2·N + attention term; ratio in [2, 3.2]
+    assert 1.8 <= fwd / n <= 3.2
+
+
+def test_moe_flops_use_active_params():
+    moe = get_config("qwen3-moe-235b-a22b")
+    fwd = forward_flops_per_token(moe, 4096)
+    n_active = moe.n_active_params()
+    n_total = moe.n_params()
+    assert fwd < 0.15 * 2 * n_total         # nowhere near dense compute
+    assert fwd == pytest.approx(2 * n_active, rel=0.5)
+
+
+def test_decode_flops_much_smaller():
+    cfg = get_config("h2o-danube3-4b")
+    dec = cell_flops(cfg, SHAPES["decode_32k"])["total_flops"]
+    pref = cell_flops(cfg, SHAPES["prefill_32k"])["total_flops"]
+    assert dec < pref / 1000
+
+
+def test_roofline_terms_positive():
+    from repro.roofline import Roofline
+    r = Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                 flops_per_dev=1e15, bytes_per_dev=1e9,
+                 coll_bytes_per_dev=1e9, coll_breakdown={},
+                 model_flops=2e17)
+    assert r.t_compute == pytest.approx(1e15 / PEAK_FLOPS)
+    assert r.bottleneck == "compute"
+    assert 0 < r.roofline_frac <= 1.0

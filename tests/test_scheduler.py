@@ -1,0 +1,98 @@
+"""Property-based tests for the load-balancing algorithms (paper §3.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DynamicScheduler, HGuidedScheduler, StaticScheduler,
+                        make_scheduler, validate_cover)
+
+
+def drain(sched, num_units, order_seed=0):
+    """Serve packages round-robin-ish until exhausted; return packages."""
+    rng = np.random.default_rng(order_seed)
+    pkgs = []
+    active = list(range(num_units))
+    while active:
+        u = int(rng.choice(active))
+        p = sched.next_package(u)
+        if p is None:
+            active.remove(u)
+        else:
+            pkgs.append(p)
+    return pkgs
+
+
+@given(total=st.integers(1, 500_000),
+       units=st.integers(1, 8),
+       gran=st.sampled_from([1, 16, 64, 128]),
+       policy=st.sampled_from(["static", "dyn5", "dyn200", "hguided"]),
+       seed=st.integers(0, 5))
+@settings(max_examples=120, deadline=None)
+def test_exact_cover(total, units, gran, policy, seed):
+    """THE invariant: every work-item computed exactly once, any policy."""
+    kw = {}
+    if policy in ("static", "hguided"):
+        kw["speeds"] = [1.0 + 0.5 * i for i in range(units)]
+    sched = make_scheduler(policy, total, units, granularity=gran, **kw)
+    pkgs = drain(sched, units, seed)
+    validate_cover(pkgs, total)
+
+
+@given(total=st.integers(1000, 1_000_000),
+       units=st.integers(2, 6))
+@settings(max_examples=40, deadline=None)
+def test_static_proportional(total, units):
+    speeds = [1.0 + i for i in range(units)]
+    sched = StaticScheduler(total, units, speeds=speeds)
+    pkgs = sorted(drain(sched, units), key=lambda p: p.unit)
+    assert len(pkgs) == units                 # exactly one per unit
+    shares = np.array([p.size for p in pkgs], float) / total
+    want = np.array(speeds) / sum(speeds)
+    np.testing.assert_allclose(shares, want, atol=0.02)
+
+
+@given(total=st.integers(1000, 500_000), n=st.sampled_from([5, 50, 200]))
+@settings(max_examples=40, deadline=None)
+def test_dynamic_package_count(total, n):
+    sched = DynamicScheduler(total, 2, num_packages=n)
+    pkgs = drain(sched, 2)
+    # ceil-split may produce up to n packages; never more
+    assert len(pkgs) <= n
+    assert len(pkgs) >= min(n, total) - n // 2
+
+
+@given(total=st.integers(10_000, 1_000_000),
+       cpu_share=st.floats(0.05, 0.6))
+@settings(max_examples=40, deadline=None)
+def test_hguided_sizes_decrease(total, cpu_share):
+    """Per unit, package sizes are non-increasing down to the floor."""
+    sched = HGuidedScheduler(total, 2, speeds=[cpu_share, 1 - cpu_share],
+                             min_package=64)
+    per_unit = {0: [], 1: []}
+    pkgs = drain(sched, 2, order_seed=3)
+    for p in pkgs:
+        per_unit[p.unit].append(p.size)
+    for u, sizes in per_unit.items():
+        body = sizes[:-1]  # the tail package may be any remainder
+        for a, b in zip(body, body[1:]):
+            assert a >= b or a <= 64 * 2, (u, sizes)
+
+
+def test_hguided_first_packages_proportional():
+    sched = HGuidedScheduler(1_000_000, 2, speeds=[0.25, 0.75])
+    p0 = sched.next_package(0)
+    p1 = sched.next_package(1)
+    # size_i = rem * s_i / (K * sum) with K = 2
+    assert abs(p0.size - 1_000_000 * 0.25 / 2) < 1000
+    assert abs(p1.size - (1_000_000 - p0.size) * 0.75 / 2) < 1000
+
+
+def test_registry_and_validation():
+    with pytest.raises(KeyError):
+        make_scheduler("nope", 10, 1)
+    with pytest.raises(ValueError):
+        make_scheduler("static", 0, 1)
+    with pytest.raises(ValueError):
+        make_scheduler("hguided", 10, 2, speeds=[1.0])
+    s = make_scheduler("dyn17", 1000, 2)
+    assert s.num_packages == 17

@@ -1,0 +1,159 @@
+"""Substrate layers: optimizer, schedules, grads, data, checkpointing."""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataPipeline
+from repro.optim import (AdamW, ErrorFeedback, clip_by_global_norm,
+                         compress_bf16, global_norm, make_schedule, wsd)
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedules / grads
+# ---------------------------------------------------------------------------
+
+def test_adamw_optimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_wsd_schedule_shape():
+    sched = wsd(peak_lr=1.0, warmup=10, total=100, decay_frac=0.1)
+    lrs = [float(sched(jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert lrs[5] == pytest.approx(0.5)
+    assert lrs[50] == pytest.approx(1.0)        # stable plateau
+    assert lrs[89] == pytest.approx(1.0)
+    assert lrs[99] < 0.1                        # sharp final decay
+    assert make_schedule("wsd", 1.0, 10, 100) is not None
+
+
+def test_cosine_schedule():
+    sched = make_schedule("cosine", 2.0, 5, 105)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(2.0)
+    assert float(sched(jnp.asarray(105))) == pytest.approx(0.2, abs=0.02)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(250.0))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_bf16_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=1000), jnp.float32)}
+    ef = ErrorFeedback.init(g)
+    total_wire = jnp.zeros(1000, jnp.float32)
+    total_true = jnp.zeros(1000, jnp.float32)
+    for _ in range(50):
+        wire, ef = compress_bf16(g, ef)
+        total_wire = total_wire + wire["w"].astype(jnp.float32)
+        total_true = total_true + g["w"]
+    # error feedback keeps the long-run average unbiased
+    err = float(jnp.max(jnp.abs(total_wire - total_true)))
+    assert err < 0.05, err
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_restart():
+    p1 = DataPipeline(seed=3, global_batch=8, seq_len=16, vocab=100,
+                      num_shards=4)
+    p2 = DataPipeline(seed=3, global_batch=8, seq_len=16, vocab=100,
+                      num_shards=4)
+    for step in (0, 5, 17):
+        for shard in range(4):
+            a = p1.batch_at(step, shard)
+            b = p2.batch_at(step, shard)
+            np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    b = p1.batch_at(0, 0)
+    assert b["tokens"].shape == (2, 16)
+
+
+def test_data_shards_differ():
+    p = DataPipeline(seed=1, global_batch=8, seq_len=32, vocab=1000,
+                     num_shards=4)
+    a = p.batch_at(0, 0)["tokens"]
+    b = p.batch_at(0, 1)["tokens"]
+    assert not np.array_equal(a, b)
+
+
+def test_data_prefetch_iterator():
+    p = DataPipeline(seed=2, global_batch=4, seq_len=8, vocab=50,
+                     num_shards=2, start_step=10)
+    it = p.shard_iterator(0)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"],
+                                  p.batch_at(10, 0)["tokens"])
+    second = next(it)
+    np.testing.assert_array_equal(second["tokens"],
+                                  p.batch_at(11, 0)["tokens"])
+
+
+@given(shards=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=8, deadline=None)
+def test_data_reshard_keeps_determinism(shards):
+    p = DataPipeline(seed=9, global_batch=8, seq_len=8, vocab=64,
+                     num_shards=shards)
+    q = p.reshard(shards, start_step=5)
+    np.testing.assert_array_equal(p.batch_at(5, 0)["tokens"],
+                                  q.batch_at(5, 0)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def tree_eq(a, b):
+    return all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a),
+                   jax.tree_util.tree_leaves(b)))
+
+
+def test_checkpoint_roundtrip_exact():
+    tree = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "step": jnp.asarray(7),
+            "nested": {"m": [jnp.ones(3), jnp.zeros(2)]}}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(7, tree)
+        step, got = ck.restore(tree)
+        assert step == 7
+        assert tree_eq(tree, got)
+
+
+def test_checkpoint_async_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for s in range(5):
+            ck.save_async(s, {"x": jnp.full((4,), float(s))})
+        ck.wait()
+        files = [f for f in os.listdir(d) if f.endswith(".npz")]
+        assert len(files) == 2
+        assert ck.latest_step() == 4
+        _, got = ck.restore({"x": jnp.zeros(4)})
+        assert float(got["x"][0]) == 4.0
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(0, {"x": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            ck.restore({"x": jnp.zeros((3, 3))})

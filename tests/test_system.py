@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests: train-to-convergence (tiny), serving, and
+the paper's public API shape (Listing 1)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import CoexecutorRuntime, counits_from_devices
+from repro.data import DataPipeline
+from repro.hetero import HeteroTrainer, make_policy
+from repro.models import build_model
+from repro.optim import AdamW
+
+
+def test_e2e_training_learns():
+    """Tiny LM on the synthetic topic distribution: loss must drop
+    substantially from the random-init level."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = DataPipeline(seed=1, global_batch=8, seq_len=32,
+                        vocab=cfg.vocab_size, num_shards=8)
+    tr = HeteroTrainer(model, params, optimizer=AdamW(lr=3e-3),
+                       policy=make_policy("hguided", {"A": 1.0, "B": 1.0},
+                                          total_steps=40),
+                       pipeline=pipe, group_speeds={"A": 1.0, "B": 0.7},
+                       total_microbatches=8)
+    reports = tr.run(40)
+    first = np.mean([r.loss for r in reports[:3]])
+    last = np.mean([r.loss for r in reports[-3:]])
+    assert last < first - 0.5, (first, last)
+
+
+def test_e2e_serving_batched_decode():
+    """Prefill + batched greedy decode with the KV cache."""
+    cfg = get_config("h2o-danube3-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T_prompt, T_gen = 4, 16, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, T_prompt), 0,
+                                cfg.vocab_size)
+    cache = model.init_cache(B, T_prompt + T_gen)
+    step = jax.jit(model.decode_step)
+    # prefill token-by-token (cache path), then generate
+    for t in range(T_prompt):
+        logits, cache = step(params, tokens[:, t:t + 1], cache)
+    generated = []
+    cur = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
+    for _ in range(T_gen):
+        generated.append(cur)
+        logits, cache = step(params, cur, cache)
+        cur = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
+    gen = jnp.concatenate(generated, axis=1)
+    assert gen.shape == (B, T_gen)
+    assert bool((gen >= 0).all()) and bool((gen < cfg.vocab_size).all())
+
+
+def test_listing1_api_shape():
+    """The paper's Listing 1, in this framework's Python rendering."""
+    n = 1 << 12
+    data = np.arange(n, dtype=np.float32)
+    datav = 2.5
+
+    runtime = CoexecutorRuntime(policy="hguided")          # line 1
+    runtime.config(units=counits_from_devices(),           # line 2
+                   dist=0.35, memory="usm")
+
+    def kernel(offset, chunk):                             # lines 3-13
+        return chunk * datav
+
+    out = runtime.launch(n, kernel, [data])                # blocking
+    np.testing.assert_allclose(out, data * datav)          # results land
+    assert runtime.last_stats.total_s > 0
