@@ -1,10 +1,17 @@
-"""Step-level co-execution benchmark: policies vs heterogeneous groups.
+"""Step-level co-execution benchmark: policies vs heterogeneous groups,
+plus the package-level scheduler sweep on both execution paths.
 
-The training-loop analogue of Fig. 5: three simulated pod groups with
-1.0/0.5/0.25 relative speeds train the same tiny LM; each policy's mean
-step time (barrier = slowest group) and its final assignment are reported.
-HGuided should approach the optimal 4:2:1 split; Static (equal hints)
-stays at the imbalanced 1:1:1.
+`run()` is the training-loop analogue of Fig. 5: three simulated pod
+groups with 1.0/0.5/0.25 relative speeds train the same tiny LM; each
+policy's mean step time (barrier = slowest group) and its final assignment
+are reported. HGuided should approach the optimal 4:2:1 split; Static
+(equal hints) stays at the imbalanced 1:1:1.
+
+`run_coexec()` sweeps all four package schedulers — static / dynamic /
+hguided / work_stealing — against each other on the DES (paper workload
+profiles, virtual time) AND on the real persistent CoexecEngine (concurrent
+`launch_async` requests, wall time), so a regression in either path shows
+up in the same CSV.
 """
 from __future__ import annotations
 
@@ -20,6 +27,31 @@ from repro.optim import AdamW
 SPEEDS = {"podA": 1.0, "podB": 0.5, "podC": 0.25}
 STEPS = 24
 MICROBATCHES = 14
+
+def run_coexec():
+    """Package-scheduler sweep: DES (sim) and persistent engine (real).
+
+    The measurement loops live in `repro.launch.serve` (shared with the
+    `serve --coexec {real,sim}` CLI); this wrapper only formats CSV rows.
+    """
+    from repro.launch.serve import coexec_real_rows, coexec_sim_rows
+
+    rows = []
+    # simulated path: one regular + one irregular paper workload
+    for wl_name in ("taylor", "mandelbrot"):
+        for r in coexec_sim_rows(wl_name):
+            rows.append((f"coexec-sim/{wl_name}/{r['policy']}",
+                         round(r["seconds"] * 1e3, 1),
+                         f"packages={r['packages']};"
+                         f"balance={r['balance']:.2f};"
+                         f"steals={r['steals']}"))
+    # real path: concurrent launch_async requests on the engine
+    for r in coexec_real_rows(n=1 << 14, requests=8, concurrent=8):
+        rows.append((f"coexec-real/taylor/{r['policy']}",
+                     round(r["seconds"] * 1e3, 1),
+                     f"requests={r['requests']};packages={r['packages']};"
+                     f"req_per_s={r['req_per_s']:.1f}"))
+    return rows
 
 
 def run():

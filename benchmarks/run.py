@@ -15,6 +15,7 @@ def main() -> None:
     suites = dict(paper_figs.ALL)
     suites["kernels"] = kernel_micro.run
     suites["hetero"] = hetero_bench.run
+    suites["coexec"] = hetero_bench.run_coexec
     suites["roofline"] = roofline_table.run
 
     wanted = sys.argv[1:] or list(suites)

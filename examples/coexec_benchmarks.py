@@ -39,14 +39,14 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=1 << 14)
     args = ap.parse_args()
 
-    units = counits_from_devices(jax.local_devices() * 2,
+    units = counits_from_devices(jax.local_devices()[:1] * 2,
                                  kinds=["cpu", "cpu"],
                                  speed_hints=[0.5, 0.5])
     for name in ("taylor", "mandelbrot", "ray", "rap"):
         ins = inputs_for(name, args.n)
         total = len(ins[0])
         print(f"== {name} ({total} items)")
-        for policy in ("static", "dyn16", "hguided"):
+        for policy in ("static", "dyn16", "hguided", "work_stealing"):
             rt = CoexecutorRuntime(policy).config(units=units, dist=0.5)
             t0 = time.perf_counter()
             rt.launch(total, package_kernel(name), ins)

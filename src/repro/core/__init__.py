@@ -2,7 +2,11 @@
 
 Public surface:
     CoexecutorRuntime, counits_from_devices     — real co-execution (Listing 1)
-    make_scheduler / Static / Dynamic / HGuided — load balancers (§3.2)
+    CoexecEngine, LaunchHandle, LaunchStats     — persistent engine (start/
+                                                  submit/shutdown; concurrent
+                                                  launches interleave)
+    make_scheduler / Static / Dynamic /
+        HGuided / WorkStealing                  — load balancers (§3.2)
     simulate, solo_run, Workload, SimUnit       — DES reproduction engine
     MemoryModel, MemoryCosts                    — USM vs Buffers (§3.1)
     PowerModel, energy_report, edp_ratio        — energy/EDP model (§5.2)
@@ -10,24 +14,28 @@ Public surface:
 """
 from .energy import (EnergyReport, PowerModel, PAPER_POWER, TPU_POWER,
                      edp_ratio, energy_report, geomean)
+from .engine import CoexecEngine, LaunchHandle, LaunchStats
 from .memory import MemoryCosts, MemoryModel, TPU_MEMORY_COSTS
 from .package import Package, Range, validate_cover
 from .profiler import EwmaThroughput, SpeedBoard
-from .runtime import CoexecutorRuntime, LaunchStats, counits_from_devices
-from .scheduler import (DynamicScheduler, HGuidedScheduler, Scheduler,
-                        StaticScheduler, make_scheduler)
+from .runtime import CoexecutorRuntime, counits_from_devices
+from .scheduler import (SPEED_HINT_POLICIES, DynamicScheduler,
+                        HGuidedScheduler, Scheduler, StaticScheduler,
+                        WorkStealingScheduler, make_scheduler, static_bounds)
 from .sim import SimResult, Workload, simulate, solo_run
 from .units import JaxUnit, SimUnit
 from .workloads import (ALL_BENCHMARKS, IRREGULAR, REGULAR, SPECS,
                         paper_workload)
 
 __all__ = [
-    "ALL_BENCHMARKS", "CoexecutorRuntime", "DynamicScheduler",
-    "EnergyReport", "EwmaThroughput", "HGuidedScheduler", "IRREGULAR",
-    "JaxUnit", "LaunchStats", "MemoryCosts", "MemoryModel", "PAPER_POWER",
-    "Package", "PowerModel", "REGULAR", "Range", "SPECS", "Scheduler",
-    "SimResult", "SimUnit", "SpeedBoard", "StaticScheduler",
-    "TPU_MEMORY_COSTS", "TPU_POWER", "Workload", "counits_from_devices",
-    "edp_ratio", "energy_report", "geomean", "make_scheduler",
-    "paper_workload", "simulate", "solo_run", "validate_cover",
+    "ALL_BENCHMARKS", "CoexecEngine", "CoexecutorRuntime",
+    "DynamicScheduler", "EnergyReport", "EwmaThroughput", "HGuidedScheduler",
+    "IRREGULAR", "JaxUnit", "LaunchHandle", "LaunchStats", "MemoryCosts",
+    "MemoryModel", "PAPER_POWER", "Package", "PowerModel", "REGULAR",
+    "Range", "SPECS", "SPEED_HINT_POLICIES", "Scheduler", "SimResult",
+    "SimUnit", "SpeedBoard",
+    "StaticScheduler", "TPU_MEMORY_COSTS", "TPU_POWER",
+    "WorkStealingScheduler", "Workload", "counits_from_devices", "edp_ratio",
+    "energy_report", "geomean", "make_scheduler", "paper_workload",
+    "simulate", "solo_run", "static_bounds", "validate_cover",
 ]

@@ -1,44 +1,56 @@
-"""Director + Commander loop — the real (threaded) execution engine.
+"""Director — blocking-launch compatibility facade over the CoexecEngine.
 
-Mirrors the paper's execution model (Fig. 2a): the Director configures the
-Coexecution Units and owns the Commander, which packages work, emits tasks
-and collects completion events. Each unit gets a management thread; the
-application-facing `launch` call blocks until the whole index space has been
-computed and collected, while everything inside runs asynchronously.
+Historically the Director spawned one management thread per Coexecution
+Unit on *every* launch and joined them before returning — the per-launch
+engine the paper's antecedent EngineCL shows cannot keep management
+overhead under 1%. The execution core now lives in
+:class:`~.engine.CoexecEngine` (persistent worker threads, multi-tenant
+launch queue); the Director survives as the thin blocking wrapper that
+mirrors the paper's Fig. 2a vocabulary: configure the units, run the
+Commander protocol over one index space, merge the results.
 
-The memory model determines collection:
+The memory-model semantics are unchanged:
 * USM     — units write their slices directly into one shared host output
-            array (the logically-unified allocation); collection is a no-op
-            beyond the event itself.
-* BUFFERS — each package's output chunk is returned as a separate buffer and
-            the Commander merges it into the host container (explicit copy).
+            array (the logically-unified allocation).
+* BUFFERS — each package's output chunk is a separate buffer merged into
+            the host container (explicit copy, same destination here).
 """
 from __future__ import annotations
 
-import threading
-import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
+from .engine import CoexecEngine
 from .memory import MemoryModel
-from .package import Package, validate_cover
-from .profiler import SpeedBoard
-from .scheduler import HGuidedScheduler, Scheduler
+from .package import Package
+from .scheduler import Scheduler
 from .units import JaxUnit
 
 
 class Director:
-    """Configures units, runs the Commander loop, merges results."""
+    """Configures units, drives one blocking co-execution at a time.
+
+    Owns a lazily-started persistent engine; repeated ``launch`` calls
+    reuse the same worker threads (and the same SpeedBoard, so adaptive
+    policies keep their learned speeds across launches).
+    """
 
     def __init__(self, units: Sequence[JaxUnit], *,
                  memory: MemoryModel = MemoryModel.USM):
-        if not units:
-            raise ValueError("need at least one Coexecution Unit")
-        self.units = list(units)
-        self.memory = memory
-        self.board = SpeedBoard(len(units),
-                                hints=[u.speed_hint for u in units])
+        self.engine = CoexecEngine(units, memory=memory)
+
+    @property
+    def units(self) -> list[JaxUnit]:
+        return self.engine.units
+
+    @property
+    def memory(self) -> MemoryModel:
+        return self.engine.memory
+
+    @property
+    def board(self):
+        return self.engine.board
 
     def launch(self, scheduler: Scheduler, kernel: Callable,
                inputs: Sequence[np.ndarray], out: np.ndarray,
@@ -48,48 +60,25 @@ class Director:
         kernel(offset_scalar, *chunks) -> chunk_out ; chunks are the package
         slices of `inputs` (padded to the unit's size bucket).
         """
-        lock = threading.Lock()          # guards the scheduler
-        errors: list[BaseException] = []
-        done: list[Package] = []
+        self.engine.start()
+        handle = self.engine.submit(scheduler, kernel, inputs, out,
+                                    adaptive=adaptive)
+        handle.result()          # re-raises the first package error, if any
+        return handle.stats.packages
 
-        def manager(unit_idx: int) -> None:
-            unit = self.units[unit_idx]
-            while True:
-                with lock:
-                    if adaptive and isinstance(scheduler, HGuidedScheduler):
-                        for i, s in enumerate(self.board.speeds()):
-                            scheduler.update_speed(i, s)
-                    pkg = scheduler.next_package(unit_idx)
-                if pkg is None:
-                    return
-                pkg.t_issue = time.perf_counter()
-                try:
-                    chunk = unit.run_package(kernel, pkg.offset, pkg.size,
-                                             inputs)
-                except BaseException as e:  # surface on the caller thread
-                    errors.append(e)
-                    return
-                pkg.t_complete = time.perf_counter()
-                # collection: USM writes in place into the shared container;
-                # BUFFERS performs an explicit merge copy (same destination,
-                # but modeled/accounted as a copy, and chunk is a separate
-                # buffer either way on this substrate).
-                out[pkg.offset:pkg.offset + pkg.size] = chunk
-                pkg.t_collected = time.perf_counter()
-                self.board.record(unit_idx, pkg.size,
-                                  max(pkg.t_complete - pkg.t_issue, 1e-9))
-                with lock:
-                    done.append(pkg)
+    def shutdown(self) -> None:
+        self.engine.shutdown()
 
-        threads = [threading.Thread(target=manager, args=(i,),
-                                    name=f"counit-{self.units[i].name}",
-                                    daemon=True)
-                   for i in range(len(self.units))]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        if errors:
-            raise errors[0]
-        validate_cover(done, scheduler.total)
-        return done
+    def __enter__(self) -> "Director":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def __del__(self) -> None:
+        # stop the (daemon) workers of a dropped Director so per-request
+        # Director construction cannot accumulate parked threads
+        try:
+            self.engine.shutdown(wait=False)
+        except Exception:
+            pass

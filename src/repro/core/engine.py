@@ -1,0 +1,293 @@
+"""Persistent co-execution engine (EngineCL-style, arXiv:1805.02755).
+
+The paper's antecedent EngineCL shows that co-execution management overhead
+stays under 1% only when the runtime is a *persistent engine*: worker threads
+are created once and fed work, instead of being spawned and joined per
+launch. This module provides that engine for the Coexecutor Runtime:
+
+* one long-lived management thread per Coexecution Unit, started by
+  :meth:`CoexecEngine.start` and parked on a condition variable when idle;
+* a multi-tenant launch queue — any number of callers may
+  :meth:`CoexecEngine.submit` co-executions concurrently; packages from all
+  in-flight launches interleave on the same units (FIFO between launches,
+  on-demand within a launch, exactly the Commander protocol of Fig. 2a);
+* per-launch isolation — each launch owns its scheduler, output container,
+  package log and :class:`LaunchStats`; completion is surfaced through a
+  :class:`LaunchHandle` future, so independent callers never observe each
+  other's state;
+* a persistent :class:`~.profiler.SpeedBoard` — throughput measured on
+  earlier launches seeds the adaptive (HGuided) speed refinement of later
+  ones, which a per-launch thread pool could never do.
+
+Lifecycle::
+
+    engine = CoexecEngine(units)
+    engine.start()
+    h1 = engine.submit(sched1, kernel_a, inputs_a, out_a)
+    h2 = engine.submit(sched2, kernel_b, inputs_b, out_b)   # interleaves
+    out_a = h1.result(); out_b = h2.result()
+    engine.shutdown()            # drains in-flight launches, joins threads
+
+or, scoped::
+
+    with CoexecEngine(units) as engine:
+        out = engine.submit(sched, kernel, inputs, out).result()
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .memory import MemoryModel
+from .package import Package, validate_cover
+from .profiler import SpeedBoard
+from .scheduler import HGuidedScheduler, Scheduler
+from .units import JaxUnit
+
+
+@dataclasses.dataclass
+class LaunchStats:
+    """Per-launch metrics mirroring the paper's measurements.
+
+    Isolated per submit: concurrent launches on the same engine each get
+    their own instance (busy seconds are derived from this launch's
+    packages only, never from cumulative unit counters).
+    """
+
+    total_s: float
+    packages: list[Package]
+    unit_busy_s: dict[str, float]
+
+    @property
+    def num_packages(self) -> int:
+        return len(self.packages)
+
+
+class LaunchHandle:
+    """Future for one submitted co-execution.
+
+    ``result()`` blocks until the launch's whole index space has been
+    computed and collected, then returns the output container. ``stats``
+    is populated before the future resolves.
+    """
+
+    def __init__(self, launch_id: int):
+        self.launch_id = launch_id
+        self.stats: Optional[LaunchStats] = None
+        self._future: concurrent.futures.Future = concurrent.futures.Future()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        return self._future.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._future.exception(timeout)
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    @property
+    def packages(self) -> list[Package]:
+        return self.stats.packages if self.stats is not None else []
+
+
+class _Launch:
+    """Engine-internal state of one in-flight co-execution."""
+
+    __slots__ = ("id", "scheduler", "kernel", "inputs", "out", "adaptive",
+                 "handle", "outstanding", "done_pkgs", "failed", "finalized",
+                 "t_submit")
+
+    def __init__(self, launch_id: int, scheduler: Scheduler, kernel: Callable,
+                 inputs: Sequence[np.ndarray], out: np.ndarray,
+                 adaptive: bool):
+        self.id = launch_id
+        self.scheduler = scheduler
+        self.kernel = kernel
+        self.inputs = inputs
+        self.out = out
+        self.adaptive = adaptive
+        self.handle = LaunchHandle(launch_id)
+        self.outstanding = 0          # issued but not yet collected
+        self.done_pkgs: list[Package] = []
+        self.failed = False
+        self.finalized = False
+        self.t_submit = time.perf_counter()
+
+
+class CoexecEngine:
+    """Long-lived per-unit worker threads fed from a multi-tenant queue."""
+
+    def __init__(self, units: Sequence[JaxUnit], *,
+                 memory: MemoryModel = MemoryModel.USM):
+        if not units:
+            raise ValueError("need at least one Coexecution Unit")
+        self.units = list(units)
+        self.memory = memory
+        self.board = SpeedBoard(len(self.units),
+                                hints=[u.speed_hint for u in self.units])
+        self._cv = threading.Condition()
+        self._launches: list[_Launch] = []   # active, FIFO submit order
+        self._ids = itertools.count()
+        self._threads: list[threading.Thread] = []
+        self._stop = False
+        self._started = False
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._started and not self._stop
+
+    def start(self) -> "CoexecEngine":
+        """Spawn the per-unit management threads (idempotent)."""
+        with self._cv:
+            if self._started:
+                if self._stop:
+                    raise RuntimeError("engine was shut down; build a new one")
+                return self
+            self._started = True
+            self._threads = [
+                threading.Thread(target=self._worker, args=(i,),
+                                 name=f"counit-{u.name}-{i}", daemon=True)
+                for i, u in enumerate(self.units)]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting launches; drain in-flight ones, join workers."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join()
+
+    def __enter__(self) -> "CoexecEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- submission --------------------------------------------------------
+    def submit(self, scheduler: Scheduler, kernel: Callable,
+               inputs: Sequence[np.ndarray], out: np.ndarray,
+               *, adaptive: bool = True) -> LaunchHandle:
+        """Enqueue one co-execution; returns immediately with its handle.
+
+        The scheduler must be built for this engine's unit count. Packages
+        are pulled on demand by whichever units go idle, interleaved with
+        every other in-flight launch.
+        """
+        if scheduler.num_units != len(self.units):
+            raise ValueError(
+                f"scheduler built for {scheduler.num_units} units, engine "
+                f"has {len(self.units)}")
+        if scheduler.issued or scheduler.done():
+            # A drained scheduler would hand out no packages, so the launch
+            # could never reach its completion path (and would wedge
+            # shutdown's drain). Schedulers are one-shot by design.
+            raise ValueError("scheduler has already issued work; build a "
+                             "fresh scheduler per launch")
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("engine is shut down")
+            if not self._started:
+                raise RuntimeError("engine not started; call start() first "
+                                   "(or use it as a context manager)")
+            launch = _Launch(next(self._ids), scheduler, kernel, inputs, out,
+                             adaptive)
+            self._launches.append(launch)
+            self._cv.notify_all()
+        return launch.handle
+
+    # -- worker loop -------------------------------------------------------
+    def _next_work(self, unit_idx: int) -> Optional[tuple[_Launch, Package]]:
+        """Pull the next package for `unit_idx` (caller holds the cv)."""
+        for launch in self._launches:
+            if launch.failed:
+                continue
+            sched = launch.scheduler
+            if launch.adaptive and isinstance(sched, HGuidedScheduler):
+                for i, s in enumerate(self.board.speeds()):
+                    sched.update_speed(i, s)
+            pkg = sched.next_package(unit_idx)
+            if pkg is not None:
+                launch.outstanding += 1
+                return launch, pkg
+        return None
+
+    def _finalize_locked(self, launch: _Launch) -> None:
+        """Resolve a launch whose last package was collected (cv held)."""
+        if launch.finalized:
+            return
+        launch.finalized = True
+        if launch in self._launches:
+            self._launches.remove(launch)
+        try:
+            validate_cover(launch.done_pkgs, launch.scheduler.total)
+        except BaseException as e:
+            launch.handle._future.set_exception(e)
+            return
+        busy: dict[str, float] = {u.name: 0.0 for u in self.units}
+        for p in launch.done_pkgs:
+            busy[self.units[p.unit].name] += max(p.t_complete - p.t_issue, 0.0)
+        launch.handle.stats = LaunchStats(
+            total_s=time.perf_counter() - launch.t_submit,
+            packages=list(launch.done_pkgs),
+            unit_busy_s=busy)
+        launch.handle._future.set_result(launch.out)
+
+    def _fail_locked(self, launch: _Launch, err: BaseException) -> None:
+        """Abort a launch on its first package error (cv held)."""
+        if launch.failed or launch.finalized:
+            return
+        launch.failed = True
+        launch.finalized = True
+        if launch in self._launches:
+            self._launches.remove(launch)
+        launch.handle._future.set_exception(err)
+
+    def _worker(self, unit_idx: int) -> None:
+        unit = self.units[unit_idx]
+        while True:
+            with self._cv:
+                work = self._next_work(unit_idx)
+                while work is None:
+                    if self._stop and not self._launches:
+                        return
+                    # Park until a submit / completion / shutdown wakes us.
+                    # The timeout is a safety net against lost wakeups only.
+                    self._cv.wait(timeout=0.1)
+                    work = self._next_work(unit_idx)
+            launch, pkg = work
+            pkg.t_issue = time.perf_counter()
+            try:
+                chunk = unit.run_package(launch.kernel, pkg.offset, pkg.size,
+                                         launch.inputs)
+                pkg.t_complete = time.perf_counter()
+                # collection: USM writes in place into the launch's shared
+                # container; BUFFERS is the same destination on this
+                # substrate but modeled as an explicit merge copy.
+                launch.out[pkg.offset:pkg.offset + pkg.size] = chunk
+                pkg.t_collected = time.perf_counter()
+            except BaseException as e:
+                with self._cv:
+                    launch.outstanding -= 1
+                    self._fail_locked(launch, e)
+                    self._cv.notify_all()
+                continue
+            self.board.record(unit_idx, pkg.size,
+                              max(pkg.t_complete - pkg.t_issue, 1e-9))
+            with self._cv:
+                launch.outstanding -= 1
+                launch.done_pkgs.append(pkg)
+                if (not launch.failed and launch.scheduler.done()
+                        and launch.outstanding == 0):
+                    self._finalize_locked(launch)
+                self._cv.notify_all()

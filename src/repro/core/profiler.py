@@ -36,16 +36,37 @@ class EwmaThroughput:
 
 
 class SpeedBoard:
-    """Thread-safe per-unit throughput board shared with the Scheduler."""
+    """Thread-safe per-unit throughput board shared with the Scheduler.
+
+    On the persistent engine one board outlives every launch: speeds
+    learned from earlier launches' packages seed the adaptive (HGuided)
+    refinement of later ones. Cumulative busy/items counters let callers
+    compute utilization over the engine's lifetime; per-launch stats are
+    kept separately (from each launch's own packages) so concurrent
+    launches stay isolated.
+    """
 
     def __init__(self, num_units: int, hints: list[float] | None = None):
         self._ewma = [EwmaThroughput() for _ in range(num_units)]
         self._hints = list(hints) if hints else [1.0] * num_units
+        self._busy_s = [0.0] * num_units
+        self._items = [0.0] * num_units
         self._lock = threading.Lock()
 
     def record(self, unit: int, items: float, seconds: float) -> None:
         with self._lock:
             self._ewma[unit].update(items, seconds)
+            self._busy_s[unit] += max(seconds, 0.0)
+            self._items[unit] += items
+
+    def snapshot(self) -> dict[int, dict[str, float]]:
+        """Point-in-time view: {unit: {speed, busy_s, items}} (lifetime)."""
+        with self._lock:
+            return {i: {"speed": (e.value if e.value > 0 else hint),
+                        "busy_s": b, "items": n}
+                    for i, (e, hint, b, n)
+                    in enumerate(zip(self._ewma, self._hints,
+                                     self._busy_s, self._items))}
 
     def speeds(self) -> list[float]:
         """Measured speeds, falling back to hints before observations."""

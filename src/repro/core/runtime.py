@@ -6,27 +6,37 @@ Python rendering of the paper's C++ API::
     rt.config(units=counits_cpu_gpu(), dist=0.35, memory="usm")
     out = rt.launch(n, kernel, inputs)           # blocking co-execution
 
+    h1 = rt.launch_async(n, kernel_a, inputs_a)  # non-blocking: a Future
+    h2 = rt.launch_async(m, kernel_b, inputs_b)  # co-executions interleave
+    out_a, out_b = h1.result(), h2.result()
+
 `kernel(offset, *chunks) -> chunk_out` is a pure JAX function over a package
 slice — the analogue of the SYCL command-group lambda. The runtime splits the
 index space with the configured load balancer, co-executes on all units, and
 the results land in the expected host container, exactly as the paper
 describes ("the data resulting from the computation will be in the expected
 data structures").
+
+Execution is backed by a persistent :class:`~.engine.CoexecEngine` (started
+on first launch, reused across launches): many co-executions from
+independent callers interleave safely on the same units, each with its own
+scheduler and :class:`~.engine.LaunchStats`. ``shutdown()`` (or use as a
+context manager) drains the engine and joins its worker threads.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 import jax
 
-from .director import Director
+from .engine import CoexecEngine, LaunchHandle, LaunchStats
 from .memory import MemoryModel
-from .package import Package
-from .scheduler import make_scheduler
+from .scheduler import SPEED_HINT_POLICIES, make_scheduler
 from .units import JaxUnit
+
+__all__ = ["CoexecutorRuntime", "LaunchStats", "counits_from_devices"]
 
 
 def counits_from_devices(devices: Optional[Sequence["jax.Device"]] = None,
@@ -41,26 +51,20 @@ def counits_from_devices(devices: Optional[Sequence["jax.Device"]] = None,
     """
     devices = list(devices if devices is not None else jax.local_devices())
     units = []
+    seen: dict[str, int] = {}
     for i, d in enumerate(devices):
         kind = (kinds[i] if kinds else
                 ("tpu" if d.platform == "tpu" else d.platform))
         hint = speed_hints[i] if speed_hints else 1.0
-        units.append(JaxUnit(f"{d.platform}:{d.id}", d, kind=kind,
-                             speed_hint=hint))
+        name = f"{d.platform}:{d.id}"
+        # the same device may back several units (the CPU-only container's
+        # two-unit setup); names must stay unique or per-unit stats merge
+        n = seen.get(name, 0)
+        seen[name] = n + 1
+        if n:
+            name = f"{name}#{n}"
+        units.append(JaxUnit(name, d, kind=kind, speed_hint=hint))
     return units
-
-
-@dataclasses.dataclass
-class LaunchStats:
-    """Per-launch metrics mirroring the paper's measurements."""
-
-    total_s: float
-    packages: list[Package]
-    unit_busy_s: dict[str, float]
-
-    @property
-    def num_packages(self) -> int:
-        return len(self.packages)
 
 
 class CoexecutorRuntime:
@@ -72,6 +76,7 @@ class CoexecutorRuntime:
         self._memory = MemoryModel.USM
         self._dist: Optional[Sequence[float]] = None
         self._scheduler_kw: dict = {}
+        self._engine: Optional[CoexecEngine] = None
         self.last_stats: Optional[LaunchStats] = None
 
     # -- configuration (paper: runtime.config(CounitSet::CpuGpu, dist(0.35)))
@@ -91,29 +96,72 @@ class CoexecutorRuntime:
         self._memory = (memory if isinstance(memory, MemoryModel)
                         else MemoryModel(str(memory).lower()))
         self._scheduler_kw = scheduler_kw
+        # a reconfigure invalidates the running engine (units/memory change)
+        self.shutdown()
         return self
 
+    # -- engine lifecycle ---------------------------------------------------
+    @property
+    def engine(self) -> Optional[CoexecEngine]:
+        """The persistent engine, if one has been started."""
+        return self._engine
+
+    def _get_engine(self) -> CoexecEngine:
+        if self._engine is None or not self._engine.running:
+            if self._units is None:
+                self._units = counits_from_devices()
+            self._engine = CoexecEngine(self._units,
+                                        memory=self._memory).start()
+        return self._engine
+
+    def shutdown(self) -> None:
+        """Drain in-flight launches and join the engine's workers."""
+        if self._engine is not None:
+            self._engine.shutdown()
+            self._engine = None
+
+    def __enter__(self) -> "CoexecutorRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
     # -- launch (paper: runtime.launch(size, lambda)) -----------------------
+    def launch_async(self, total: int, kernel: Callable,
+                     inputs: Sequence[np.ndarray],
+                     out: Optional[np.ndarray] = None,
+                     *, out_dtype=np.float32,
+                     out_trailing_shape: tuple = (),
+                     granularity: int = 1) -> LaunchHandle:
+        """Non-blocking co-execution: returns a :class:`LaunchHandle`.
+
+        Any number of launches may be in flight at once; their packages
+        interleave on the engine's units, and each handle carries its own
+        isolated stats. ``handle.result()`` blocks until this launch's
+        whole index space is computed and collected.
+        """
+        engine = self._get_engine()
+        kw = dict(self._scheduler_kw)
+        if self.policy.lower().replace("-", "_") in SPEED_HINT_POLICIES \
+                and self._dist:
+            kw.setdefault("speeds", list(self._dist))
+        sched = make_scheduler(self.policy, total, len(engine.units),
+                               granularity=granularity, **kw)
+        if out is None:
+            out = np.zeros((total, *out_trailing_shape), dtype=out_dtype)
+        return engine.submit(sched, kernel, inputs, out)
+
     def launch(self, total: int, kernel: Callable,
                inputs: Sequence[np.ndarray],
                out: Optional[np.ndarray] = None,
                *, out_dtype=np.float32,
                out_trailing_shape: tuple = (),
                granularity: int = 1) -> np.ndarray:
-        units = self._units if self._units is not None else counits_from_devices()
-        kw = dict(self._scheduler_kw)
-        if self.policy.lower() in ("static", "hguided") and self._dist:
-            kw.setdefault("speeds", list(self._dist))
-        sched = make_scheduler(self.policy, total, len(units),
-                               granularity=granularity, **kw)
-        if out is None:
-            out = np.zeros((total, *out_trailing_shape), dtype=out_dtype)
-        director = Director(units, memory=self._memory)
-        import time as _time
-        t0 = _time.perf_counter()
-        pkgs = director.launch(sched, kernel, inputs, out)
-        total_s = _time.perf_counter() - t0
-        self.last_stats = LaunchStats(
-            total_s=total_s, packages=pkgs,
-            unit_busy_s={u.name: u.busy_s for u in units})
-        return out
+        """Blocking co-execution — a thin wrapper over :meth:`launch_async`."""
+        handle = self.launch_async(total, kernel, inputs, out,
+                                   out_dtype=out_dtype,
+                                   out_trailing_shape=out_trailing_shape,
+                                   granularity=granularity)
+        result = handle.result()
+        self.last_stats = handle.stats
+        return result

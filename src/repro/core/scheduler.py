@@ -1,30 +1,40 @@
 """Load-balancing algorithms of the Coexecutor Runtime (paper §3.2).
 
-Three policies, implemented exactly as defined in the paper and its
-antecedents (Maat [15], EngineCL [16], HGuided [18]):
+Three policies implemented exactly as defined in the paper and its
+antecedents (Maat [15], EngineCL [16], HGuided [18]), plus a fourth from
+the same dynamic-policy family the paper argues for:
 
-* ``Static``    — one package per unit, sized proportionally to the unit's
-                  relative computing speed. Minimal management; cannot adapt.
-* ``Dynamic``   — N equal packages, handed to units on demand as they go
-                  idle. Adapts to irregularity; pays one host⇄device round
-                  trip per package.
-* ``HGuided``   — package size for unit *i* when ``rem`` items remain:
-                  ``max(min_pkg, rem * speed_i / (K * sum(speeds)))``,
-                  so packages start large (∝ speed) and shrink as the
-                  execution progresses. Few synchronisation points, near-1.0
-                  balance, no per-benchmark tuning parameter.
+* ``Static``        — one package per unit, sized proportionally to the
+                      unit's relative computing speed. Minimal management;
+                      cannot adapt.
+* ``Dynamic``       — N equal packages, handed to units on demand as they
+                      go idle. Adapts to irregularity; pays one host⇄device
+                      round trip per package.
+* ``HGuided``       — package size for unit *i* when ``rem`` items remain:
+                      ``max(min_pkg, rem * speed_i / (K * sum(speeds)))``,
+                      so packages start large (∝ speed) and shrink as the
+                      execution progresses. Few synchronisation points,
+                      near-1.0 balance, no per-benchmark tuning parameter.
+* ``WorkStealing``  — per-unit deques seeded by the static split and chopped
+                      into chunks; a unit drains its own deque and, when
+                      empty, steals half the remainder of the most-loaded
+                      victim. Adapts like Dynamic but without the central
+                      remaining-work cursor every package request contends
+                      on — the natural fit for the persistent engine, where
+                      packages of many concurrent launches interleave.
 
 All schedulers hand out contiguous ranges aligned to ``granularity`` (the
 kernel's local work size / hardware vector width), except possibly the final
 package which takes whatever remains.
 
-Thread-safety: `next_package` is called under the Director's lock (real
-runtime) or single-threaded (simulator); schedulers themselves are not
-internally locked.
+Thread-safety: `next_package` is called under the Director's/engine's
+per-launch lock (real runtime) or single-threaded (simulator); schedulers
+themselves are not internally locked.
 """
 from __future__ import annotations
 
 import abc
+import collections
 import math
 from typing import Optional, Sequence
 
@@ -33,6 +43,26 @@ from .package import Package, Range
 
 def _align_up(x: int, g: int) -> int:
     return ((x + g - 1) // g) * g
+
+
+def static_bounds(total: int, speeds: Sequence[float],
+                  granularity: int = 1) -> list[int]:
+    """Monotone, granularity-aligned region boundaries ∝ relative speed.
+
+    Returns ``len(speeds) + 1`` cumulative boundaries with ``bounds[0] == 0``
+    and ``bounds[-1] == total``: exact cover by construction (the tail unit
+    absorbs any alignment remainder; a unit whose share rounds to zero gets
+    an empty region). Shared by the Static and WorkStealing seeds.
+    """
+    tot_speed = sum(speeds)
+    cum = 0.0
+    bounds = [0]
+    for s in list(speeds)[:-1]:
+        cum += total * s / tot_speed
+        b = _align_up(int(round(cum)), granularity)
+        bounds.append(min(max(b, bounds[-1]), total))
+    bounds.append(total)
+    return bounds
 
 
 class Scheduler(abc.ABC):
@@ -98,17 +128,9 @@ class StaticScheduler(Scheduler):
             raise ValueError("speeds must be positive")
         self.speeds = [float(s) for s in speeds]
         # Precompute the split from aligned cumulative boundaries: exact
-        # cover by construction (monotone boundaries, last pinned to
-        # `total`); a unit whose share rounds to zero simply gets no
-        # package. The tail unit absorbs any alignment remainder.
-        tot_speed = sum(self.speeds)
-        cum = 0.0
-        bounds = [0]
-        for s in self.speeds[:-1]:
-            cum += total * s / tot_speed
-            b = _align_up(int(round(cum)), granularity)
-            bounds.append(min(max(b, bounds[-1]), total))
-        bounds.append(total)
+        # cover by construction; a unit whose share rounds to zero simply
+        # gets no package.
+        bounds = static_bounds(total, self.speeds, granularity)
         self._sizes = [bounds[i + 1] - bounds[i] for i in range(num_units)]
         self._bounds = bounds
         self._served: set[int] = set()
@@ -192,16 +214,111 @@ class HGuidedScheduler(Scheduler):
             self.speeds[unit] = float(speed)
 
 
+class WorkStealingScheduler(Scheduler):
+    """Per-unit deques seeded by the static split; idle units steal.
+
+    Seeding: unit *i*'s region ``[bounds[i], bounds[i+1])`` (∝ speed, same
+    boundaries as `Static`) is chopped into granularity-aligned chunks of
+    ``~region/chunks_per_unit`` items, queued oldest-first in its own deque.
+
+    Serving: ``next_package(i)`` pops the front of deque *i*. When the deque
+    is empty the unit steals **half the remainder** (by chunk count, from
+    the far end, preserving the victim's locality) of the most-loaded
+    victim. ``None`` is returned only when every deque is empty — a unit
+    never retires while any work remains anywhere, which is the termination
+    property the Commander loop relies on.
+
+    Compared to `Dynamic`/`HGuided`, there is no central remaining-work
+    cursor: units touch shared state only on the (rare) steal path, so many
+    concurrent launches on a persistent engine do not serialize on one
+    cursor per package request. The total package count is fixed at seed
+    time (steals move chunks, never split them), making the package count
+    identical between the real engine and the DES for a given problem.
+    """
+
+    name = "work_stealing"
+
+    def __init__(self, total: int, num_units: int, *,
+                 speeds: Optional[Sequence[float]] = None,
+                 chunks_per_unit: int = 8,
+                 chunk_items: Optional[int] = None,
+                 granularity: int = 1):
+        super().__init__(total, num_units, granularity=granularity)
+        if speeds is None:
+            speeds = [1.0] * num_units
+        if len(speeds) != num_units:
+            raise ValueError("speeds length must match num_units")
+        if any(s <= 0 for s in speeds):
+            raise ValueError("speeds must be positive")
+        if chunks_per_unit <= 0:
+            raise ValueError("chunks_per_unit must be positive")
+        if chunk_items is not None and chunk_items <= 0:
+            raise ValueError("chunk_items must be positive")
+        self.speeds = [float(s) for s in speeds]
+        self.steals = 0
+        bounds = static_bounds(total, self.speeds, granularity)
+        self._deques: list[collections.deque[Range]] = []
+        self._load = [0] * num_units        # un-issued items per deque
+        for i in range(num_units):
+            lo, hi = bounds[i], bounds[i + 1]
+            dq: collections.deque[Range] = collections.deque()
+            if hi > lo:
+                step = (chunk_items if chunk_items is not None
+                        else max(1, math.ceil((hi - lo) / chunks_per_unit)))
+                step = _align_up(step, granularity)
+                for off in range(lo, hi, step):
+                    dq.append(Range(off, min(step, hi - off)))
+            self._deques.append(dq)
+            self._load[i] = hi - lo
+
+    def _package_size(self, unit: int) -> int:  # pragma: no cover - unused
+        dq = self._deques[unit]
+        return dq[0].size if dq else 0
+
+    def _steal_into(self, unit: int) -> None:
+        victim = max((j for j in range(self.num_units) if j != unit),
+                     key=lambda j: self._load[j], default=None)
+        if victim is None or self._load[victim] == 0:
+            return
+        vq = self._deques[victim]
+        take = (len(vq) + 1) // 2
+        stolen = [vq.pop() for _ in range(take)]
+        moved = sum(r.size for r in stolen)
+        self._load[victim] -= moved
+        self._load[unit] += moved
+        # re-reverse so the thief also serves its loot in ascending order
+        self._deques[unit].extend(reversed(stolen))
+        self.steals += 1
+
+    def next_package(self, unit: int) -> Optional[Package]:
+        dq = self._deques[unit]
+        if not dq:
+            self._steal_into(unit)
+        if not dq:
+            return None
+        rng = dq.popleft()
+        self._load[unit] -= rng.size
+        pkg = Package(rng=rng, seq=self._seq, unit=unit)
+        self._seq += 1
+        self._cursor += rng.size
+        self.issued.append(pkg)
+        return pkg
+
+
 _REGISTRY = {
     "static": StaticScheduler,
     "dynamic": DynamicScheduler,
     "hguided": HGuidedScheduler,
+    "work_stealing": WorkStealingScheduler,
 }
+
+# policies whose constructor takes a `speeds` hint (the paper's dist(0.35))
+SPEED_HINT_POLICIES = ("static", "hguided", "work_stealing")
 
 
 def make_scheduler(policy: str, total: int, num_units: int, **kw) -> Scheduler:
     """Factory: ``make_scheduler("hguided", n, 2, speeds=[0.35, 0.65])``."""
-    key = policy.lower()
+    key = policy.lower().replace("-", "_")
     if key.startswith("dyn") and key != "dynamic":
         # convenience: "dyn5" / "dyn200" → Dynamic with N packages
         kw.setdefault("num_packages", int(key[3:]))

@@ -98,10 +98,13 @@ class JaxUnit:
         # One jit per kernel; the package-size *bucket* is implicit in the
         # padded chunk shape, so XLA caches one executable per bucket.
         # Computation placement follows the committed (device_put) inputs.
-        got = self._compiled.get(fn)
-        if got is None:
-            got = jax.jit(fn)
-            self._compiled[fn] = got
+        # Locked: one unit may be shared by several engines/directors, whose
+        # worker threads race on first-compile of the same kernel.
+        with self._lock:
+            got = self._compiled.get(fn)
+            if got is None:
+                got = jax.jit(fn)
+                self._compiled[fn] = got
         return got
 
     # -- execution ---------------------------------------------------------

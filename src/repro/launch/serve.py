@@ -1,16 +1,123 @@
-"""Serving launcher: batched request loop over the cached decode path.
+"""Serving launcher: batched request loop over the cached decode path,
+plus a co-execution request server over the persistent CoexecEngine.
 
-Requests are (prompt, max_tokens) pairs batched up to --batch; generation
-is greedy. Reduced configs run on this host; full configs serve via the
-dry-run path (compile-only proof).
+Default (LM) mode: requests are (prompt, max_tokens) pairs batched up to
+--batch; generation is greedy. Reduced configs run on this host; full
+configs serve via the dry-run path (compile-only proof).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --requests 16 --batch 4
+
+Co-execution mode: each "request" is one data-parallel kernel launch
+served through `CoexecutorRuntime.launch_async` on a long-lived engine —
+up to --concurrent launches interleave on the same Coexecution Units.
+`--policy all` sweeps work_stealing against static/dynamic/hguided; with
+`--coexec sim` the same sweep runs on the DES instead of real threads.
+
+    PYTHONPATH=src python -m repro.launch.serve --coexec real \
+        --policy all --requests 16 --concurrent 8 --n 65536
+    PYTHONPATH=src python -m repro.launch.serve --coexec sim \
+        --policy all --workload mandelbrot
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+COEXEC_POLICIES = ("static", "dynamic", "hguided", "work_stealing")
+
+
+def default_two_units():
+    """Two Coexecution Units on this host's first device (the CPU-only
+    container's stand-in for the paper's CPU+GPU pair)."""
+    import jax
+
+    from ..core import counits_from_devices
+
+    return counits_from_devices(jax.local_devices()[:1] * 2,
+                                kinds=["cpu", "cpu"],
+                                speed_hints=[0.4, 0.6])
+
+
+def coexec_real_rows(policies=COEXEC_POLICIES, *, n: int = 1 << 16,
+                     requests: int = 16, concurrent: int = 8,
+                     units=None) -> list[dict]:
+    """Serve `requests` kernel launches per policy through the persistent
+    engine (at most `concurrent` in flight); one measurement dict each.
+    Shared by `serve --coexec real` and `benchmarks.run coexec`.
+    """
+    import numpy as np
+
+    from ..core import CoexecutorRuntime
+    from ..kernels import package_kernel
+
+    if units is None:
+        units = default_two_units()
+    rng = np.random.default_rng(0)
+    datas = [rng.uniform(-2, 2, n).astype(np.float32)
+             for _ in range(requests)]
+    kernel = package_kernel("taylor")
+    rows = []
+    for policy in policies:
+        with CoexecutorRuntime(policy) as rt:
+            rt.config(units=units, dist=0.4)
+            rt.launch(n, kernel, [datas[0]])        # warm the jit cache
+            t0 = time.perf_counter()
+            served, pkgs, inflight = 0, 0, []
+            for d in datas:
+                inflight.append(rt.launch_async(n, kernel, [d]))
+                if len(inflight) >= concurrent:
+                    h = inflight.pop(0)
+                    h.result()
+                    served, pkgs = served + 1, pkgs + h.stats.num_packages
+            for h in inflight:
+                h.result()
+                served, pkgs = served + 1, pkgs + h.stats.num_packages
+            dt = time.perf_counter() - t0
+        rows.append(dict(policy=policy, requests=served, n=n,
+                         concurrent=concurrent, seconds=dt, packages=pkgs,
+                         req_per_s=served / dt))
+    return rows
+
+
+def coexec_sim_rows(workload: str,
+                    policies=COEXEC_POLICIES) -> list[dict]:
+    """The same policy sweep on the DES (virtual time, deterministic)."""
+    from ..core import SPEED_HINT_POLICIES, make_scheduler, paper_workload, \
+        simulate
+
+    wl, cpu, gpu = paper_workload(workload)
+    rows = []
+    for policy in policies:
+        kw = {}
+        if policy in SPEED_HINT_POLICIES:
+            kw["speeds"] = [cpu.speed, gpu.speed]
+        sched = make_scheduler(policy, wl.total, 2, **kw)
+        r = simulate(sched, [cpu, gpu], wl)
+        rows.append(dict(workload=workload, policy=policy,
+                         seconds=r.total_s, packages=r.num_packages,
+                         balance=r.balance(),
+                         steals=getattr(sched, "steals", 0)))
+    return rows
+
+
+def serve_coexec_real(args) -> None:
+    policies = (COEXEC_POLICIES if args.policy == "all" else (args.policy,))
+    for row in coexec_real_rows(policies, n=args.n, requests=args.requests,
+                                concurrent=args.concurrent):
+        print(f"[serve/coexec] {row['policy']:13s}: {row['requests']} "
+              f"requests ({row['concurrent']} in flight) in "
+              f"{row['seconds']:.3f}s = {row['req_per_s']:6.1f} req/s, "
+              f"{row['requests'] * row['n'] / row['seconds'] / 1e6:7.2f} "
+              f"Mitems/s, {row['packages']} packages")
+
+
+def serve_coexec_sim(args) -> None:
+    policies = (COEXEC_POLICIES if args.policy == "all" else (args.policy,))
+    for row in coexec_sim_rows(args.workload, policies):
+        print(f"[serve/coexec-sim] {row['workload']}/{row['policy']:13s}: "
+              f"{row['seconds']:7.3f}s, {row['packages']:4d} packages, "
+              f"balance={row['balance']:.2f}, steals={row['steals']}")
 
 
 def main() -> None:
@@ -20,7 +127,26 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--coexec", choices=["off", "real", "sim"],
+                    default="off",
+                    help="serve co-execution kernel requests instead of LM "
+                         "decode: 'real' uses the persistent CoexecEngine, "
+                         "'sim' the discrete-event simulator")
+    ap.add_argument("--policy", default="all",
+                    help=f"coexec scheduling policy to serve with, or "
+                         f"'all' to sweep {COEXEC_POLICIES}")
+    ap.add_argument("--concurrent", type=int, default=8,
+                    help="max in-flight launch_async requests (coexec real)")
+    ap.add_argument("--n", type=int, default=1 << 16,
+                    help="items per coexec request (coexec real)")
+    ap.add_argument("--workload", default="mandelbrot",
+                    help="paper workload profile (coexec sim)")
     args = ap.parse_args()
+
+    if args.coexec == "real":
+        return serve_coexec_real(args)
+    if args.coexec == "sim":
+        return serve_coexec_sim(args)
 
     import jax
     import jax.numpy as jnp

@@ -1,0 +1,108 @@
+"""Hypothesis-compatible property-test shim.
+
+The tier-1 suite must collect and run on a bare container without
+`hypothesis` installed. This module exposes the small subset the tests use
+(`given`, `settings`, `st.integers/floats/sampled_from`); when hypothesis
+is importable it is re-exported unchanged (the CI property job exercises
+that path), otherwise a seeded-random fallback generates a bounded number
+of cases per test deterministically.
+
+Fallback semantics:
+* `@given(**strategies)` draws each keyword from its strategy with a
+  `numpy` Generator seeded from the test name — stable across runs.
+* `@settings(max_examples=N, ...)` is honored, capped at
+  `_FALLBACK_CAP` examples to keep the no-hypothesis profile fast; all
+  other settings are ignored.
+* shrinking, `@example`, and `assume` are not provided — the real
+  hypothesis path in CI covers those.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _FALLBACK_CAP = 25
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def draw(self, rng: "np.random.Generator"):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats(_Strategy):
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def draw(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def draw(self, rng):
+            return self.options[int(rng.integers(len(self.options)))]
+
+    class _St:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            return _SampledFrom(options)
+
+    st = _St()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(fn, "_propcheck_max_examples",
+                                _DEFAULT_EXAMPLES), _FALLBACK_CAP)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for case in range(n):
+                    rng = np.random.default_rng((seed, case))
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except BaseException as e:
+                        raise AssertionError(
+                            f"falsifying example (propcheck case {case}): "
+                            f"{drawn!r}") from e
+                return None
+            # hide the drawn parameters from pytest's fixture resolution
+            # (hypothesis does the same via its own wrapper)
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco

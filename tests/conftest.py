@@ -1,0 +1,40 @@
+"""Shared pytest configuration for the tier-1 suite.
+
+Registers the `slow` mark (long dry-run/e2e tests) and keeps the default
+profile fast: slow tests are skipped unless explicitly requested with
+``--runslow`` or an ``-m`` expression that mentions ``slow``.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+# make the in-repo package and the tests/ helpers importable regardless of
+# how pytest was invoked (PYTHONPATH=src is the documented way, this is the
+# safety net for bare `pytest` runs)
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT / "src"), str(_ROOT / "tests")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked `slow`")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running dry-run/e2e test (excluded from the "
+                   "default fast profile; enable with --runslow or -m slow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    if "slow" in (config.getoption("-m") or ""):
+        return
+    skip = pytest.mark.skip(reason="slow test: pass --runslow to include")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

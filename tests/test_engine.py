@@ -1,0 +1,214 @@
+"""Persistent CoexecEngine: lifecycle, concurrency, per-launch isolation."""
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CoexecEngine, CoexecutorRuntime, counits_from_devices,
+                        make_scheduler, validate_cover)
+
+N = 1 << 13
+POLICIES = ["static", "dyn16", "hguided", "work_stealing"]
+
+
+def two_units():
+    devs = jax.local_devices()[:1] * 2
+    return counits_from_devices(devs, kinds=["cpu", "cpu"],
+                                speed_hints=[0.4, 0.6])
+
+
+def sched_for(policy, total, num_units=2, granularity=1):
+    kw = {}
+    if policy in ("static", "hguided", "work_stealing"):
+        kw["speeds"] = [0.4, 0.6][:num_units]
+    return make_scheduler(policy, total, num_units,
+                          granularity=granularity, **kw)
+
+
+def affine_kernel(offset, chunk):
+    idx = jnp.arange(chunk.shape[0], dtype=jnp.float32) + offset
+    return chunk * 2.0 + idx
+
+
+def expected(data):
+    return data * 2.0 + np.arange(len(data), dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+def test_engine_start_submit_shutdown():
+    engine = CoexecEngine(two_units())
+    assert not engine.running
+    engine.start()
+    assert engine.running
+    data = np.arange(N, dtype=np.float32)
+    out = np.zeros(N, np.float32)
+    h = engine.submit(sched_for("dyn16", N), affine_kernel, [data], out)
+    got = h.result(timeout=60)
+    assert got is out
+    np.testing.assert_allclose(got, expected(data))
+    engine.shutdown()
+    assert not engine.running
+    with pytest.raises(RuntimeError):
+        engine.submit(sched_for("dyn16", N), affine_kernel, [data], out)
+    with pytest.raises(RuntimeError):
+        engine.start()          # a shut-down engine cannot be revived
+
+
+def test_engine_requires_start():
+    engine = CoexecEngine(two_units())
+    with pytest.raises(RuntimeError):
+        engine.submit(sched_for("dyn16", N), affine_kernel,
+                      [np.zeros(N, np.float32)], np.zeros(N, np.float32))
+
+
+def test_engine_context_manager_drains():
+    data = np.arange(N, dtype=np.float32)
+    with CoexecEngine(two_units()) as engine:
+        handles = [engine.submit(sched_for("dyn16", N), affine_kernel,
+                                 [data], np.zeros(N, np.float32))
+                   for _ in range(3)]
+    # __exit__ drains all in-flight launches before joining workers
+    for h in handles:
+        assert h.done()
+        np.testing.assert_allclose(h.result(), expected(data))
+
+
+def test_engine_rejects_reused_scheduler():
+    """A drained scheduler hands out no packages, so its launch could
+    never complete (and would wedge shutdown): submit must reject it."""
+    data = np.arange(N, dtype=np.float32)
+    with CoexecEngine(two_units()) as engine:
+        sched = sched_for("dyn4", N)
+        engine.submit(sched, affine_kernel, [data],
+                      np.zeros(N, np.float32)).result(timeout=60)
+        with pytest.raises(ValueError, match="already issued"):
+            engine.submit(sched, affine_kernel, [data],
+                          np.zeros(N, np.float32))
+    # the context manager exits promptly — no wedged drain
+
+
+def test_engine_rejects_mismatched_scheduler():
+    with CoexecEngine(two_units()) as engine:
+        with pytest.raises(ValueError):
+            engine.submit(sched_for("dyn16", N, num_units=3), affine_kernel,
+                          [np.zeros(N, np.float32)], np.zeros(N, np.float32))
+
+
+def test_engine_threads_persist_across_launches():
+    data = np.arange(N, dtype=np.float32)
+    with CoexecEngine(two_units()) as engine:
+        before = threading.active_count()
+        for _ in range(4):
+            out = engine.submit(sched_for("hguided", N), affine_kernel,
+                                [data], np.zeros(N, np.float32)).result()
+            np.testing.assert_allclose(out, expected(data))
+        # no per-launch thread spawn: worker count is constant
+        assert threading.active_count() == before
+
+
+# ---------------------------------------------------------------------------
+# concurrency & isolation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_concurrent_launches_match_sequential_bitwise(policy):
+    """N concurrent launch_async calls produce bitwise-identical outputs
+    to N sequential launches (the acceptance-criterion invariant)."""
+    datas = [np.random.default_rng(i).normal(size=N).astype(np.float32)
+             for i in range(8)]
+    with CoexecEngine(two_units()) as engine:
+        seq = []
+        for d in datas:
+            seq.append(engine.submit(sched_for(policy, N), affine_kernel,
+                                     [d], np.zeros(N, np.float32)).result())
+        handles = [engine.submit(sched_for(policy, N), affine_kernel,
+                                 [d], np.zeros(N, np.float32))
+                   for d in datas]
+        conc = [h.result(timeout=120) for h in handles]
+    for s, c in zip(seq, conc):
+        assert np.array_equal(s, c)          # bitwise, not approx
+
+
+def test_eight_concurrent_launches_two_units_exact_cover():
+    """Acceptance: 8 concurrent launches on a 2-unit engine all complete
+    with exact index-space cover and per-launch isolated stats."""
+    data = np.arange(N, dtype=np.float32)
+    with CoexecEngine(two_units()) as engine:
+        handles = [engine.submit(sched_for("work_stealing", N),
+                                 affine_kernel, [data],
+                                 np.zeros(N, np.float32))
+                   for _ in range(8)]
+        outs = [h.result(timeout=120) for h in handles]
+    want = expected(data)
+    for h, o in zip(handles, outs):
+        np.testing.assert_allclose(o, want)
+        assert h.stats is not None
+        validate_cover(h.stats.packages, N)
+        assert sum(p.size for p in h.stats.packages) == N
+        # busy seconds derive from this launch's packages only
+        assert sum(h.stats.unit_busy_s.values()) > 0
+
+
+def test_mixed_policies_interleave():
+    data = np.arange(N, dtype=np.float32)
+    with CoexecEngine(two_units()) as engine:
+        handles = [engine.submit(sched_for(p, N), affine_kernel, [data],
+                                 np.zeros(N, np.float32))
+                   for p in POLICIES * 2]
+        for h in handles:
+            np.testing.assert_allclose(h.result(timeout=120), expected(data))
+            validate_cover(h.stats.packages, N)
+
+
+def test_failing_launch_does_not_poison_neighbors():
+    def bad_kernel(offset, chunk):
+        raise RuntimeError("boom")
+
+    data = np.arange(N, dtype=np.float32)
+    with CoexecEngine(two_units()) as engine:
+        good1 = engine.submit(sched_for("dyn16", N), affine_kernel, [data],
+                              np.zeros(N, np.float32))
+        bad = engine.submit(sched_for("dyn16", N), bad_kernel, [data],
+                            np.zeros(N, np.float32))
+        good2 = engine.submit(sched_for("dyn16", N), affine_kernel, [data],
+                              np.zeros(N, np.float32))
+        with pytest.raises(RuntimeError, match="boom"):
+            bad.result(timeout=120)
+        np.testing.assert_allclose(good1.result(timeout=120), expected(data))
+        np.testing.assert_allclose(good2.result(timeout=120), expected(data))
+
+
+# ---------------------------------------------------------------------------
+# runtime integration
+# ---------------------------------------------------------------------------
+
+def test_runtime_launch_async_and_blocking_agree():
+    data = np.random.default_rng(0).normal(size=N).astype(np.float32)
+    with CoexecutorRuntime("work_stealing") as rt:
+        rt.config(units=two_units(), dist=0.4)
+        blocking = rt.launch(N, affine_kernel, [data]).copy()
+        handles = [rt.launch_async(N, affine_kernel, [data])
+                   for _ in range(4)]
+        for h in handles:
+            assert np.array_equal(h.result(timeout=120), blocking)
+            # per-launch stats isolation: each handle has its own
+            assert h.stats is not None and h.stats.num_packages >= 2
+    assert rt.engine is None             # context exit shut the engine down
+
+
+def test_runtime_reuses_engine_across_launches():
+    with CoexecutorRuntime("dyn8") as rt:
+        rt.config(units=two_units())
+        rt.launch(N, affine_kernel, [np.zeros(N, np.float32)])
+        engine = rt.engine
+        rt.launch(N, affine_kernel, [np.zeros(N, np.float32)])
+        assert rt.engine is engine       # persistent, not per-launch
+        rt.config(units=two_units())     # reconfigure invalidates
+        assert rt.engine is None
+        rt.launch(N, affine_kernel, [np.zeros(N, np.float32)])
+        assert rt.engine is not engine

@@ -1,0 +1,116 @@
+"""DES ↔ real-runtime parity: same policy + speeds ⇒ same package count
+and exact cover on both `simulate` (virtual time) and `CoexecEngine`
+(real threads), for a regular and an irregular workload.
+
+Parity is asserted for the policies whose package count is serve-order
+independent: `static` (one package per nonzero share), `dynamic` (fixed
+ceil-split), and `work_stealing` (chunks are seeded up front and steals
+never split them). `hguided` sizes depend on request order, so only the
+cover invariant is checked there.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CoexecEngine, MemoryModel, SimUnit,
+                        counits_from_devices, make_scheduler, simulate,
+                        validate_cover, Workload)
+
+TOTAL = 4096
+SPEEDS = [0.4, 0.6]
+GRAN = 16
+
+COUNT_STABLE = ["static", "dyn16", "work_stealing"]
+
+
+def regular_workload():
+    return Workload(name="reg", total=TOTAL, bytes_in_per_item=4.0,
+                    bytes_out_per_item=4.0, working_set_bytes=8.0 * TOTAL)
+
+
+def irregular_workload():
+    w = np.linspace(0.2, 1.8, TOTAL)
+    return Workload(name="irr", total=TOTAL, bytes_in_per_item=4.0,
+                    bytes_out_per_item=4.0, working_set_bytes=8.0 * TOTAL,
+                    weights=w / w.mean())
+
+
+def sim_units():
+    return [SimUnit("cpu", "cpu", speed=4e5 * SPEEDS[0]),
+            SimUnit("gpu", "gpu", speed=4e5 * SPEEDS[1], alpha=1.3)]
+
+
+def real_units():
+    return counits_from_devices(jax.local_devices()[:1] * 2,
+                                kinds=["cpu", "cpu"], speed_hints=SPEEDS)
+
+
+def sched(policy):
+    kw = {}
+    if policy in ("static", "hguided", "work_stealing"):
+        kw["speeds"] = list(SPEEDS)
+    return make_scheduler(policy, TOTAL, 2, granularity=GRAN, **kw)
+
+
+def irregular_kernel(offset, chunk):
+    # cost grows with the item's weight position — real irregularity
+    idx = jnp.arange(chunk.shape[0], dtype=jnp.float32) + offset
+    acc = chunk
+    for _ in range(3):
+        acc = jnp.sin(acc) + idx * 1e-4
+    return acc
+
+
+@pytest.mark.parametrize("policy", COUNT_STABLE)
+@pytest.mark.parametrize("workload_fn", [regular_workload,
+                                         irregular_workload])
+def test_package_count_and_cover_parity(policy, workload_fn):
+    wl = workload_fn()
+    r = simulate(sched(policy), sim_units(), wl)
+    validate_cover(r.packages, TOTAL)
+
+    data = np.random.default_rng(0).normal(size=TOTAL).astype(np.float32)
+    kernel = ((lambda off, c: c * 2.0) if wl.weights is None
+              else irregular_kernel)
+    with CoexecEngine(real_units()) as engine:
+        h = engine.submit(sched(policy), kernel, [data],
+                          np.zeros(TOTAL, np.float32))
+        h.result(timeout=120)
+    validate_cover(h.stats.packages, TOTAL)
+    assert h.stats.num_packages == r.num_packages, (
+        f"{policy}/{wl.name}: engine issued {h.stats.num_packages} "
+        f"packages, DES {r.num_packages}")
+
+
+@pytest.mark.parametrize("workload_fn", [regular_workload,
+                                         irregular_workload])
+def test_hguided_cover_parity(workload_fn):
+    """HGuided package sizes are order-dependent; parity holds for the
+    cover invariant and for both paths terminating with all work issued."""
+    wl = workload_fn()
+    r = simulate(sched("hguided"), sim_units(), wl)
+    validate_cover(r.packages, TOTAL)
+
+    data = np.zeros(TOTAL, np.float32)
+    with CoexecEngine(real_units()) as engine:
+        h = engine.submit(sched("hguided"), lambda off, c: c + 1.0, [data],
+                          np.zeros(TOTAL, np.float32), adaptive=False)
+        out = h.result(timeout=120)
+    np.testing.assert_allclose(out, 1.0)
+    validate_cover(h.stats.packages, TOTAL)
+
+
+@pytest.mark.parametrize("memory", [MemoryModel.USM, MemoryModel.BUFFERS])
+def test_work_stealing_memory_models_parity(memory):
+    """Both memory models preserve the count/cover parity (the memory model
+    changes per-package costs, never the package structure)."""
+    wl = regular_workload()
+    r = simulate(sched("work_stealing"), sim_units(), wl, memory=memory)
+    data = np.arange(TOTAL, dtype=np.float32)
+    with CoexecEngine(real_units(), memory=memory) as engine:
+        h = engine.submit(sched("work_stealing"), lambda off, c: c * 3.0,
+                          [data], np.zeros(TOTAL, np.float32))
+        out = h.result(timeout=120)
+    np.testing.assert_allclose(out, data * 3.0)
+    assert h.stats.num_packages == r.num_packages

@@ -3,7 +3,7 @@ FLOPs sanity."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
 from repro.roofline import (PEAK_FLOPS, cell_flops, collective_bytes,

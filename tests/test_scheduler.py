@@ -1,10 +1,13 @@
 """Property-based tests for the load-balancing algorithms (paper §3.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import (DynamicScheduler, HGuidedScheduler, StaticScheduler,
-                        make_scheduler, validate_cover)
+                        WorkStealingScheduler, make_scheduler, static_bounds,
+                        validate_cover)
+
+ALL_POLICIES = ["static", "dyn5", "dyn200", "hguided", "work_stealing"]
 
 
 def drain(sched, num_units, order_seed=0):
@@ -25,17 +28,56 @@ def drain(sched, num_units, order_seed=0):
 @given(total=st.integers(1, 500_000),
        units=st.integers(1, 8),
        gran=st.sampled_from([1, 16, 64, 128]),
-       policy=st.sampled_from(["static", "dyn5", "dyn200", "hguided"]),
+       policy=st.sampled_from(ALL_POLICIES),
        seed=st.integers(0, 5))
 @settings(max_examples=120, deadline=None)
 def test_exact_cover(total, units, gran, policy, seed):
     """THE invariant: every work-item computed exactly once, any policy."""
     kw = {}
-    if policy in ("static", "hguided"):
+    if policy in ("static", "hguided", "work_stealing"):
         kw["speeds"] = [1.0 + 0.5 * i for i in range(units)]
     sched = make_scheduler(policy, total, units, granularity=gran, **kw)
     pkgs = drain(sched, units, seed)
     validate_cover(pkgs, total)
+    assert sched.done() and sched.remaining == 0
+
+
+@given(total=st.integers(1, 200_000),
+       units=st.integers(1, 8),
+       gran=st.sampled_from([1, 16, 64]),
+       policy=st.sampled_from(ALL_POLICIES))
+@settings(max_examples=60, deadline=None)
+def test_granularity_alignment(total, units, gran, policy):
+    """Every package except the global tail starts and sizes on a
+    granularity boundary (the kernel's local work size)."""
+    kw = {}
+    if policy in ("static", "hguided", "work_stealing"):
+        kw["speeds"] = [1.0 + i for i in range(units)]
+    sched = make_scheduler(policy, total, units, granularity=gran, **kw)
+    pkgs = sorted(drain(sched, units, 1), key=lambda p: p.offset)
+    for p in pkgs:
+        assert p.offset % gran == 0, (p.offset, gran)
+    for p in pkgs[:-1]:
+        assert p.size % gran == 0, (p.size, gran)
+
+
+@given(total=st.integers(1, 100_000),
+       units=st.integers(1, 8),
+       policy=st.sampled_from(ALL_POLICIES),
+       seed=st.integers(0, 3))
+@settings(max_examples=60, deadline=None)
+def test_no_overlap_and_termination(total, units, policy, seed):
+    """Ranges are pairwise disjoint and every unit's request stream
+    terminates (returns None) once the index space is exhausted."""
+    kw = {}
+    if policy in ("static", "hguided", "work_stealing"):
+        kw["speeds"] = [0.5 + 0.25 * i for i in range(units)]
+    sched = make_scheduler(policy, total, units, **kw)
+    pkgs = sorted(drain(sched, units, seed), key=lambda p: p.offset)
+    for a, b in zip(pkgs, pkgs[1:]):
+        assert not a.rng.overlaps(b.rng), (a.rng, b.rng)
+    for u in range(units):
+        assert sched.next_package(u) is None
 
 
 @given(total=st.integers(1000, 1_000_000),
@@ -87,6 +129,70 @@ def test_hguided_first_packages_proportional():
     assert abs(p1.size - (1_000_000 - p0.size) * 0.75 / 2) < 1000
 
 
+# ---------------------------------------------------------------------------
+# work stealing
+# ---------------------------------------------------------------------------
+
+def test_work_stealing_seeds_proportional_chunks():
+    sched = WorkStealingScheduler(100_000, 2, speeds=[0.25, 0.75],
+                                  chunks_per_unit=8)
+    bounds = static_bounds(100_000, [0.25, 0.75])
+    # each unit's deque holds exactly its static region, in 8 chunks
+    assert sched._load == [bounds[1], 100_000 - bounds[1]]
+    assert len(sched._deques[0]) == len(sched._deques[1]) == 8
+
+
+def test_work_stealing_idle_unit_steals_half():
+    sched = WorkStealingScheduler(80_000, 2, speeds=[0.5, 0.5],
+                                  chunks_per_unit=8)
+    # unit 0 drains its own region first (no steals while it has local work)
+    for _ in range(8):
+        p = sched.next_package(0)
+        assert p is not None and p.offset < 40_000
+    assert sched.steals == 0
+    # next request: unit 0 steals half of unit 1's 8 remaining chunks
+    p = sched.next_package(0)
+    assert p is not None and p.offset >= 40_000
+    assert sched.steals == 1
+    assert len(sched._deques[0]) == 3           # 4 stolen, 1 issued
+    assert len(sched._deques[1]) == 4
+    drain(sched, 2)
+    validate_cover(sched.issued, 80_000)
+
+
+def test_work_stealing_victim_is_most_loaded():
+    sched = WorkStealingScheduler(90_000, 3, speeds=[1.0, 1.0, 1.0],
+                                  chunks_per_unit=4)
+    # drain unit 0 fully and unit 1 partially; unit 2 untouched (max load)
+    for _ in range(4):
+        sched.next_package(0)
+    sched.next_package(1)
+    before = sched._load[2]
+    sched.next_package(0)        # forces a steal
+    assert sched.steals == 1
+    assert sched._load[2] < before          # unit 2 was the victim
+
+
+def test_work_stealing_package_count_is_deterministic():
+    """Steals move chunks without splitting: total package count equals the
+    seeded chunk count regardless of serve order (the DES↔engine parity
+    anchor)."""
+    counts = set()
+    for seed in range(6):
+        sched = WorkStealingScheduler(123_457, 4,
+                                      speeds=[1.0, 2.0, 3.0, 4.0],
+                                      chunks_per_unit=6, granularity=16)
+        counts.add(len(drain(sched, 4, order_seed=seed)))
+    assert len(counts) == 1
+
+
+def test_work_stealing_single_unit_degenerates():
+    sched = WorkStealingScheduler(1000, 1, chunks_per_unit=4)
+    pkgs = drain(sched, 1)
+    validate_cover(pkgs, 1000)
+    assert sched.steals == 0
+
+
 def test_registry_and_validation():
     with pytest.raises(KeyError):
         make_scheduler("nope", 10, 1)
@@ -94,5 +200,8 @@ def test_registry_and_validation():
         make_scheduler("static", 0, 1)
     with pytest.raises(ValueError):
         make_scheduler("hguided", 10, 2, speeds=[1.0])
+    with pytest.raises(ValueError):
+        make_scheduler("work_stealing", 10, 2, speeds=[1.0, -1.0])
     s = make_scheduler("dyn17", 1000, 2)
     assert s.num_packages == 17
+    assert make_scheduler("work-stealing", 100, 2).name == "work_stealing"
