@@ -12,6 +12,11 @@ hguided / work_stealing — against each other on the DES (paper workload
 profiles, virtual time) AND on the real persistent CoexecEngine (concurrent
 `launch_async` requests, wall time), so a regression in either path shows
 up in the same CSV.
+
+`run_coexec_multi()` sweeps the *admission layer*: 1–32 concurrent
+tenants, FIFO vs weighted-fair queueing, fused vs unfused, reporting
+p50/p99 latency, Jain fairness over per-tenant throughput and dispatched
+package counts on the deterministic multi-launch DES.
 """
 from __future__ import annotations
 
@@ -50,7 +55,29 @@ def run_coexec():
         rows.append((f"coexec-real/taylor/{r['policy']}",
                      round(r["seconds"] * 1e3, 1),
                      f"requests={r['requests']};packages={r['packages']};"
-                     f"req_per_s={r['req_per_s']:.1f}"))
+                     f"req_per_s={r['req_per_s']:.1f};"
+                     f"p99_ms={r['p99_ms']:.1f}"))
+    return rows
+
+
+def run_coexec_multi():
+    """Admission-layer sweep: tenants x {fifo,wfq} x {unfused,fused}.
+
+    Rows are `coexec-multi/<workload>/<N>t/<admission>[+fuse]` with the
+    p99 latency (ms) as the value and p50/fairness/packages derived.
+    Deterministic (DES virtual time): safe as a CI-tracked artifact.
+    """
+    from repro.launch.serve import coexec_multi_rows
+
+    rows = []
+    for r in coexec_multi_rows("taylor", tenants=(1, 2, 4, 8, 16, 32)):
+        tag = f"{r['admission']}{'+fuse' if r['fuse'] else ''}"
+        rows.append((f"coexec-multi/{r['workload']}/{r['tenants']}t/{tag}",
+                     round(r["p99_ms"], 2),
+                     f"p50_ms={r['p50_ms']:.2f};"
+                     f"fairness={r['fairness']:.3f};"
+                     f"packages={r['packages']};"
+                     f"fused_batches={r['fused_batches']}"))
     return rows
 
 

@@ -16,6 +16,7 @@ def main() -> None:
     suites["kernels"] = kernel_micro.run
     suites["hetero"] = hetero_bench.run
     suites["coexec"] = hetero_bench.run_coexec
+    suites["coexec-multi"] = hetero_bench.run_coexec_multi
     suites["roofline"] = roofline_table.run
 
     wanted = sys.argv[1:] or list(suites)

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Docs health check: mermaid blocks parse-sane, internal links resolve.
+
+Stdlib-only (runs in CI's docs job and in tier-1 via tests/test_docs.py):
+
+* every ```mermaid fence in README.md and docs/*.md must open with a
+  known diagram type, balance its brackets, and contain at least one
+  edge/message line;
+* every relative markdown link must point at an existing file, and an
+  in-page ``#anchor`` must match a real heading slug in the target.
+
+Exit status 0 = clean; 1 = problems (one line each on stderr).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+MERMAID_TYPES = ("graph", "flowchart", "sequenceDiagram", "stateDiagram",
+                 "stateDiagram-v2", "classDiagram", "erDiagram", "gantt",
+                 "pie", "mindmap", "timeline")
+LINK_RE = re.compile(r"\[([^\]]+)\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def doc_files() -> list[pathlib.Path]:
+    """README plus every markdown page under docs/."""
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    s = re.sub(r"[`*_]", "", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def mermaid_blocks(text: str) -> list[tuple[int, str]]:
+    """(start_line, body) for each ```mermaid fence."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip().startswith("```mermaid"):
+            body, j = [], i + 1
+            while j < len(lines) and not lines[j].strip().startswith("```"):
+                body.append(lines[j])
+                j += 1
+            blocks.append((i + 1, "\n".join(body)))
+            i = j
+        i += 1
+    return blocks
+
+
+def strip_labels(line: str) -> str:
+    """Remove quoted mermaid label text before bracket balancing."""
+    return re.sub(r'"[^"]*"', '""', line)
+
+
+def check_mermaid(path: pathlib.Path, errors: list[str]) -> None:
+    """Validate every mermaid fence in one file."""
+    for lineno, body in mermaid_blocks(path.read_text()):
+        where = f"{path.relative_to(REPO)}:{lineno}"
+        content = [l for l in body.splitlines() if l.strip()
+                   and not l.strip().startswith("%%")]
+        if not content:
+            errors.append(f"{where}: empty mermaid block")
+            continue
+        head = content[0].strip().split()[0]
+        if head not in MERMAID_TYPES:
+            errors.append(f"{where}: unknown mermaid diagram type {head!r}")
+        counts = {"(": 0, "[": 0, "{": 0}
+        closers = {")": "(", "]": "[", "}": "{"}
+        for line in content:
+            for ch in strip_labels(line):
+                if ch in counts:
+                    counts[ch] += 1
+                elif ch in closers:
+                    counts[closers[ch]] -= 1
+        bad = {k: v for k, v in counts.items() if v != 0}
+        if bad:
+            errors.append(f"{where}: unbalanced mermaid brackets {bad}")
+        if head in ("graph", "flowchart"):
+            if not any("-->" in l or "---" in l for l in content[1:]):
+                errors.append(f"{where}: flowchart with no edges")
+        if head == "sequenceDiagram":
+            if not any("->>" in l or "-->>" in l for l in content[1:]):
+                errors.append(f"{where}: sequence diagram with no messages")
+
+
+def check_links(path: pathlib.Path, errors: list[str]) -> None:
+    """Resolve every relative markdown link (and anchor) in one file."""
+    text = path.read_text()
+    slugs_cache: dict[pathlib.Path, set[str]] = {}
+
+    def slugs_of(p: pathlib.Path) -> set[str]:
+        if p not in slugs_cache:
+            slugs_cache[p] = {slugify(h)
+                              for h in HEADING_RE.findall(p.read_text())}
+        return slugs_cache[p]
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(2)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        where = f"{path.relative_to(REPO)}"
+        ref, _, anchor = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if not dest.exists():
+            errors.append(f"{where}: broken link {target!r}")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in slugs_of(dest):
+            errors.append(f"{where}: missing anchor {target!r}")
+
+
+def main() -> int:
+    """Run all checks; print one line per problem."""
+    errors: list[str] = []
+    files = doc_files()
+    if not (REPO / "docs").is_dir():
+        errors.append("docs/ directory is missing")
+    for f in files:
+        check_mermaid(f, errors)
+        check_links(f, errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({len(files)} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""pydocstyle-lite: docstring discipline for the public core API.
+
+Stdlib-ast only (no imports of the package, no pip deps), enforced in
+CI's docs job and in tier-1 via tests/test_docs.py. Two tiers:
+
+* **Presence tier** — every public module / class / function / method in
+  the checked modules has a docstring whose summary line ends in ``.``,
+  ``:`` or ``?``. Names starting with ``_`` are exempt.
+* **Sections tier** — the designated public API surface additionally
+  documents its arguments / returns / raises: each entry lists required
+  substrings (``Args:``, ``Returns:``, ``Raises:``, or named fields for
+  dataclasses).
+
+Exit status 0 = clean; 1 = violations (one line each on stderr).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+CORE = "src/repro/core"
+
+MODULES = [
+    f"{CORE}/admission.py",
+    f"{CORE}/energy.py",
+    f"{CORE}/engine.py",
+    f"{CORE}/runtime.py",
+    f"{CORE}/scheduler.py",
+    f"{CORE}/sim.py",
+]
+
+# Public API surface that must carry full Args/Returns/Raises sections
+# (or, for dataclasses, document every named field).
+STRICT: dict[str, tuple[str, ...]] = {
+    "admission.py::AdmissionConfig": ("policy", "fuse", "max_inflight",
+                                      "quantum"),
+    "admission.py::AdmissionController.admit": ("Args:",),
+    "admission.py::AdmissionController.discard": ("Args:",),
+    "admission.py::AdmissionController.flush": ("Args:",),
+    "admission.py::AdmissionController.next_work": ("Args:", "Returns:"),
+    "admission.py::jain_index": ("Args:", "Returns:", "Raises:"),
+    "energy.py::EnergyReport": ("per_unit_J", "uncore_dram_J", "runtime_s"),
+    "energy.py::PowerModel": ("busy_w", "idle_w", "uncore_dram_w"),
+    "engine.py::CoexecEngine.submit": ("Args:", "Returns:", "Raises:"),
+    "engine.py::LaunchHandle.exception": ("Args:", "Returns:", "Raises:"),
+    "engine.py::LaunchHandle.result": ("Args:", "Returns:", "Raises:"),
+    "runtime.py::CoexecutorRuntime.config": ("Args:", "Returns:"),
+    "runtime.py::CoexecutorRuntime.launch_async": ("Args:", "Returns:",
+                                                   "Raises:"),
+    "scheduler.py::Scheduler.next_package": ("Args:", "Returns:"),
+    "scheduler.py::make_scheduler": ("Args:", "Returns:", "Raises:"),
+    "sim.py::simulate_multi": ("Args:", "Returns:", "Raises:"),
+}
+
+SUMMARY_ENDINGS = (".", ":", "?")
+
+
+def is_public(name: str) -> bool:
+    """Public means no leading underscore (dunders included as private)."""
+    return not name.startswith("_")
+
+
+def summary_ok(doc: str) -> bool:
+    """First non-empty docstring line must end like a sentence."""
+    for line in doc.splitlines():
+        if line.strip():
+            return line.strip().endswith(SUMMARY_ENDINGS)
+    return False
+
+
+def walk_module(path: pathlib.Path, errors: list[str],
+                strict_seen: set[str]) -> None:
+    """Check one module's docstring discipline."""
+    rel = path.name
+    tree = ast.parse(path.read_text())
+
+    def report(lineno: int, msg: str) -> None:
+        errors.append(f"{path.relative_to(REPO)}:{lineno}: {msg}")
+
+    def check_doc(node, qual: str) -> None:
+        doc = ast.get_docstring(node)
+        kind = type(node).__name__
+        if not doc:
+            report(node.lineno, f"missing docstring on {kind} {qual}")
+            return
+        if not summary_ok(doc):
+            report(node.lineno,
+                   f"{qual}: summary line must end with one of "
+                   f"{SUMMARY_ENDINGS}")
+        key = f"{rel}::{qual}"
+        if key in STRICT:
+            strict_seen.add(key)
+            missing = [s for s in STRICT[key] if s not in doc]
+            if missing:
+                report(node.lineno,
+                       f"{qual}: docstring missing required {missing}")
+
+    if not ast.get_docstring(tree):
+        report(1, "missing module docstring")
+
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if is_public(node.name):
+                check_doc(node, node.name)
+        elif isinstance(node, ast.ClassDef) and is_public(node.name):
+            check_doc(node, node.name)
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and is_public(sub.name):
+                    check_doc(sub, f"{node.name}.{sub.name}")
+
+
+def main() -> int:
+    """Run the checker over every listed module."""
+    errors: list[str] = []
+    strict_seen: set[str] = set()
+    for mod in MODULES:
+        path = REPO / mod
+        if not path.exists():
+            errors.append(f"{mod}: checked module does not exist")
+            continue
+        walk_module(path, errors, strict_seen)
+    for key in sorted(set(STRICT) - strict_seen):
+        errors.append(f"{key}: strict-API entry not found in its module")
+    for e in errors:
+        print(f"check_docstrings: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docstrings: OK ({len(MODULES)} modules, "
+              f"{len(STRICT)} strict entries)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

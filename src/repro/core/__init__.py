@@ -5,16 +5,26 @@ Public surface:
     CoexecEngine, LaunchHandle, LaunchStats     — persistent engine (start/
                                                   submit/shutdown; concurrent
                                                   launches interleave)
+    AdmissionConfig, AdmissionController,
+        AdmissionFull, jain_index               — cross-launch admission:
+                                                  WFQ fairness, launch fusion,
+                                                  backpressure
+    LaunchWaitTimeout                           — wait-timeout vs launch-failed
     make_scheduler / Static / Dynamic /
         HGuided / WorkStealing                  — load balancers (§3.2)
     simulate, solo_run, Workload, SimUnit       — DES reproduction engine
+    simulate_multi, LaunchSpec, MultiSimResult  — multi-tenant DES (admission
+                                                  policies in virtual time)
     MemoryModel, MemoryCosts                    — USM vs Buffers (§3.1)
     PowerModel, energy_report, edp_ratio        — energy/EDP model (§5.2)
     paper_workload, ALL_BENCHMARKS              — Table 1 profiles
 """
+from .admission import (ADMISSION_POLICIES, AdmissionConfig,
+                        AdmissionController, AdmissionFull, jain_index)
 from .energy import (EnergyReport, PowerModel, PAPER_POWER, TPU_POWER,
                      edp_ratio, energy_report, geomean)
-from .engine import CoexecEngine, LaunchHandle, LaunchStats
+from .engine import (CoexecEngine, LaunchHandle, LaunchStats,
+                     LaunchWaitTimeout)
 from .memory import MemoryCosts, MemoryModel, TPU_MEMORY_COSTS
 from .package import Package, Range, validate_cover
 from .profiler import EwmaThroughput, SpeedBoard
@@ -22,20 +32,24 @@ from .runtime import CoexecutorRuntime, counits_from_devices
 from .scheduler import (SPEED_HINT_POLICIES, DynamicScheduler,
                         HGuidedScheduler, Scheduler, StaticScheduler,
                         WorkStealingScheduler, make_scheduler, static_bounds)
-from .sim import SimResult, Workload, simulate, solo_run
+from .sim import (LaunchSimResult, LaunchSpec, MultiSimResult, SimResult,
+                  Workload, simulate, simulate_multi, solo_run)
 from .units import JaxUnit, SimUnit
 from .workloads import (ALL_BENCHMARKS, IRREGULAR, REGULAR, SPECS,
                         paper_workload)
 
 __all__ = [
-    "ALL_BENCHMARKS", "CoexecEngine", "CoexecutorRuntime",
-    "DynamicScheduler", "EnergyReport", "EwmaThroughput", "HGuidedScheduler",
-    "IRREGULAR", "JaxUnit", "LaunchHandle", "LaunchStats", "MemoryCosts",
-    "MemoryModel", "PAPER_POWER", "Package", "PowerModel", "REGULAR",
-    "Range", "SPECS", "SPEED_HINT_POLICIES", "Scheduler", "SimResult",
-    "SimUnit", "SpeedBoard",
+    "ADMISSION_POLICIES", "ALL_BENCHMARKS", "AdmissionConfig",
+    "AdmissionController", "AdmissionFull", "CoexecEngine",
+    "CoexecutorRuntime", "DynamicScheduler", "EnergyReport",
+    "EwmaThroughput", "HGuidedScheduler", "IRREGULAR", "JaxUnit",
+    "LaunchHandle", "LaunchSimResult", "LaunchSpec", "LaunchStats",
+    "LaunchWaitTimeout", "MemoryCosts", "MemoryModel", "MultiSimResult",
+    "PAPER_POWER", "Package", "PowerModel", "REGULAR", "Range", "SPECS",
+    "SPEED_HINT_POLICIES", "Scheduler", "SimResult", "SimUnit", "SpeedBoard",
     "StaticScheduler", "TPU_MEMORY_COSTS", "TPU_POWER",
     "WorkStealingScheduler", "Workload", "counits_from_devices", "edp_ratio",
-    "energy_report", "geomean", "make_scheduler", "paper_workload",
-    "simulate", "solo_run", "static_bounds", "validate_cover",
+    "energy_report", "geomean", "jain_index", "make_scheduler",
+    "paper_workload", "simulate", "simulate_multi", "solo_run",
+    "static_bounds", "validate_cover",
 ]

@@ -1,0 +1,422 @@
+"""Cross-launch admission control for the persistent engine (and DES).
+
+PR 1's :class:`~.engine.CoexecEngine` is multi-tenant but strictly FIFO:
+packages of concurrent launches drain in submit order, one launch at a
+time, with no limit on how much work callers may pile up. EngineCL
+(arXiv:1805.02755) and the time-constrained co-execution follow-up
+(arXiv:2010.12607) both observe that under dynamic load the *queueing
+discipline* — not just the intra-launch split — determines throughput and
+fairness. This module is that discipline, factored out of the engine so
+the exact same policies run on the real worker threads and on the
+discrete-event simulator:
+
+* **Weighted-fair queueing** (``policy="wfq"``) — deficit-round-robin over
+  *packages* across tenants: each tenant accrues credit proportional to
+  its weight and spends it per work-item served, so two tenants at
+  weights 2:1 see a 2:1 completed-item ratio while both are backlogged.
+  ``policy="fifo"`` reproduces PR 1's behavior bit-for-bit.
+* **Launch fusion** (``fuse=True``) — small concurrent launches with the
+  same kernel and shapes are staged for a short batching window and
+  coalesced into one fused launch whose index space is *members*; N tiny
+  requests then cost ~one dispatch per unit instead of N full scheduler
+  drains. The caller supplies the materializer (the engine stacks inputs
+  and vmaps the kernel; the simulator concatenates workloads) and
+  de-multiplexes on completion.
+* **Backpressure** (``max_inflight``) — a cap on admitted-but-unfinished
+  launches; :meth:`AdmissionController.has_capacity` lets the engine's
+  ``submit(..., block=True)`` path wait instead of queueing unboundedly.
+
+The controller is deliberately *not* thread-safe: the engine calls it
+under its condition variable, the simulator single-threaded. Entries are
+duck-typed — anything with ``scheduler``, ``tenant``, ``weight`` and
+optionally ``fuse_key`` / ``slots`` / ``failed`` attributes schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+from .package import Package
+
+ADMISSION_POLICIES = ("fifo", "wfq")
+
+
+class AdmissionFull(RuntimeError):
+    """Raised by non-blocking submission when the engine is at capacity.
+
+    Signals that :class:`AdmissionConfig.max_inflight` launches are already
+    admitted and unfinished; the caller should retry later, shed load, or
+    submit with ``block=True`` to wait for a slot.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Tuning knobs of the admission layer.
+
+    Args:
+        policy: ``"fifo"`` (PR 1 behavior: strict submit order) or
+            ``"wfq"`` (deficit-round-robin weighted fairness per tenant).
+        fuse: stage fusion-eligible launches and coalesce concurrent ones
+            into shared dispatches.
+        fuse_threshold: largest launch (work-items) eligible for fusion;
+            bigger launches keep both units busy on their own and gain
+            nothing from batching.
+        fuse_limit: maximum members per fused batch — a full group is
+            materialized immediately without waiting for the window.
+        fuse_wait_s: batching window. A staged group is held until this
+            much time passed since its first member (or the group is
+            full/force-flushed); 0 fuses exactly the launches that are
+            concurrently queued, which is what the simulator uses.
+        max_inflight: cap on admitted-but-unfinished launches (fused
+            members each count as one); ``None`` means unbounded.
+        quantum: DRR credit granted per round in work-items; ``None``
+            derives it from the active schedulers' package-size hints.
+
+    Raises:
+        ValueError: on an unknown policy or non-positive limits.
+    """
+
+    policy: str = "fifo"
+    fuse: bool = False
+    fuse_threshold: int = 1 << 12
+    fuse_limit: int = 64
+    fuse_wait_s: float = 0.002
+    max_inflight: Optional[int] = None
+    quantum: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {self.policy!r}; "
+                             f"choose from {ADMISSION_POLICIES}")
+        if self.fuse_threshold <= 0 or self.fuse_limit <= 0:
+            raise ValueError("fuse_threshold and fuse_limit must be positive")
+        if self.fuse_wait_s < 0:
+            raise ValueError("fuse_wait_s must be non-negative")
+        if self.max_inflight is not None and self.max_inflight <= 0:
+            raise ValueError("max_inflight must be positive (or None)")
+        if self.quantum is not None and self.quantum <= 0:
+            raise ValueError("quantum must be positive (or None)")
+
+
+def coerce_admission(admission) -> AdmissionConfig:
+    """Normalize a policy name or config object into an AdmissionConfig.
+
+    Args:
+        admission: an :class:`AdmissionConfig`, a policy-name string
+            (``"fifo"`` / ``"wfq"``), or ``None`` for the default config.
+
+    Returns:
+        The equivalent :class:`AdmissionConfig`.
+    """
+    if admission is None:
+        return AdmissionConfig()
+    if isinstance(admission, AdmissionConfig):
+        return admission
+    return AdmissionConfig(policy=str(admission).lower())
+
+
+class _TenantQueue:
+    """Per-tenant flow state for the DRR scan (entries in submit order)."""
+
+    __slots__ = ("key", "weight", "deficit", "entries")
+
+    def __init__(self, key: str, weight: float):
+        self.key = key
+        self.weight = weight
+        self.deficit = 0.0
+        self.entries: list = []
+
+
+class _FusionGroup:
+    """Staged fusion-eligible launches sharing one fuse key."""
+
+    __slots__ = ("key", "members", "t_first")
+
+    def __init__(self, key, t_first: float):
+        self.key = key
+        self.members: list = []
+        self.t_first = t_first
+
+
+class AdmissionController:
+    """Queueing discipline between ``submit`` and the per-unit workers.
+
+    Owns the set of admitted launches and decides, per idle unit, which
+    launch's scheduler gets to emit the next package. The caller (engine
+    or simulator) serializes all calls and remains responsible for
+    executing packages and finalizing launches.
+
+    Attributes:
+        config: the immutable :class:`AdmissionConfig` in force.
+        dispatched: packages handed out over the controller's lifetime.
+        fused_batches: fused launches materialized so far.
+        fused_members: total members coalesced into those batches.
+    """
+
+    def __init__(self, num_units: int,
+                 config: Optional[AdmissionConfig] = None, *,
+                 fuse_materialize: Optional[Callable] = None,
+                 speed_refresh: Optional[Callable] = None):
+        """Build a controller.
+
+        Args:
+            num_units: Coexecution Unit count (bounds the DRR scan).
+            config: admission configuration; default is plain FIFO.
+            fuse_materialize: callback ``(members) -> fused_entry`` that
+                coalesces ≥2 staged launches into one schedulable entry;
+                when ``None``, staged groups are admitted member-by-member.
+            speed_refresh: optional per-entry hook invoked right before
+                pulling a package (the engine refreshes HGuided speeds).
+        """
+        self.num_units = int(num_units)
+        self.config = config or AdmissionConfig()
+        self._fuse_materialize = fuse_materialize
+        self._speed_refresh = speed_refresh
+        self._active: list = []                     # FIFO admit order
+        self._tenants: dict[str, _TenantQueue] = {}
+        self._ring: list[str] = []                  # DRR service order
+        self._rr = 0
+        self._staged: dict = {}                     # fuse_key -> group
+        self._in_flight = 0
+        self._auto_quantum = 1
+        self.dispatched = 0
+        self.fused_batches = 0
+        self.fused_members = 0
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        """Admitted-but-unfinished launches (fused members count singly)."""
+        return self._in_flight
+
+    def has_capacity(self) -> bool:
+        """Whether one more launch may be admitted under ``max_inflight``."""
+        cap = self.config.max_inflight
+        return cap is None or self._in_flight < cap
+
+    def drained(self) -> bool:
+        """True when no admitted or staged work remains anywhere."""
+        return not self._active and not self._staged
+
+    # -- admission ---------------------------------------------------------
+    def admit(self, entry, now: float = 0.0) -> None:
+        """Admit one launch: activate it, or stage it for fusion.
+
+        Args:
+            entry: launch-like object (``scheduler``/``tenant``/``weight``,
+                optional ``fuse_key``). Capacity is *not* checked here —
+                callers gate on :meth:`has_capacity` first (the engine
+                blocks or raises :class:`AdmissionFull` before admitting).
+            now: current time (wall for the engine, virtual for the DES),
+                used to timestamp fusion groups.
+
+        Raises:
+            ValueError: on a non-positive tenant weight.
+        """
+        if not float(entry.weight) > 0:
+            raise ValueError(f"tenant weight must be positive, "
+                             f"got {entry.weight!r}")
+        self._in_flight += getattr(entry, "slots", 1)
+        key = getattr(entry, "fuse_key", None)
+        if self.config.fuse and key is not None:
+            group = self._staged.get(key)
+            if group is None:
+                group = self._staged[key] = _FusionGroup(key, now)
+            group.members.append(entry)
+            if len(group.members) >= self.config.fuse_limit:
+                self._flush_group(key)
+            return
+        self._activate(entry)
+
+    def _activate(self, entry) -> None:
+        """Make an entry schedulable (joins its tenant's DRR flow)."""
+        self._active.append(entry)
+        # wfq_cost_scale converts an entry's package sizes to work-items
+        # (engine-side fused batches schedule in member units, each worth
+        # one member's whole index space of credit)
+        scale = getattr(entry, "wfq_cost_scale", 1)
+        self._auto_quantum = max(self._auto_quantum,
+                                 entry.scheduler.quantum_hint() * scale)
+        tq = self._tenants.get(entry.tenant)
+        if tq is None:
+            tq = self._tenants[entry.tenant] = _TenantQueue(
+                entry.tenant, float(entry.weight))
+            self._ring.append(entry.tenant)
+        tq.weight = float(entry.weight)       # latest submission wins
+        tq.entries.append(entry)
+
+    def discard(self, entry) -> None:
+        """Forget a finalized/failed entry and free its capacity slots.
+
+        Args:
+            entry: the launch previously admitted (or a fused entry
+                produced by the materializer, which frees all its
+                members' slots at once).
+        """
+        self._in_flight -= getattr(entry, "slots", 1)
+        if entry in self._active:
+            self._active.remove(entry)
+        tq = self._tenants.get(getattr(entry, "tenant", None))
+        if tq is not None and entry in tq.entries:
+            tq.entries.remove(entry)
+            if not tq.entries:      # classic DRR: credit dies with the flow
+                del self._tenants[tq.key]
+                self._ring.remove(tq.key)
+
+    # -- fusion staging ----------------------------------------------------
+    def pending_fusion(self) -> int:
+        """Staged members still waiting in their batching window."""
+        return sum(len(g.members) for g in self._staged.values())
+
+    def next_ripen_in(self, now: float) -> Optional[float]:
+        """Seconds until the oldest staged group ripens (None if empty)."""
+        if not self._staged:
+            return None
+        t_first = min(g.t_first for g in self._staged.values())
+        return max(0.0, self.config.fuse_wait_s - (now - t_first))
+
+    def flush(self, now: float = 0.0, force: bool = False) -> None:
+        """Materialize every staged group whose batching window elapsed.
+
+        Args:
+            now: current time, compared against each group's first-member
+                timestamp.
+            force: flush regardless of ripeness (engine shutdown, or the
+                simulator once no further submissions can arrive).
+        """
+        for key in list(self._staged):
+            group = self._staged[key]
+            if (force or len(group.members) >= self.config.fuse_limit
+                    or now - group.t_first >= self.config.fuse_wait_s):
+                self._flush_group(key)
+
+    def _flush_group(self, key) -> None:
+        """Turn one staged group into schedulable entries."""
+        group = self._staged.pop(key)
+        if len(group.members) < 2 or self._fuse_materialize is None:
+            for m in group.members:
+                self._activate(m)
+            return
+        fused = self._fuse_materialize(group.members)
+        fused.slots = sum(getattr(m, "slots", 1) for m in group.members)
+        self.fused_batches += 1
+        self.fused_members += len(group.members)
+        self._activate(fused)
+
+    # -- package selection -------------------------------------------------
+    def next_work(self, unit: int) -> Optional[tuple[object, Package]]:
+        """Pick the next package for an idle unit under the active policy.
+
+        Args:
+            unit: index of the idle Coexecution Unit.
+
+        Returns:
+            ``(entry, package)`` for the launch whose turn it is, or
+            ``None`` when no admitted launch can serve this unit right now
+            (drained schedulers, staged-only work, or per-unit exhaustion
+            such as a static share already served).
+        """
+        if self.config.policy == "wfq":
+            return self._next_wfq(unit)
+        return self._next_fifo(unit)
+
+    def _pull(self, entry, unit: int) -> Optional[Package]:
+        """Ask one entry's scheduler for a package (with speed refresh)."""
+        if getattr(entry, "failed", False):
+            return None
+        if self._speed_refresh is not None:
+            self._speed_refresh(entry)
+        return entry.scheduler.next_package(unit)
+
+    def _next_fifo(self, unit: int) -> Optional[tuple[object, Package]]:
+        """PR 1 semantics: first admitted launch with a package wins."""
+        for entry in self._active:
+            pkg = self._pull(entry, unit)
+            if pkg is not None:
+                self.dispatched += 1
+                return entry, pkg
+        return None
+
+    def _quantum(self) -> int:
+        """DRR credit per round: configured, or the largest package hint."""
+        return self.config.quantum or self._auto_quantum
+
+    def _next_wfq(self, unit: int) -> Optional[tuple[object, Package]]:
+        """Deficit-round-robin scan over tenant flows.
+
+        A flow with credit serves one package and pays its size (credit
+        may go briefly negative — surplus round robin — so schedulers
+        keep full control of package sizing). When a full pass finds only
+        credit-starved flows, the scan *fast-forwards* them the minimum
+        number of whole rounds (``weight * quantum`` each) that puts the
+        closest flow back in credit — equivalent to running those empty
+        DRR rounds one by one, so service per tenant converges to the
+        weight ratio while flows stay backlogged (the 2:1 fairness
+        property the tests pin) for any weight or quantum scale, and
+        ``None`` is returned only when no flow can serve this unit at
+        all.
+        """
+        n = len(self._ring)
+        if n == 0:
+            return None
+        while True:
+            starved: list[_TenantQueue] = []
+            for _ in range(n):
+                tq = self._tenants[self._ring[self._rr % n]]
+                if not tq.entries:
+                    self._rr += 1
+                    continue
+                if tq.deficit <= 0.0:
+                    starved.append(tq)
+                    self._rr += 1
+                    continue
+                got = None
+                for entry in tq.entries:
+                    pkg = self._pull(entry, unit)
+                    if pkg is not None:
+                        got = (entry, pkg)
+                        break
+                if got is None:     # nothing for *this* unit in this flow
+                    self._rr += 1
+                    continue
+                tq.deficit -= got[1].size * getattr(got[0], "wfq_cost_scale",
+                                                    1)
+                if tq.deficit <= 0.0:
+                    self._rr += 1
+                self.dispatched += 1
+                return got
+            if not starved:
+                return None
+            # fast-forward the empty rounds: every starved flow earns
+            # whole rounds of credit until the closest one goes positive
+            # (each pass retires at least one flow from `starved`, so
+            # this terminates within len(ring) passes).
+            q = self._quantum()
+            k = min(math.floor(-tq.deficit / (tq.weight * q)) + 1
+                    for tq in starved)
+            for tq in starved:
+                tq.deficit += k * tq.weight * q
+
+
+def jain_index(allocations: Sequence[float]) -> float:
+    """Jain's fairness index over per-tenant allocations.
+
+    Args:
+        allocations: one non-negative service measure per tenant
+            (items/second, completed items, 1/latency, ...).
+
+    Returns:
+        A value in ``(0, 1]``; 1.0 means perfectly equal allocations,
+        ``1/n`` means one tenant got everything.
+
+    Raises:
+        ValueError: if ``allocations`` is empty.
+    """
+    xs = [float(x) for x in allocations]
+    if not xs:
+        raise ValueError("jain_index of empty sequence")
+    s = sum(xs)
+    s2 = sum(x * x for x in xs)
+    return (s * s) / (len(xs) * s2) if s2 > 0 else 1.0

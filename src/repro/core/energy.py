@@ -22,13 +22,21 @@ from typing import Mapping, Sequence
 
 @dataclasses.dataclass(frozen=True)
 class PowerModel:
-    """Busy/idle watts per unit class plus the shared uncore+DRAM term."""
+    """Busy/idle watts per unit class plus the shared uncore+DRAM term.
+
+    Attributes:
+        busy_w: active-power watts per unit kind ("cpu"/"gpu"/"tpu").
+        idle_w: idle-power watts per unit kind.
+        uncore_dram_w: shared uncore + DRAM watts, drawn for the whole
+            execution horizon regardless of which units are busy.
+    """
 
     busy_w: Mapping[str, float]
     idle_w: Mapping[str, float]
     uncore_dram_w: float
 
     def unit_energy(self, kind: str, busy_s: float, idle_s: float) -> float:
+        """Joules one unit kind burns over its busy and idle seconds."""
         return self.busy_w[kind] * busy_s + self.idle_w[kind] * idle_s
 
     def total_energy(self, busy: Mapping[str, float], horizon_s: float) -> float:
@@ -64,7 +72,13 @@ TPU_POWER = PowerModel(
 
 @dataclasses.dataclass(frozen=True)
 class EnergyReport:
-    """Per-region Joules + derived metrics, mirroring Fig. 6/7."""
+    """Per-region Joules + derived metrics, mirroring Fig. 6/7.
+
+    Attributes:
+        per_unit_J: modeled Joules per unit kind (busy + idle share).
+        uncore_dram_J: shared uncore/DRAM Joules over the horizon.
+        runtime_s: execution horizon the report integrates over.
+    """
 
     per_unit_J: Mapping[str, float]
     uncore_dram_J: float
@@ -72,6 +86,7 @@ class EnergyReport:
 
     @property
     def total_J(self) -> float:
+        """Total modeled energy across all regions."""
         return sum(self.per_unit_J.values()) + self.uncore_dram_J
 
     @property
@@ -82,6 +97,7 @@ class EnergyReport:
 
 def energy_report(power: PowerModel, busy_s: Mapping[str, float],
                   horizon_s: float) -> EnergyReport:
+    """Integrate a busy-seconds timeline into an :class:`EnergyReport`."""
     per_unit = {
         kind: power.unit_energy(kind, b, max(0.0, horizon_s - b))
         for kind, b in busy_s.items()
@@ -97,6 +113,7 @@ def edp_ratio(baseline: EnergyReport, coexec: EnergyReport) -> float:
 
 
 def geomean(xs: Sequence[float]) -> float:
+    """Geometric mean (the paper's cross-benchmark aggregate)."""
     if not xs:
         raise ValueError("geomean of empty sequence")
     prod = 1.0

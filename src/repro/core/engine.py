@@ -9,8 +9,14 @@ launch. This module provides that engine for the Coexecutor Runtime:
   :meth:`CoexecEngine.start` and parked on a condition variable when idle;
 * a multi-tenant launch queue — any number of callers may
   :meth:`CoexecEngine.submit` co-executions concurrently; packages from all
-  in-flight launches interleave on the same units (FIFO between launches,
-  on-demand within a launch, exactly the Commander protocol of Fig. 2a);
+  in-flight launches interleave on the same units under the engine's
+  admission policy (FIFO by default — the Commander protocol of Fig. 2a —
+  or weighted-fair queueing across tenants);
+* a cross-launch :class:`~.admission.AdmissionController` between ``submit``
+  and the workers: deficit-round-robin fairness (``admission="wfq"``),
+  coalescing of small same-shaped concurrent launches into shared vmapped
+  dispatches (``fuse=True``), and backpressure (``max_inflight`` with a
+  blocking or :class:`~.admission.AdmissionFull`-raising submit path);
 * per-launch isolation — each launch owns its scheduler, output container,
   package log and :class:`LaunchStats`; completion is surfaced through a
   :class:`LaunchHandle` future, so independent callers never observe each
@@ -21,10 +27,10 @@ launch. This module provides that engine for the Coexecutor Runtime:
 
 Lifecycle::
 
-    engine = CoexecEngine(units)
+    engine = CoexecEngine(units, admission="wfq", fuse=True)
     engine.start()
-    h1 = engine.submit(sched1, kernel_a, inputs_a, out_a)
-    h2 = engine.submit(sched2, kernel_b, inputs_b, out_b)   # interleaves
+    h1 = engine.submit(sched1, kernel_a, inputs_a, out_a, tenant="u1")
+    h2 = engine.submit(sched2, kernel_b, inputs_b, out_b, tenant="u2")
     out_a = h1.result(); out_b = h2.result()
     engine.shutdown()            # drains in-flight launches, joins threads
 
@@ -44,11 +50,30 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .admission import (AdmissionConfig, AdmissionController, AdmissionFull,
+                        coerce_admission)
 from .memory import MemoryModel
-from .package import Package, validate_cover
+from .package import Package, Range, validate_cover
 from .profiler import SpeedBoard
-from .scheduler import HGuidedScheduler, Scheduler
+from .scheduler import DynamicScheduler, HGuidedScheduler, Scheduler
 from .units import JaxUnit
+
+# Pre-3.11 `concurrent.futures.TimeoutError` is not the builtin; subclass
+# whichever classes exist so `except TimeoutError` catches both flavors.
+_TIMEOUT_BASES = ((TimeoutError,)
+                  if concurrent.futures.TimeoutError is TimeoutError
+                  else (concurrent.futures.TimeoutError, TimeoutError))
+
+
+class LaunchWaitTimeout(*_TIMEOUT_BASES):
+    """The *wait* on a LaunchHandle timed out; the launch itself is fine.
+
+    Distinguishes "I gave up waiting" from "the launch failed": a launch
+    whose kernel raised ``TimeoutError`` surfaces that original exception
+    from :meth:`LaunchHandle.result` / returns it from
+    :meth:`LaunchHandle.exception`, never this class. Subclasses
+    ``TimeoutError`` (both flavors), so broad handlers keep working.
+    """
 
 
 @dataclasses.dataclass
@@ -57,7 +82,10 @@ class LaunchStats:
 
     Isolated per submit: concurrent launches on the same engine each get
     their own instance (busy seconds are derived from this launch's
-    packages only, never from cumulative unit counters).
+    packages only, never from cumulative unit counters). For a launch that
+    was served through a fused batch, ``packages`` holds one synthesized
+    package covering the launch's whole index space, timed by the shared
+    dispatch that computed it.
     """
 
     total_s: float
@@ -66,6 +94,7 @@ class LaunchStats:
 
     @property
     def num_packages(self) -> int:
+        """Number of packages this launch was served as."""
         return len(self.packages)
 
 
@@ -83,16 +112,70 @@ class LaunchHandle:
         self._future: concurrent.futures.Future = concurrent.futures.Future()
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
-        return self._future.result(timeout)
+        """Block until the launch completes and return its output.
+
+        Args:
+            timeout: max seconds to wait; ``None`` waits forever.
+
+        Returns:
+            The launch's output container (the ``out`` array passed to
+            ``submit``, now fully written).
+
+        Raises:
+            LaunchWaitTimeout: the wait timed out while the launch is
+                still in flight (never raised for a finished launch).
+            BaseException: whatever the launch itself failed with — a
+                kernel's own ``TimeoutError`` surfaces as-is and is
+                therefore distinguishable from a wait timeout.
+        """
+        try:
+            return self._future.result(timeout)
+        except _TIMEOUT_BASES as e:
+            if not self._future.done():
+                raise LaunchWaitTimeout(
+                    f"launch {self.launch_id} still in flight after "
+                    f"{timeout}s") from None
+            if self._future.exception() is e:
+                raise    # the launch *failed* with a TimeoutError: keep it
+            # the launch settled in the instant after the wait expired:
+            # surface its real outcome, not the raced wait timeout
+            return self._future.result()
 
     def exception(self, timeout: Optional[float] = None):
-        return self._future.exception(timeout)
+        """Block until the launch settles and return its exception.
+
+        Args:
+            timeout: max seconds to wait; ``None`` waits forever.
+
+        Returns:
+            The exception the launch failed with (``TimeoutError``
+            included — returned, not raised), or ``None`` on success.
+
+        Raises:
+            LaunchWaitTimeout: the wait timed out while the launch is
+                still in flight. This is the only exception this method
+                raises, so raise-vs-return cleanly separates "gave up
+                waiting" from "launch failed".
+        """
+        try:
+            return self._future.exception(timeout)
+        except _TIMEOUT_BASES:
+            if not self._future.done():
+                raise LaunchWaitTimeout(
+                    f"launch {self.launch_id} still in flight after "
+                    f"{timeout}s") from None
+            # settled in the instant after the wait expired (a stored
+            # TimeoutError is *returned* above, never raised, so the only
+            # raise path here is the raced wait timeout)
+            return self._future.exception()
 
     def done(self) -> bool:
+        """Whether the launch has completed (successfully or not)."""
         return self._future.done()
 
     @property
     def packages(self) -> list[Package]:
+        """Packages served for this launch (empty until completion)."""
         return self.stats.packages if self.stats is not None else []
 
 
@@ -101,7 +184,8 @@ class _Launch:
 
     __slots__ = ("id", "scheduler", "kernel", "inputs", "out", "adaptive",
                  "handle", "outstanding", "done_pkgs", "failed", "finalized",
-                 "t_submit")
+                 "t_submit", "tenant", "weight", "fuse_key", "slots",
+                 "members", "wfq_cost_scale")
 
     def __init__(self, launch_id: int, scheduler: Scheduler, kernel: Callable,
                  inputs: Sequence[np.ndarray], out: np.ndarray,
@@ -118,33 +202,77 @@ class _Launch:
         self.failed = False
         self.finalized = False
         self.t_submit = time.perf_counter()
+        self.tenant = f"launch-{launch_id}"
+        self.weight = 1.0
+        self.fuse_key = None
+        self.slots = 1
+        self.members: Optional[list["_Launch"]] = None   # fused batches only
+        self.wfq_cost_scale = 1      # work-items each package unit is worth
 
 
 class CoexecEngine:
-    """Long-lived per-unit worker threads fed from a multi-tenant queue."""
+    """Long-lived per-unit worker threads fed from a multi-tenant queue.
+
+    The queueing discipline between ``submit`` and the workers is the
+    :class:`~.admission.AdmissionController` (``engine.admission``): FIFO
+    or weighted-fair, optional launch fusion, optional backpressure.
+    """
 
     def __init__(self, units: Sequence[JaxUnit], *,
-                 memory: MemoryModel = MemoryModel.USM):
+                 memory: MemoryModel = MemoryModel.USM,
+                 admission: "str | AdmissionConfig" = "fifo",
+                 fuse: Optional[bool] = None,
+                 max_inflight: Optional[int] = None):
+        """Build an engine over a fixed set of Coexecution Units.
+
+        Args:
+            units: the Coexecution Units; one worker thread each.
+            memory: USM or BUFFERS collection semantics.
+            admission: policy name (``"fifo"`` / ``"wfq"``) or a full
+                :class:`~.admission.AdmissionConfig`.
+            fuse: overrides the config's ``fuse`` flag when given.
+            max_inflight: overrides the config's launch cap when given.
+
+        Raises:
+            ValueError: on an empty unit list or bad admission options.
+        """
         if not units:
             raise ValueError("need at least one Coexecution Unit")
         self.units = list(units)
         self.memory = memory
+        cfg = coerce_admission(admission)
+        if fuse is not None:
+            cfg = dataclasses.replace(cfg, fuse=bool(fuse))
+        if max_inflight is not None:
+            cfg = dataclasses.replace(cfg, max_inflight=int(max_inflight))
+        self.admission = AdmissionController(
+            len(self.units), cfg,
+            fuse_materialize=self._materialize_fused,
+            speed_refresh=self._refresh_speeds)
         self.board = SpeedBoard(len(self.units),
                                 hints=[u.speed_hint for u in self.units])
         self._cv = threading.Condition()
-        self._launches: list[_Launch] = []   # active, FIFO submit order
         self._ids = itertools.count()
         self._threads: list[threading.Thread] = []
+        self._fused_kernels: dict = {}
         self._stop = False
         self._started = False
 
     # -- lifecycle ---------------------------------------------------------
     @property
     def running(self) -> bool:
+        """Whether the engine has started and not yet shut down."""
         return self._started and not self._stop
 
     def start(self) -> "CoexecEngine":
-        """Spawn the per-unit management threads (idempotent)."""
+        """Spawn the per-unit management threads (idempotent).
+
+        Returns:
+            The engine itself, for chaining.
+
+        Raises:
+            RuntimeError: if the engine was already shut down.
+        """
         with self._cv:
             if self._started:
                 if self._stop:
@@ -160,7 +288,11 @@ class CoexecEngine:
         return self
 
     def shutdown(self, wait: bool = True) -> None:
-        """Stop accepting launches; drain in-flight ones, join workers."""
+        """Stop accepting launches; drain in-flight ones, join workers.
+
+        Args:
+            wait: block until every worker thread has exited.
+        """
         with self._cv:
             self._stop = True
             self._cv.notify_all()
@@ -169,20 +301,44 @@ class CoexecEngine:
                 t.join()
 
     def __enter__(self) -> "CoexecEngine":
+        """Start the engine on context entry."""
         return self.start()
 
     def __exit__(self, *exc) -> None:
+        """Drain and shut the engine down on context exit."""
         self.shutdown()
 
     # -- submission --------------------------------------------------------
     def submit(self, scheduler: Scheduler, kernel: Callable,
                inputs: Sequence[np.ndarray], out: np.ndarray,
-               *, adaptive: bool = True) -> LaunchHandle:
+               *, adaptive: bool = True, tenant: Optional[str] = None,
+               weight: float = 1.0, block: bool = True) -> LaunchHandle:
         """Enqueue one co-execution; returns immediately with its handle.
 
         The scheduler must be built for this engine's unit count. Packages
         are pulled on demand by whichever units go idle, interleaved with
-        every other in-flight launch.
+        every other in-flight launch under the admission policy.
+
+        Args:
+            scheduler: fresh one-shot load balancer for this launch.
+            kernel: package kernel ``fn(offset, *chunks) -> chunk_out``.
+            inputs: full host input arrays (sliced per package).
+            out: preallocated output container the results land in.
+            adaptive: refresh HGuided speeds from the engine's SpeedBoard.
+            tenant: fairness flow this launch belongs to; defaults to a
+                per-launch tenant (WFQ then means fair across launches).
+            weight: relative WFQ share of the tenant (latest submit wins).
+            block: when the engine is at ``max_inflight`` capacity, wait
+                for a slot (True) or raise immediately (False).
+
+        Returns:
+            The launch's :class:`LaunchHandle`.
+
+        Raises:
+            ValueError: mismatched unit count, reused scheduler, or
+                non-positive weight.
+            RuntimeError: engine not started, or shut down.
+            AdmissionFull: at capacity and ``block=False``.
         """
         if scheduler.num_units != len(self.units):
             raise ValueError(
@@ -194,45 +350,136 @@ class CoexecEngine:
             # shutdown's drain). Schedulers are one-shot by design.
             raise ValueError("scheduler has already issued work; build a "
                              "fresh scheduler per launch")
+        if weight <= 0:
+            raise ValueError("weight must be positive")
         with self._cv:
             if self._stop:
                 raise RuntimeError("engine is shut down")
             if not self._started:
                 raise RuntimeError("engine not started; call start() first "
                                    "(or use it as a context manager)")
+            while not self.admission.has_capacity():
+                if not block:
+                    raise AdmissionFull(
+                        f"{self.admission.in_flight} launches in flight "
+                        f"(max_inflight="
+                        f"{self.admission.config.max_inflight})")
+                self._cv.wait(timeout=0.05)
+                if self._stop:
+                    raise RuntimeError("engine is shut down")
             launch = _Launch(next(self._ids), scheduler, kernel, inputs, out,
                              adaptive)
-            self._launches.append(launch)
+            if tenant is not None:
+                launch.tenant = str(tenant)
+            launch.weight = float(weight)
+            launch.fuse_key = self._fuse_key(scheduler, kernel, inputs, out)
+            self.admission.admit(launch, time.perf_counter())
             self._cv.notify_all()
         return launch.handle
 
+    # -- fusion ------------------------------------------------------------
+    def _fuse_key(self, scheduler: Scheduler, kernel: Callable,
+                  inputs: Sequence[np.ndarray], out: np.ndarray):
+        """Coalescing key, or None when this launch is not fusion-eligible.
+
+        Eligible launches are small (≤ ``fuse_threshold`` items) with every
+        input and the output indexed by the full index space on axis 0 —
+        the shape contract that makes member stacking a pure reshape.
+        """
+        cfg = self.admission.config
+        if not cfg.fuse:
+            return None
+        total = scheduler.total
+        if total > cfg.fuse_threshold:
+            return None
+        arrs = [np.asarray(a) for a in inputs]
+        if any(a.ndim < 1 or a.shape[0] != total for a in arrs):
+            return None
+        if out.shape[0] != total:
+            return None
+        return (kernel, total,
+                tuple((a.shape, str(a.dtype)) for a in arrs),
+                tuple(out.shape), str(out.dtype))
+
+    def _fused_kernel(self, fn: Callable) -> Callable:
+        """Vmapped wrapper computing whole members at member-local offset 0.
+
+        A fused package covers whole members, so each member's chunk spans
+        its entire index space and the correct kernel offset is 0 — the
+        wrapper maps the original kernel over the member axis, which keeps
+        index-dependent kernels (Mandelbrot coordinates etc.) bitwise
+        faithful to their unfused execution. Cached per kernel so repeated
+        fusion reuses one jit entry per batch shape.
+        """
+        got = self._fused_kernels.get(fn)
+        if got is None:
+            import jax
+            import jax.numpy as jnp
+
+            def fused(offset, *chunks, _fn=fn):
+                member = lambda *cs: _fn(jnp.int32(0), *cs)   # noqa: E731
+                return jax.vmap(member)(*chunks)
+
+            self._fused_kernels[fn] = got = fused
+        return got
+
+    def _materialize_fused(self, members: list[_Launch]) -> _Launch:
+        """Coalesce staged member launches into one fused launch.
+
+        Member inputs are stacked along a new leading *member* axis; the
+        fused index space is the member count, split across units by a
+        Dynamic scheduler with one package per unit, so N small requests
+        cost ~one dispatch per unit.
+        """
+        first = members[0]
+        n_inputs = len(first.inputs)
+        inputs = [np.stack([np.asarray(m.inputs[j]) for m in members])
+                  for j in range(n_inputs)]
+        out = np.zeros((len(members), *first.out.shape), first.out.dtype)
+        sched = DynamicScheduler(len(members), len(self.units),
+                                 num_packages=min(len(members),
+                                                  len(self.units)))
+        fused = _Launch(next(self._ids), sched,
+                        self._fused_kernel(first.kernel), inputs, out,
+                        adaptive=False)
+        fused.tenant = f"fused-{fused.id}"
+        fused.weight = sum(m.weight for m in members)
+        fused.members = list(members)
+        # the fused scheduler's index space is *members*; WFQ credit is
+        # accounted in work-items, so each member unit costs its whole
+        # index space (keeps engine fairness on the sim's scale)
+        fused.wfq_cost_scale = first.scheduler.total
+        return fused
+
     # -- worker loop -------------------------------------------------------
+    def _refresh_speeds(self, launch: _Launch) -> None:
+        """Feed SpeedBoard throughput into an adaptive launch's scheduler."""
+        if launch.adaptive and isinstance(launch.scheduler, HGuidedScheduler):
+            for i, s in enumerate(self.board.speeds()):
+                launch.scheduler.update_speed(i, s)
+
     def _next_work(self, unit_idx: int) -> Optional[tuple[_Launch, Package]]:
         """Pull the next package for `unit_idx` (caller holds the cv)."""
-        for launch in self._launches:
-            if launch.failed:
-                continue
-            sched = launch.scheduler
-            if launch.adaptive and isinstance(sched, HGuidedScheduler):
-                for i, s in enumerate(self.board.speeds()):
-                    sched.update_speed(i, s)
-            pkg = sched.next_package(unit_idx)
-            if pkg is not None:
-                launch.outstanding += 1
-                return launch, pkg
-        return None
+        self.admission.flush(time.perf_counter(), force=self._stop)
+        got = self.admission.next_work(unit_idx)
+        if got is not None:
+            got[0].outstanding += 1
+        return got
 
     def _finalize_locked(self, launch: _Launch) -> None:
         """Resolve a launch whose last package was collected (cv held)."""
         if launch.finalized:
             return
         launch.finalized = True
-        if launch in self._launches:
-            self._launches.remove(launch)
+        self.admission.discard(launch)
         try:
             validate_cover(launch.done_pkgs, launch.scheduler.total)
         except BaseException as e:
-            launch.handle._future.set_exception(e)
+            for h in self._handles_of(launch):
+                h._future.set_exception(e)
+            return
+        if launch.members is not None:
+            self._demux_fused_locked(launch)
             return
         busy: dict[str, float] = {u.name: 0.0 for u in self.units}
         for p in launch.done_pkgs:
@@ -243,27 +490,62 @@ class CoexecEngine:
             unit_busy_s=busy)
         launch.handle._future.set_result(launch.out)
 
+    def _demux_fused_locked(self, fused: _Launch) -> None:
+        """Scatter a completed fused batch back to its member launches.
+
+        Each member gets its output row copied into its own container and
+        a synthesized single-package stats record timed by the shared
+        dispatch that computed it.
+        """
+        now = time.perf_counter()
+        pkgs = sorted(fused.done_pkgs, key=lambda p: p.offset)
+        for i, m in enumerate(fused.members):
+            cover = next(p for p in pkgs
+                         if p.offset <= i < p.offset + p.size)
+            mp = Package(rng=Range(0, m.scheduler.total), seq=0,
+                         unit=cover.unit)
+            mp.t_issue, mp.t_launch = cover.t_issue, cover.t_launch
+            mp.t_complete, mp.t_collected = cover.t_complete, cover.t_collected
+            busy = {u.name: 0.0 for u in self.units}
+            busy[self.units[cover.unit].name] = max(
+                cover.t_complete - cover.t_issue, 0.0) / cover.size
+            np.copyto(m.out, fused.out[i])
+            m.handle.stats = LaunchStats(total_s=now - m.t_submit,
+                                         packages=[mp], unit_busy_s=busy)
+            m.handle._future.set_result(m.out)
+
+    def _handles_of(self, launch: _Launch) -> list[LaunchHandle]:
+        """Handles resolved by this entry (members for a fused batch)."""
+        if launch.members is not None:
+            return [m.handle for m in launch.members]
+        return [launch.handle]
+
     def _fail_locked(self, launch: _Launch, err: BaseException) -> None:
         """Abort a launch on its first package error (cv held)."""
         if launch.failed or launch.finalized:
             return
         launch.failed = True
         launch.finalized = True
-        if launch in self._launches:
-            self._launches.remove(launch)
-        launch.handle._future.set_exception(err)
+        self.admission.discard(launch)
+        for h in self._handles_of(launch):
+            h._future.set_exception(err)
 
     def _worker(self, unit_idx: int) -> None:
+        """One Coexecution Unit's management loop (runs on its own thread)."""
         unit = self.units[unit_idx]
         while True:
             with self._cv:
                 work = self._next_work(unit_idx)
                 while work is None:
-                    if self._stop and not self._launches:
+                    if self._stop and self.admission.drained():
                         return
-                    # Park until a submit / completion / shutdown wakes us.
-                    # The timeout is a safety net against lost wakeups only.
-                    self._cv.wait(timeout=0.1)
+                    # Park until a submit / completion / shutdown wakes us
+                    # (or a staged fusion group ripens). The timeout is
+                    # also a safety net against lost wakeups.
+                    ripen = self.admission.next_ripen_in(time.perf_counter())
+                    wait = 0.1 if ripen is None else min(0.1,
+                                                         max(ripen, 1e-4))
+                    self._cv.wait(timeout=wait)
                     work = self._next_work(unit_idx)
             launch, pkg = work
             pkg.t_issue = time.perf_counter()

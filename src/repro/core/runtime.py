@@ -31,6 +31,7 @@ import numpy as np
 
 import jax
 
+from .admission import AdmissionConfig
 from .engine import CoexecEngine, LaunchHandle, LaunchStats
 from .memory import MemoryModel
 from .scheduler import SPEED_HINT_POLICIES, make_scheduler
@@ -76,6 +77,9 @@ class CoexecutorRuntime:
         self._memory = MemoryModel.USM
         self._dist: Optional[Sequence[float]] = None
         self._scheduler_kw: dict = {}
+        self._admission: "str | AdmissionConfig" = "fifo"
+        self._fuse: Optional[bool] = None
+        self._max_inflight: Optional[int] = None
         self._engine: Optional[CoexecEngine] = None
         self.last_stats: Optional[LaunchStats] = None
 
@@ -83,7 +87,27 @@ class CoexecutorRuntime:
     def config(self, units: Optional[Sequence[JaxUnit]] = None,
                *, dist: Optional[float | Sequence[float]] = None,
                memory: str | MemoryModel = MemoryModel.USM,
+               admission: "str | AdmissionConfig" = "fifo",
+               fuse: Optional[bool] = None,
+               max_inflight: Optional[int] = None,
                **scheduler_kw) -> "CoexecutorRuntime":
+        """Configure units, memory model, admission policy and scheduler.
+
+        Args:
+            units: Coexecution Units (default: one per local jax device).
+            dist: computing-power hint — a scalar is the first unit's
+                share (the paper's ``dist(0.35)``), a sequence is per-unit.
+            memory: ``"usm"`` or ``"buffers"`` collection semantics.
+            admission: cross-launch policy name (``"fifo"`` / ``"wfq"``)
+                or a full :class:`~.admission.AdmissionConfig`.
+            fuse: coalesce small concurrent same-shaped launches.
+            max_inflight: backpressure cap on admitted launches.
+            **scheduler_kw: forwarded to :func:`~.scheduler.make_scheduler`.
+
+        Returns:
+            The runtime itself, for chaining. Reconfiguring shuts down any
+            running engine (its units/memory/admission may have changed).
+        """
         self._units = list(units) if units is not None else None
         if isinstance(dist, (int, float)):
             # scalar hint = first unit's share, remainder spread evenly
@@ -95,6 +119,9 @@ class CoexecutorRuntime:
             self._dist = [float(x) for x in dist]
         self._memory = (memory if isinstance(memory, MemoryModel)
                         else MemoryModel(str(memory).lower()))
+        self._admission = admission
+        self._fuse = fuse
+        self._max_inflight = max_inflight
         self._scheduler_kw = scheduler_kw
         # a reconfigure invalidates the running engine (units/memory change)
         self.shutdown()
@@ -110,8 +137,10 @@ class CoexecutorRuntime:
         if self._engine is None or not self._engine.running:
             if self._units is None:
                 self._units = counits_from_devices()
-            self._engine = CoexecEngine(self._units,
-                                        memory=self._memory).start()
+            self._engine = CoexecEngine(
+                self._units, memory=self._memory,
+                admission=self._admission, fuse=self._fuse,
+                max_inflight=self._max_inflight).start()
         return self._engine
 
     def shutdown(self) -> None:
@@ -132,13 +161,38 @@ class CoexecutorRuntime:
                      out: Optional[np.ndarray] = None,
                      *, out_dtype=np.float32,
                      out_trailing_shape: tuple = (),
-                     granularity: int = 1) -> LaunchHandle:
+                     granularity: int = 1,
+                     tenant: Optional[str] = None,
+                     weight: float = 1.0,
+                     block: bool = True) -> LaunchHandle:
         """Non-blocking co-execution: returns a :class:`LaunchHandle`.
 
         Any number of launches may be in flight at once; their packages
-        interleave on the engine's units, and each handle carries its own
-        isolated stats. ``handle.result()`` blocks until this launch's
-        whole index space is computed and collected.
+        interleave on the engine's units under the configured admission
+        policy, and each handle carries its own isolated stats.
+        ``handle.result()`` blocks until this launch's whole index space
+        is computed and collected.
+
+        Args:
+            total: size of the 1-D index space to co-execute.
+            kernel: package kernel ``fn(offset, *chunks) -> chunk_out``.
+            inputs: full host input arrays (sliced per package).
+            out: output container; allocated when ``None``.
+            out_dtype: dtype of the allocated output.
+            out_trailing_shape: trailing dims of the allocated output.
+            granularity: package alignment (local work size).
+            tenant: fairness flow for WFQ admission (defaults to a
+                per-launch tenant).
+            weight: relative WFQ share of the tenant.
+            block: wait for an admission slot when the engine is at
+                ``max_inflight`` capacity, instead of raising.
+
+        Returns:
+            The launch's :class:`LaunchHandle` future.
+
+        Raises:
+            AdmissionFull: engine at capacity and ``block=False``.
+            ValueError: invalid scheduler parameters for this policy.
         """
         engine = self._get_engine()
         kw = dict(self._scheduler_kw)
@@ -149,7 +203,8 @@ class CoexecutorRuntime:
                                granularity=granularity, **kw)
         if out is None:
             out = np.zeros((total, *out_trailing_shape), dtype=out_dtype)
-        return engine.submit(sched, kernel, inputs, out)
+        return engine.submit(sched, kernel, inputs, out,
+                             tenant=tenant, weight=weight, block=block)
 
     def launch(self, total: int, kernel: Callable,
                inputs: Sequence[np.ndarray],

@@ -86,10 +86,26 @@ class Scheduler(abc.ABC):
 
     @property
     def remaining(self) -> int:
+        """Work-items not yet handed out."""
         return self.total - self._cursor
 
     def done(self) -> bool:
+        """Whether the whole index space has been issued as packages."""
         return self._cursor >= self.total
+
+    def quantum_hint(self) -> int:
+        """Typical package size in work-items, for cross-launch policies.
+
+        The admission layer's deficit-round-robin needs a credit quantum
+        on the same scale as the packages this scheduler emits (too small
+        and every pull overdrafts; too large and fairness goes coarse).
+        Policies with a natural package size override this; the default is
+        a fraction of the index space per unit.
+
+        Returns:
+            A positive package-size estimate, at least ``granularity``.
+        """
+        return max(self.granularity, self.total // max(1, 4 * self.num_units))
 
     # -- policy hook ------------------------------------------------------
     @abc.abstractmethod
@@ -98,6 +114,15 @@ class Scheduler(abc.ABC):
 
     # -- public API (called by the Commander loop) -------------------------
     def next_package(self, unit: int) -> Optional[Package]:
+        """Emit the next contiguous package for an idle unit.
+
+        Args:
+            unit: Coexecution Unit index requesting work.
+
+        Returns:
+            A fresh :class:`~.package.Package`, or ``None`` when this
+            scheduler has nothing (left) for that unit.
+        """
         if self.done():
             return None
         size = self._package_size(unit)
@@ -138,7 +163,20 @@ class StaticScheduler(Scheduler):
     def _package_size(self, unit: int) -> int:  # pragma: no cover - unused
         return self._sizes[unit]
 
+    def quantum_hint(self) -> int:
+        """Largest static share — one package is one unit's whole region."""
+        return max(max(self._sizes), self.granularity)
+
     def next_package(self, unit: int) -> Optional[Package]:
+        """Serve unit `unit` its precomputed region, exactly once.
+
+        Args:
+            unit: Coexecution Unit index requesting work.
+
+        Returns:
+            The unit's static share as one package, or ``None`` if the
+            unit was already served (or its share rounded to zero).
+        """
         # Each unit gets exactly its precomputed share, once. Unit i's
         # region is [bounds[i], bounds[i+1]) — deterministic placement, as
         # the paper's static split fixes regions at configure time.
@@ -171,6 +209,10 @@ class DynamicScheduler(Scheduler):
 
     def _package_size(self, unit: int) -> int:
         return self._pkg_size
+
+    def quantum_hint(self) -> int:
+        """The fixed equal-package size."""
+        return max(self._pkg_size, self.granularity)
 
 
 class HGuidedScheduler(Scheduler):
@@ -259,6 +301,7 @@ class WorkStealingScheduler(Scheduler):
         bounds = static_bounds(total, self.speeds, granularity)
         self._deques: list[collections.deque[Range]] = []
         self._load = [0] * num_units        # un-issued items per deque
+        self._chunk_hint = granularity
         for i in range(num_units):
             lo, hi = bounds[i], bounds[i + 1]
             dq: collections.deque[Range] = collections.deque()
@@ -266,6 +309,7 @@ class WorkStealingScheduler(Scheduler):
                 step = (chunk_items if chunk_items is not None
                         else max(1, math.ceil((hi - lo) / chunks_per_unit)))
                 step = _align_up(step, granularity)
+                self._chunk_hint = max(self._chunk_hint, step)
                 for off in range(lo, hi, step):
                     dq.append(Range(off, min(step, hi - off)))
             self._deques.append(dq)
@@ -274,6 +318,10 @@ class WorkStealingScheduler(Scheduler):
     def _package_size(self, unit: int) -> int:  # pragma: no cover - unused
         dq = self._deques[unit]
         return dq[0].size if dq else 0
+
+    def quantum_hint(self) -> int:
+        """The seed chunk size (steals move chunks, never resize them)."""
+        return self._chunk_hint
 
     def _steal_into(self, unit: int) -> None:
         victim = max((j for j in range(self.num_units) if j != unit),
@@ -291,6 +339,15 @@ class WorkStealingScheduler(Scheduler):
         self.steals += 1
 
     def next_package(self, unit: int) -> Optional[Package]:
+        """Pop the unit's next chunk, stealing first if its deque is dry.
+
+        Args:
+            unit: Coexecution Unit index requesting work.
+
+        Returns:
+            The next chunk as a package, or ``None`` only when every
+            deque in the system is empty.
+        """
         dq = self._deques[unit]
         if not dq:
             self._steal_into(unit)
@@ -317,7 +374,26 @@ SPEED_HINT_POLICIES = ("static", "hguided", "work_stealing")
 
 
 def make_scheduler(policy: str, total: int, num_units: int, **kw) -> Scheduler:
-    """Factory: ``make_scheduler("hguided", n, 2, speeds=[0.35, 0.65])``."""
+    """Build a load balancer by name: the paper's policy selection point.
+
+    Example: ``make_scheduler("hguided", n, 2, speeds=[0.35, 0.65])``.
+
+    Args:
+        policy: one of ``static`` / ``dynamic`` / ``hguided`` /
+            ``work_stealing`` (case/hyphen-insensitive), or the ``dynN``
+            shorthand (``dyn5`` → Dynamic with 5 packages).
+        total: size of the 1-D index space to split.
+        num_units: number of Coexecution Units the launch will run on.
+        **kw: policy-specific options (``speeds``, ``granularity``,
+            ``num_packages``, ``chunks_per_unit``, ...).
+
+    Returns:
+        A fresh one-shot :class:`Scheduler` for exactly one launch.
+
+    Raises:
+        KeyError: if ``policy`` names no registered scheduler.
+        ValueError: if the sizes/speeds are invalid for the policy.
+    """
     key = policy.lower().replace("-", "_")
     if key.startswith("dyn") and key != "dynamic":
         # convenience: "dyn5" / "dyn200" → Dynamic with N packages

@@ -13,11 +13,17 @@ served through `CoexecutorRuntime.launch_async` on a long-lived engine —
 up to --concurrent launches interleave on the same Coexecution Units.
 `--policy all` sweeps work_stealing against static/dynamic/hguided; with
 `--coexec sim` the same sweep runs on the DES instead of real threads.
+`--admission wfq` swaps the engine's FIFO drain for weighted-fair
+queueing, `--fuse` coalesces small same-shaped concurrent launches; on
+the sim path those flags (or --tenants > 1) switch to the multi-tenant
+DES sweep with p50/p99 latency and Jain fairness per row.
 
     PYTHONPATH=src python -m repro.launch.serve --coexec real \
         --policy all --requests 16 --concurrent 8 --n 65536
     PYTHONPATH=src python -m repro.launch.serve --coexec sim \
         --policy all --workload mandelbrot
+    PYTHONPATH=src python -m repro.launch.serve --coexec sim \
+        --admission wfq --fuse --tenants 16
 """
 from __future__ import annotations
 
@@ -25,6 +31,16 @@ import argparse
 import time
 
 COEXEC_POLICIES = ("static", "dynamic", "hguided", "work_stealing")
+
+
+def _percentile_ms(sorted_s: list, q: float) -> float:
+    """Nearest-rank percentile of sorted seconds, in milliseconds."""
+    import math
+
+    if not sorted_s:
+        return float("nan")
+    idx = max(0, math.ceil(q * len(sorted_s)) - 1)
+    return 1e3 * sorted_s[idx]
 
 
 def default_two_units():
@@ -41,10 +57,12 @@ def default_two_units():
 
 def coexec_real_rows(policies=COEXEC_POLICIES, *, n: int = 1 << 16,
                      requests: int = 16, concurrent: int = 8,
-                     units=None) -> list[dict]:
+                     units=None, admission: str = "fifo",
+                     fuse: bool = False) -> list[dict]:
     """Serve `requests` kernel launches per policy through the persistent
     engine (at most `concurrent` in flight); one measurement dict each.
     Shared by `serve --coexec real` and `benchmarks.run coexec`.
+    `admission`/`fuse` select the engine's cross-launch queueing policy.
     """
     import numpy as np
 
@@ -60,23 +78,32 @@ def coexec_real_rows(policies=COEXEC_POLICIES, *, n: int = 1 << 16,
     rows = []
     for policy in policies:
         with CoexecutorRuntime(policy) as rt:
-            rt.config(units=units, dist=0.4)
+            rt.config(units=units, dist=0.4, admission=admission, fuse=fuse)
             rt.launch(n, kernel, [datas[0]])        # warm the jit cache
             t0 = time.perf_counter()
-            served, pkgs, inflight = 0, 0, []
-            for d in datas:
-                inflight.append(rt.launch_async(n, kernel, [d]))
-                if len(inflight) >= concurrent:
-                    h = inflight.pop(0)
-                    h.result()
-                    served, pkgs = served + 1, pkgs + h.stats.num_packages
-            for h in inflight:
+            served, pkgs, lats, inflight = 0, 0, [], []
+
+            def _reap(h, t_sub):
+                nonlocal served, pkgs
                 h.result()
                 served, pkgs = served + 1, pkgs + h.stats.num_packages
+                lats.append(time.perf_counter() - t_sub)
+
+            for i, d in enumerate(datas):
+                inflight.append((rt.launch_async(n, kernel, [d],
+                                                 tenant=f"t{i}"),
+                                 time.perf_counter()))
+                if len(inflight) >= concurrent:
+                    _reap(*inflight.pop(0))
+            for h, t_sub in inflight:
+                _reap(h, t_sub)
             dt = time.perf_counter() - t0
+        lats.sort()
         rows.append(dict(policy=policy, requests=served, n=n,
                          concurrent=concurrent, seconds=dt, packages=pkgs,
-                         req_per_s=served / dt))
+                         req_per_s=served / dt,
+                         p50_ms=_percentile_ms(lats, 0.5),
+                         p99_ms=_percentile_ms(lats, 0.99)))
     return rows
 
 
@@ -101,18 +128,111 @@ def coexec_sim_rows(workload: str,
     return rows
 
 
+def coexec_multi_rows(workload: str = "taylor",
+                      tenants=(1, 2, 4, 8, 16, 32), *,
+                      per_tenant_items: int = 2048,
+                      num_packages: int = 16,
+                      policy: str = "dynamic",
+                      admissions=("fifo", "wfq"),
+                      fuse_modes=(False, True)) -> list[dict]:
+    """Multi-tenant admission sweep on the DES: one row per (tenant count,
+    admission policy, fusion mode) with p50/p99 latency, Jain fairness
+    over per-tenant throughput, and total dispatched packages. `policy`
+    picks each tenant's intra-launch scheduler. Shared by
+    `serve --coexec sim --admission/--fuse/--tenants` and
+    `benchmarks.run coexec-multi`.
+    """
+    from ..core import (SPEED_HINT_POLICIES, AdmissionConfig, LaunchSpec,
+                        Workload, jain_index, make_scheduler, paper_workload,
+                        simulate_multi)
+
+    import numpy as np
+
+    base, cpu, gpu = paper_workload(workload)
+    per_item_in = base.bytes_in_per_item
+    per_item_out = base.bytes_out_per_item
+    # keep the profile's irregularity: resample its per-item weights to
+    # the per-tenant problem size (as paper_workload does for size sweeps)
+    weights = None
+    if base.weights is not None:
+        idx = np.linspace(0, len(base.weights) - 1,
+                          per_tenant_items).astype(int)
+        weights = base.weights[idx]
+    sched_kw = {}
+    if policy in SPEED_HINT_POLICIES:
+        sched_kw["speeds"] = [cpu.speed, gpu.speed]
+    elif policy == "dynamic":
+        sched_kw["num_packages"] = num_packages
+
+    def specs(nt):
+        out = []
+        for t in range(nt):
+            wl = Workload(name=base.name, total=per_tenant_items,
+                          bytes_in_per_item=per_item_in,
+                          bytes_out_per_item=per_item_out,
+                          working_set_bytes=base.working_set_bytes
+                          * per_tenant_items / base.total,
+                          weights=weights,
+                          contention_scale=base.contention_scale)
+            sched = make_scheduler(policy, per_tenant_items, 2, **sched_kw)
+            out.append(LaunchSpec(wl, sched, tenant=f"t{t}"))
+        return out
+
+    rows = []
+    for nt in tenants:
+        for adm in admissions:
+            for fuse in fuse_modes:
+                cfg = AdmissionConfig(policy=adm, fuse=fuse,
+                                      fuse_threshold=per_tenant_items,
+                                      fuse_wait_s=0.0)
+                res = simulate_multi(specs(nt), [cpu, gpu], admission=cfg)
+                lats = sorted(res.latencies())
+                thru = [r.items / max(r.latency_s, 1e-12)
+                        for r in res.launches]
+                rows.append(dict(
+                    workload=workload, tenants=nt, admission=adm, fuse=fuse,
+                    policy=policy,
+                    p50_ms=_percentile_ms(lats, 0.5),
+                    p99_ms=_percentile_ms(lats, 0.99),
+                    fairness=jain_index(thru),
+                    packages=res.dispatched_packages,
+                    fused_batches=res.fused_batches,
+                    total_ms=1e3 * res.total_s))
+    return rows
+
+
 def serve_coexec_real(args) -> None:
     policies = (COEXEC_POLICIES if args.policy == "all" else (args.policy,))
     for row in coexec_real_rows(policies, n=args.n, requests=args.requests,
-                                concurrent=args.concurrent):
-        print(f"[serve/coexec] {row['policy']:13s}: {row['requests']} "
+                                concurrent=args.concurrent,
+                                admission=args.admission, fuse=args.fuse):
+        print(f"[serve/coexec] {row['policy']:13s} ({args.admission}"
+              f"{'+fuse' if args.fuse else ''}): {row['requests']} "
               f"requests ({row['concurrent']} in flight) in "
               f"{row['seconds']:.3f}s = {row['req_per_s']:6.1f} req/s, "
               f"{row['requests'] * row['n'] / row['seconds'] / 1e6:7.2f} "
-              f"Mitems/s, {row['packages']} packages")
+              f"Mitems/s, {row['packages']} packages, "
+              f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms")
 
 
 def serve_coexec_sim(args) -> None:
+    if args.admission != "fifo" or args.fuse or args.tenants is not None:
+        policies = (COEXEC_POLICIES if args.policy == "all"
+                    else (args.policy,))
+        for policy in policies:
+            for row in coexec_multi_rows(args.workload,
+                                         tenants=(args.tenants or 8,),
+                                         policy=policy,
+                                         admissions=(args.admission,),
+                                         fuse_modes=(args.fuse,)):
+                print(f"[serve/coexec-multi] {row['workload']}"
+                      f"/{row['policy']}/{row['tenants']}t/{row['admission']}"
+                      f"{'+fuse' if row['fuse'] else ''}: "
+                      f"p50={row['p50_ms']:.2f}ms p99={row['p99_ms']:.2f}ms "
+                      f"fairness={row['fairness']:.3f} "
+                      f"packages={row['packages']} "
+                      f"(fused_batches={row['fused_batches']})")
+        return
     policies = (COEXEC_POLICIES if args.policy == "all" else (args.policy,))
     for row in coexec_sim_rows(args.workload, policies):
         print(f"[serve/coexec-sim] {row['workload']}/{row['policy']:13s}: "
@@ -141,7 +261,20 @@ def main() -> None:
                     help="items per coexec request (coexec real)")
     ap.add_argument("--workload", default="mandelbrot",
                     help="paper workload profile (coexec sim)")
+    ap.add_argument("--admission", choices=["fifo", "wfq"], default="fifo",
+                    help="cross-launch queueing: FIFO drain or "
+                         "weighted-fair (deficit round robin per tenant)")
+    ap.add_argument("--fuse", action="store_true",
+                    help="coalesce small same-shaped concurrent launches "
+                         "into shared dispatches")
+    ap.add_argument("--tenants", type=int, default=None,
+                    help="concurrent tenants for the multi-tenant sim "
+                         "sweep (coexec sim; implied 8 when --admission "
+                         "wfq or --fuse is given)")
     args = ap.parse_args()
+
+    if args.tenants is not None and args.tenants < 1:
+        ap.error("--tenants must be a positive integer")
 
     if args.coexec == "real":
         return serve_coexec_real(args)

@@ -1,0 +1,34 @@
+"""Docs subsystem stays healthy: mermaid/links parse, docstrings hold.
+
+Runs the same stdlib-only checkers as CI's docs job, so a broken doc
+link or a stripped public docstring fails tier-1 locally too.
+"""
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    return subprocess.run([sys.executable, str(REPO / "scripts" / script)],
+                          capture_output=True, text=True, timeout=60)
+
+
+def test_docs_exist_and_linked_from_readme():
+    for page in ("architecture.md", "policies.md", "benchmarks.md"):
+        assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
+    readme = (REPO / "README.md").read_text()
+    assert "docs/architecture.md" in readme
+    assert "docs/policies.md" in readme
+    assert "docs/benchmarks.md" in readme
+
+
+def test_check_docs_passes():
+    proc = _run("check_docs.py")
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_check_docstrings_passes():
+    proc = _run("check_docstrings.py")
+    assert proc.returncode == 0, proc.stderr
