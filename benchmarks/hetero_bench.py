@@ -33,25 +33,32 @@ SPEEDS = {"podA": 1.0, "podB": 0.5, "podC": 0.25}
 STEPS = 24
 MICROBATCHES = 14
 
-def run_coexec():
+def run_coexec(spec=None):
     """Package-scheduler sweep: DES (sim) and persistent engine (real).
 
     The measurement loops live in `repro.launch.serve` (shared with the
     `serve --coexec {real,sim}` CLI); this wrapper only formats CSV rows.
+    `spec` is an optional `repro.api.CoexecSpec` base — `benchmarks.run`
+    builds it from its spec-derived CLI flags.
     """
-    from repro.launch.serve import coexec_real_rows, coexec_sim_rows
+    from repro.launch.serve import (coexec_real_rows, coexec_sim_rows,
+                                    default_serve_spec)
 
+    base = spec if spec is not None else default_serve_spec()
     rows = []
     # simulated path: one regular + one irregular paper workload
     for wl_name in ("taylor", "mandelbrot"):
-        for r in coexec_sim_rows(wl_name):
+        wl_spec = base.replace(workload=base.workload.replace(name=wl_name))
+        for r in coexec_sim_rows(wl_spec):
             rows.append((f"coexec-sim/{wl_name}/{r['policy']}",
                          round(r["seconds"] * 1e3, 1),
                          f"packages={r['packages']};"
                          f"balance={r['balance']:.2f};"
                          f"steals={r['steals']}"))
     # real path: concurrent launch_async requests on the engine
-    for r in coexec_real_rows(n=1 << 14, requests=8, concurrent=8):
+    real_spec = base.replace(workload=base.workload.replace(
+        name="taylor", items=1 << 14, requests=8, concurrent=8))
+    for r in coexec_real_rows(real_spec):
         rows.append((f"coexec-real/taylor/{r['policy']}",
                      round(r["seconds"] * 1e3, 1),
                      f"requests={r['requests']};packages={r['packages']};"
@@ -60,17 +67,21 @@ def run_coexec():
     return rows
 
 
-def run_coexec_multi():
+def run_coexec_multi(spec=None):
     """Admission-layer sweep: tenants x {fifo,wfq} x {unfused,fused}.
 
     Rows are `coexec-multi/<workload>/<N>t/<admission>[+fuse]` with the
     p99 latency (ms) as the value and p50/fairness/packages derived.
     Deterministic (DES virtual time): safe as a CI-tracked artifact.
     """
-    from repro.launch.serve import coexec_multi_rows
+    from repro.launch.serve import coexec_multi_rows, default_serve_spec
 
+    base = spec if spec is not None else default_serve_spec()
+    base = base.replace(workload=base.workload.replace(name="taylor"))
     rows = []
-    for r in coexec_multi_rows("taylor", tenants=(1, 2, 4, 8, 16, 32)):
+    for r in coexec_multi_rows(base, tenants=(1, 2, 4, 8, 16, 32),
+                               admissions=("fifo", "wfq"),
+                               fuse_modes=(False, True)):
         tag = f"{r['admission']}{'+fuse' if r['fuse'] else ''}"
         rows.append((f"coexec-multi/{r['workload']}/{r['tenants']}t/{tag}",
                      round(r["p99_ms"], 2),

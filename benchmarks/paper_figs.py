@@ -10,9 +10,10 @@ printed as CSV by run.py. Figures:
 """
 from __future__ import annotations
 
+from repro.api import build_scheduler
 from repro.core import (ALL_BENCHMARKS, MemoryModel, PAPER_POWER, SPECS,
-                        edp_ratio, geomean, make_scheduler, paper_workload,
-                        simulate, solo_run)
+                        edp_ratio, geomean, paper_workload, simulate,
+                        solo_run)
 from repro.core.workloads import effective_shares
 
 KINDS = {"gpu": "gpu", "cpu": "cpu"}
@@ -24,7 +25,7 @@ def _run(name, policy, mem, size_scale=1.0):
     wl, cpu, gpu = paper_workload(name, size_scale=size_scale)
     speeds = effective_shares(wl, cpu, gpu, hint_error=HINT_ERR)
     kw = {"speeds": speeds} if policy in ("static", "hguided") else {}
-    sched = make_scheduler(policy, wl.total, 2, **kw)
+    sched = build_scheduler(policy, wl.total, 2, **kw)
     res = simulate(sched, [cpu, gpu], wl, memory=mem)
     return res, wl, cpu, gpu
 
@@ -110,7 +111,7 @@ def fig8():
         for scale in (0.001, 0.01, 0.1, 0.5, 1.0, 2.0, 4.0, 8.0):
             wl, cpu, gpu = paper_workload(name, size_scale=scale)
             speeds = effective_shares(wl, cpu, gpu, hint_error=HINT_ERR)
-            sched = make_scheduler("hguided", wl.total, 2, speeds=speeds)
+            sched = build_scheduler("hguided", wl.total, 2, speeds=speeds)
             co = simulate(sched, [cpu, gpu], wl)
             g = solo_run(gpu, wl)
             c = solo_run(cpu, wl)

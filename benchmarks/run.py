@@ -3,23 +3,61 @@ benchmarks. Prints ``name,value,derived`` CSV rows.
 
   python -m benchmarks.run                 # everything
   python -m benchmarks.run fig5 fig7       # selected artifacts
+  python -m benchmarks.run coexec --policy work_stealing --n 16384
+
+The co-execution suites (``coexec`` / ``coexec-multi``) take the same
+spec-derived flags as ``repro.launch.serve`` — both CLIs generate them
+from the ``repro.api.CoexecSpec`` fields, so a new spec field becomes a
+new flag in both tools with no edits here.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 
+def build_parser(suite_names) -> argparse.ArgumentParser:
+    """Suites as positionals + the spec-derived co-execution flags.
+
+    Args:
+        suite_names: valid suite keys, for the help text.
+
+    Returns:
+        The driver's argparse parser.
+    """
+    from repro.api import add_spec_args
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("suites", nargs="*", metavar="SUITE",
+                    help=f"suites to run (default: all); "
+                         f"have {sorted(suite_names)}")
+    add_spec_args(ap)
+    return ap
+
+
 def main() -> None:
+    from repro.api import spec_from_args
+
     from . import hetero_bench, kernel_micro, paper_figs, roofline_table
+    from repro.launch.serve import default_serve_spec
+
+    ap = build_parser(
+        list(dict(paper_figs.ALL))
+        + ["kernels", "hetero", "coexec", "coexec-multi", "roofline"])
+    args = ap.parse_args()
+    try:
+        spec = spec_from_args(args, base=default_serve_spec()).validate()
+    except (KeyError, ValueError) as e:
+        ap.error(str(e))
 
     suites = dict(paper_figs.ALL)
     suites["kernels"] = kernel_micro.run
     suites["hetero"] = hetero_bench.run
-    suites["coexec"] = hetero_bench.run_coexec
-    suites["coexec-multi"] = hetero_bench.run_coexec_multi
+    suites["coexec"] = lambda: hetero_bench.run_coexec(spec)
+    suites["coexec-multi"] = lambda: hetero_bench.run_coexec_multi(spec)
     suites["roofline"] = roofline_table.run
 
-    wanted = sys.argv[1:] or list(suites)
+    wanted = args.suites or list(suites)
     print("name,value,derived")
     for key in wanted:
         if key not in suites:

@@ -7,9 +7,9 @@ import argparse
 import time
 
 import numpy as np
-import jax
 
-from repro.core import CoexecutorRuntime, counits_from_devices
+from repro.api import CoexecSpec
+from repro.core import CoexecutorRuntime
 from repro.kernels import demo_spheres, package_kernel
 
 
@@ -39,15 +39,19 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=1 << 14)
     args = ap.parse_args()
 
-    units = counits_from_devices(jax.local_devices()[:1] * 2,
-                                 kinds=["cpu", "cpu"],
-                                 speed_hints=[0.5, 0.5])
+    base = (CoexecSpec.builder()
+            .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.5, 0.5))
+            .dist(0.5)
+            .build())
+    units = base.build_units()      # shared across policies (one jit cache)
     for name in ("taylor", "mandelbrot", "ray", "rap"):
         ins = inputs_for(name, args.n)
         total = len(ins[0])
         print(f"== {name} ({total} items)")
         for policy in ("static", "dyn16", "hguided", "work_stealing"):
-            rt = CoexecutorRuntime(policy).config(units=units, dist=0.5)
+            spec = base.replace(
+                scheduler=base.scheduler.replace(policy=policy))
+            rt = CoexecutorRuntime.from_spec(spec, units=units)
             t0 = time.perf_counter()
             rt.launch(total, package_kernel(name), ins)
             dt = time.perf_counter() - t0

@@ -4,6 +4,9 @@ Demonstrates the engine lifecycle (start / submit / shutdown) and the
 serving-shaped API: independent callers fire `launch_async` against the
 same CoexecutorRuntime and their packages interleave on the shared
 Coexecution Units — no per-launch thread spawn, per-launch isolated stats.
+The whole setup is one declarative `CoexecSpec` built fluently; swap the
+policy or admission discipline from the command line without touching the
+engine code.
 
     PYTHONPATH=src python examples/concurrent_requests.py [--requests 12]
 """
@@ -12,9 +15,9 @@ import threading
 import time
 
 import numpy as np
-import jax
 
-from repro.core import CoexecutorRuntime, counits_from_devices
+from repro.api import CoexecSpec
+from repro.core import CoexecutorRuntime
 from repro.kernels import package_kernel
 
 
@@ -25,16 +28,18 @@ def main() -> None:
     ap.add_argument("--policy", default="work_stealing")
     args = ap.parse_args()
 
-    units = counits_from_devices(jax.local_devices()[:1] * 2,
-                                 kinds=["cpu", "cpu"],
-                                 speed_hints=[0.4, 0.6])
-    kernel = package_kernel("taylor")
+    spec = (CoexecSpec.builder()
+            .policy(args.policy)
+            .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.4, 0.6))
+            .dist(0.4)
+            .workload("taylor", items=args.n, requests=args.requests)
+            .build())
+    kernel = package_kernel(spec.workload.name)
     rng = np.random.default_rng(0)
     xs = [rng.uniform(-2, 2, args.n).astype(np.float32)
           for _ in range(args.requests)]
 
-    with CoexecutorRuntime(args.policy) as rt:
-        rt.config(units=units, dist=0.4)
+    with CoexecutorRuntime.from_spec(spec) as rt:
         rt.launch(args.n, kernel, [xs[0]])          # warm the jit cache
 
         # many independent "callers" submit without blocking each other
@@ -59,8 +64,8 @@ def main() -> None:
             print(f"request {i:2d}: {stats.num_packages:3d} packages, "
                   f"{stats.total_s * 1e3:6.1f} ms wall")
         print(f"\n{args.requests} concurrent requests on "
-              f"{len(units)} units in {dt:.3f}s "
-              f"({args.requests / dt:.1f} req/s), policy={args.policy}")
+              f"{len(rt.engine.units)} units in {dt:.3f}s "
+              f"({args.requests / dt:.1f} req/s), policy={rt.policy}")
         print("engine board:", rt.engine.board.snapshot())
 
 

@@ -1,11 +1,14 @@
 """Quickstart: the paper's Listing 1 — SAXPY co-executed across all local
-Coexecution Units with the HGuided balancer.
+Coexecution Units with the HGuided balancer, configured declaratively
+through `repro.api.CoexecSpec` (the spec serializes to JSON, so the whole
+setup is a reproducible artifact).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import CoexecutorRuntime, counits_from_devices
+from repro.api import CoexecSpec
+from repro.core import CoexecutorRuntime
 
 
 def main() -> None:
@@ -13,17 +16,21 @@ def main() -> None:
     data = np.arange(n, dtype=np.float32)
     datav = 3.0
 
-    # Listing 1, line by line:
-    runtime = CoexecutorRuntime(policy="hguided")          # <hg>
-    runtime.config(units=counits_from_devices(),           # CounitSet
-                   dist=0.35,                              # dist(0.35)
-                   memory="usm")
+    # Listing 1, declaratively: policy <hg>, CounitSet, dist(0.35), usm
+    spec = (CoexecSpec.builder()
+            .policy("hguided")                             # <hg>
+            .dist(0.35)                                    # dist(0.35)
+            .memory("usm")
+            .build())
+    runtime = CoexecutorRuntime.from_spec(spec)            # CounitSet:
+    # (no .units(...) call = one Coexecution Unit per local jax device)
 
     def kernel(offset, chunk):                             # the lambda
         return chunk * datav
 
     out = runtime.launch(n, kernel, [data], granularity=128)
     np.testing.assert_allclose(out, data * datav)
+    assert CoexecSpec.from_json(spec.to_json()) == spec    # lossless
 
     st = runtime.last_stats
     print(f"co-executed {n} work-items in {st.total_s * 1e3:.1f} ms "
@@ -31,6 +38,7 @@ def main() -> None:
           f"{st.num_packages} packages")
     for name, busy in st.unit_busy_s.items():
         print(f"  {name}: busy {busy * 1e3:.1f} ms")
+    runtime.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Public-API snapshot checker for `repro.api` and `repro.core`.
+
+Collects every exported name (``__all__``) of the two public packages
+plus the signatures of exported callables and the public methods of
+exported classes, and diffs the result against the checked-in snapshot
+``scripts/api_snapshot.txt``. An accidental rename, signature change or
+dropped export fails CI's docs job (and tier-1, via tests/test_docs.py)
+before any consumer notices.
+
+    python scripts/check_api.py            # verify (exit 1 on drift)
+    python scripts/check_api.py --update   # rewrite the snapshot
+
+Intentional surface changes are made by committing the updated snapshot
+alongside the code change, which makes API breaks reviewable diffs.
+"""
+from __future__ import annotations
+
+import difflib
+import enum
+import inspect
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SNAPSHOT = REPO / "scripts" / "api_snapshot.txt"
+MODULES = ("repro.api", "repro.core")
+
+sys.path.insert(0, str(REPO / "src"))
+
+_ADDR = re.compile(r"0x[0-9a-fA-F]+")
+
+
+def _sig(obj) -> str:
+    """``inspect.signature`` text with memory addresses normalized."""
+    try:
+        return _ADDR.sub("0x…", str(inspect.signature(obj)))
+    except (TypeError, ValueError):
+        return "(…)"
+
+
+def _class_lines(qual: str, cls: type) -> list[str]:
+    """Snapshot lines for one exported class: bases kind + public members."""
+    lines = []
+    if issubclass(cls, enum.Enum):
+        members = ", ".join(m.name for m in cls)
+        lines.append(f"{qual}: enum[{members}]")
+        return lines
+    import dataclasses
+
+    if dataclasses.is_dataclass(cls):
+        fields = ", ".join(f.name for f in dataclasses.fields(cls))
+        lines.append(f"{qual}: dataclass({fields})")
+    else:
+        lines.append(f"{qual}: class{_sig(cls.__init__)}")
+    for name, member in sorted(vars(cls).items()):
+        if name.startswith("_"):
+            continue
+        if isinstance(member, property):
+            lines.append(f"{qual}.{name}: property")
+        elif isinstance(member, staticmethod):
+            lines.append(f"{qual}.{name}{_sig(member.__func__)} [static]")
+        elif isinstance(member, classmethod):
+            lines.append(f"{qual}.{name}{_sig(member.__func__)} [classmethod]")
+        elif inspect.isfunction(member):
+            lines.append(f"{qual}.{name}{_sig(member)}")
+    return lines
+
+
+def snapshot_lines() -> list[str]:
+    """The current public surface, one sorted line per entry."""
+    import importlib
+
+    lines: list[str] = []
+    for mod_name in MODULES:
+        mod = importlib.import_module(mod_name)
+        exported = getattr(mod, "__all__", None)
+        if exported is None:
+            lines.append(f"{mod_name}: MISSING __all__")
+            continue
+        for name in sorted(exported):
+            obj = getattr(mod, name, None)
+            qual = f"{mod_name}.{name}"
+            if obj is None:
+                lines.append(f"{qual}: MISSING")
+            elif inspect.isclass(obj):
+                lines.extend(_class_lines(qual, obj))
+            elif inspect.ismodule(obj):
+                sub = ", ".join(sorted(getattr(obj, "__all__", ())))
+                lines.append(f"{qual}: module[{sub}]")
+            elif callable(obj):
+                lines.append(f"{qual}{_sig(obj)}")
+            else:
+                lines.append(f"{qual}: constant[{type(obj).__name__}]")
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    """Verify or update the snapshot; returns the process exit code."""
+    current = "\n".join(snapshot_lines()) + "\n"
+    if "--update" in argv:
+        SNAPSHOT.write_text(current)
+        print(f"wrote {SNAPSHOT.relative_to(REPO)} "
+              f"({len(current.splitlines())} entries)")
+        return 0
+    if not SNAPSHOT.exists():
+        print(f"{SNAPSHOT.relative_to(REPO)} missing — run "
+              f"`python scripts/check_api.py --update` and commit it",
+              file=sys.stderr)
+        return 1
+    recorded = SNAPSHOT.read_text()
+    if recorded == current:
+        print(f"public API matches {SNAPSHOT.relative_to(REPO)} "
+              f"({len(current.splitlines())} entries)")
+        return 0
+    diff = difflib.unified_diff(recorded.splitlines(), current.splitlines(),
+                                "api_snapshot.txt (recorded)",
+                                "public API (current)", lineterm="")
+    for line in diff:
+        print(line, file=sys.stderr)
+    print("\npublic API drifted from the snapshot; if intentional, run "
+          "`python scripts/check_api.py --update` and commit the diff",
+          file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -23,7 +23,12 @@ import sys
 REPO = pathlib.Path(__file__).resolve().parent.parent
 CORE = "src/repro/core"
 
+API = "src/repro/api"
+
 MODULES = [
+    f"{API}/cli.py",
+    f"{API}/registry.py",
+    f"{API}/spec.py",
     f"{CORE}/admission.py",
     f"{CORE}/energy.py",
     f"{CORE}/engine.py",
@@ -53,6 +58,18 @@ STRICT: dict[str, tuple[str, ...]] = {
     "scheduler.py::Scheduler.next_package": ("Args:", "Returns:"),
     "scheduler.py::make_scheduler": ("Args:", "Returns:", "Raises:"),
     "sim.py::simulate_multi": ("Args:", "Returns:", "Raises:"),
+    "cli.py::add_spec_args": ("Args:",),
+    "cli.py::args_from_spec": ("Args:", "Returns:"),
+    "cli.py::spec_from_args": ("Args:", "Returns:"),
+    "registry.py::build_scheduler": ("Args:", "Returns:", "Raises:"),
+    "registry.py::build_workload": ("Args:", "Returns:", "Raises:"),
+    "registry.py::register_scheduler": ("Args:", "Returns:", "Raises:"),
+    "registry.py::register_workload": ("Args:", "Returns:", "Raises:"),
+    "registry.py::validate_scheduler_options": ("Args:", "Raises:"),
+    "spec.py::CoexecSpec.from_dict": ("Args:", "Returns:", "Raises:"),
+    "spec.py::CoexecSpec.validate": ("Returns:", "Raises:"),
+    "spec.py::SchedulerSpec.build": ("Args:", "Returns:"),
+    "spec.py::UnitsSpec.resolve_dist": ("Args:", "Returns:", "Raises:"),
 }
 
 SUMMARY_ENDINGS = (".", ":", "?")

@@ -1,0 +1,44 @@
+"""`repro.api` — the declarative configuration surface of the runtime.
+
+One typed object, :class:`CoexecSpec`, configures every layer: the real
+persistent engine, the paper-facing runtime, the discrete-event
+simulators, and the CLIs (whose flags are derived from the spec fields).
+Schedulers and workloads plug in by name through :mod:`repro.api.registry`
+so third-party policies register without editing core.
+
+    from repro.api import CoexecSpec
+
+    spec = (CoexecSpec.builder()
+            .policy("hguided")
+            .admission(wfq=True, max_inflight=64)
+            .fuse(True)
+            .build())
+    rt = spec.runtime()                     # real CoexecEngine underneath
+    text = spec.to_json()                   # lossless round trip
+    assert CoexecSpec.from_json(text) == spec
+
+See ``docs/api.md`` for the schema table, builder examples and the
+registry how-to. The legacy kwarg surfaces (``rt.config(...)``,
+``make_scheduler(...)``) still work but emit ``DeprecationWarning``.
+"""
+from . import registry
+from .cli import (SPEC_SECTIONS, add_spec_args, args_from_spec,
+                  spec_from_args)
+from .registry import (SchedulerPlugin, WorkloadPlugin, build_scheduler,
+                       build_workload, register_scheduler,
+                       register_workload, scheduler_names,
+                       speed_hint_policies, temporary_plugins,
+                       validate_scheduler_options, workload_names)
+from .spec import (SPEC_VERSION, AdmissionSpec, CoexecSpec,
+                   CoexecSpecBuilder, MemorySpec, SchedulerSpec, UnitsSpec,
+                   WorkloadSpec)
+
+__all__ = [
+    "AdmissionSpec", "CoexecSpec", "CoexecSpecBuilder", "MemorySpec",
+    "SPEC_SECTIONS", "SPEC_VERSION", "SchedulerPlugin", "SchedulerSpec",
+    "UnitsSpec", "WorkloadPlugin", "WorkloadSpec", "add_spec_args",
+    "args_from_spec", "build_scheduler", "build_workload", "registry",
+    "register_scheduler", "register_workload", "scheduler_names",
+    "spec_from_args", "speed_hint_policies", "temporary_plugins",
+    "validate_scheduler_options", "workload_names",
+]

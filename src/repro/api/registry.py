@@ -1,0 +1,321 @@
+"""Plugin registry for schedulers and workloads (the `CoexecSpec` backend).
+
+The paper's runtime selects its load balancer by name (Listing 1's
+``<hg>`` template parameter); PR 1–2 rendered that as an if-chain inside
+``make_scheduler`` plus a parallel string dispatch in ``paper_workload``.
+This module replaces both with one declarative registry so third-party
+policies and workload profiles register *without editing core*:
+
+* :func:`register_scheduler` — a policy name, its factory, the exact
+  option fields its constructor accepts, and an optional per-policy
+  validation hook. Unknown/misspelled options raise :class:`ValueError`
+  naming the offending key and the accepted fields (never silently
+  ignored, never a bare ``TypeError`` from deep inside a constructor).
+* :func:`register_workload` — a profile name and a factory returning
+  ``(Workload, cpu_unit, gpu_unit)``, the contract of
+  :func:`repro.core.workloads.paper_workload`.
+* shorthand resolvers — pattern aliases such as ``dyn5`` → Dynamic with 5
+  packages register alongside the policy they expand to.
+
+This module deliberately imports nothing from ``repro.core``: core
+modules import *it* and register their built-ins at import time, which is
+what keeps the dependency graph acyclic (`api.registry` ← `core.*` ←
+`api.spec` ← `api`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional
+
+__all__ = [
+    "SchedulerPlugin", "WorkloadPlugin",
+    "register_scheduler", "register_workload",
+    "scheduler_names", "workload_names",
+    "resolve_scheduler", "build_scheduler", "build_workload",
+    "validate_scheduler_options", "speed_hint_policies",
+    "temporary_plugins",
+]
+
+
+def _normalize(policy: str) -> str:
+    return str(policy).lower().replace("-", "_")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPlugin:
+    """One registered load-balancing policy.
+
+    Attributes:
+        name: canonical policy name (lower-case, underscores).
+        factory: ``factory(total, num_units, **options) -> Scheduler``.
+        fields: option names the factory accepts beyond the positional
+            ``(total, num_units)`` pair — the validation whitelist.
+        speed_hint: whether the factory takes a ``speeds`` computing-power
+            hint (the paper's ``dist(0.35)``).
+        shorthand: optional ``fn(key) -> dict | None`` that recognizes
+            alias spellings (``dyn5``) and returns the implied options.
+        validate: optional ``fn(options: dict) -> None`` hook run before
+            construction; raise :class:`ValueError` to reject a spec.
+    """
+
+    name: str
+    factory: Callable
+    fields: tuple[str, ...] = ()
+    speed_hint: bool = False
+    shorthand: Optional[Callable[[str], Optional[dict]]] = None
+    validate: Optional[Callable[[dict], None]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadPlugin:
+    """One registered workload profile.
+
+    Attributes:
+        name: canonical profile name.
+        factory: ``factory(**options) -> (Workload, cpu, gpu)``.
+        fields: option names the factory accepts (e.g. ``size_scale``).
+        validate: optional ``fn(options: dict) -> None`` pre-build hook.
+    """
+
+    name: str
+    factory: Callable
+    fields: tuple[str, ...] = ()
+    validate: Optional[Callable[[dict], None]] = None
+
+
+_SCHEDULERS: dict[str, SchedulerPlugin] = {}
+_WORKLOADS: dict[str, WorkloadPlugin] = {}
+
+
+def register_scheduler(name: str, factory: Callable, *,
+                       fields: tuple[str, ...] = (),
+                       speed_hint: bool = False,
+                       shorthand: Optional[Callable] = None,
+                       validate: Optional[Callable] = None,
+                       overwrite: bool = False) -> SchedulerPlugin:
+    """Register a scheduling policy under ``name``.
+
+    Args:
+        name: policy name; normalized to lower-case with underscores.
+        factory: ``factory(total, num_units, **options) -> Scheduler``.
+        fields: accepted option names (``granularity`` is implied — every
+            scheduler takes it).
+        speed_hint: the factory accepts a ``speeds`` hint.
+        shorthand: alias matcher, e.g. ``dynN`` → implied options.
+        validate: per-policy option validation hook.
+        overwrite: allow replacing an existing registration.
+
+    Returns:
+        The stored :class:`SchedulerPlugin`.
+
+    Raises:
+        ValueError: duplicate name without ``overwrite``.
+    """
+    key = _normalize(name)
+    if key in _SCHEDULERS and not overwrite:
+        raise ValueError(f"scheduler policy {key!r} is already registered; "
+                         f"pass overwrite=True to replace it")
+    plugin = SchedulerPlugin(key, factory,
+                             fields=tuple(dict.fromkeys(
+                                 (*fields, "granularity"))),
+                             speed_hint=speed_hint, shorthand=shorthand,
+                             validate=validate)
+    _SCHEDULERS[key] = plugin
+    return plugin
+
+
+def register_workload(name: str, factory: Callable, *,
+                      fields: tuple[str, ...] = (),
+                      validate: Optional[Callable] = None,
+                      overwrite: bool = False) -> WorkloadPlugin:
+    """Register a workload profile under ``name``.
+
+    Args:
+        name: profile name; normalized like policy names.
+        factory: ``factory(**options) -> (Workload, cpu, gpu)``.
+        fields: accepted option names.
+        validate: per-profile option validation hook.
+        overwrite: allow replacing an existing registration.
+
+    Returns:
+        The stored :class:`WorkloadPlugin`.
+
+    Raises:
+        ValueError: duplicate name without ``overwrite``.
+    """
+    key = _normalize(name)
+    if key in _WORKLOADS and not overwrite:
+        raise ValueError(f"workload {key!r} is already registered; "
+                         f"pass overwrite=True to replace it")
+    plugin = WorkloadPlugin(key, factory, fields=tuple(fields),
+                            validate=validate)
+    _WORKLOADS[key] = plugin
+    return plugin
+
+
+def _ensure_builtins() -> None:
+    """Make sure core's built-in policies/workloads have registered.
+
+    Importing ``repro.core.scheduler`` / ``repro.core.workloads`` runs
+    their registration side effects; lazy so `repro.api` alone works.
+    """
+    if not _SCHEDULERS:
+        import repro.core.scheduler  # noqa: F401  (registers built-ins)
+    if not _WORKLOADS:
+        import repro.core.workloads  # noqa: F401
+
+
+def scheduler_names() -> tuple[str, ...]:
+    """Registered policy names, sorted (shorthand aliases excluded)."""
+    _ensure_builtins()
+    return tuple(sorted(_SCHEDULERS))
+
+
+def workload_names() -> tuple[str, ...]:
+    """Registered workload profile names, sorted."""
+    _ensure_builtins()
+    return tuple(sorted(_WORKLOADS))
+
+
+def speed_hint_policies() -> tuple[str, ...]:
+    """Names of policies whose factory takes a ``speeds`` hint."""
+    _ensure_builtins()
+    return tuple(sorted(k for k, p in _SCHEDULERS.items() if p.speed_hint))
+
+
+def resolve_scheduler(policy: str) -> tuple[SchedulerPlugin, dict]:
+    """Look a policy name up, expanding shorthand aliases.
+
+    Args:
+        policy: registered name (case/hyphen-insensitive) or an alias a
+            plugin's shorthand matcher recognizes (``dyn5``).
+
+    Returns:
+        ``(plugin, implied_options)`` — implied options come from the
+        shorthand expansion and are overridable by explicit options.
+
+    Raises:
+        KeyError: no registered policy or shorthand matches.
+    """
+    _ensure_builtins()
+    key = _normalize(policy)
+    plugin = _SCHEDULERS.get(key)
+    if plugin is not None:
+        return plugin, {}
+    for plugin in _SCHEDULERS.values():
+        if plugin.shorthand is not None:
+            implied = plugin.shorthand(key)
+            if implied is not None:
+                return plugin, dict(implied)
+    raise KeyError(f"unknown scheduling policy {policy!r}; "
+                   f"choose from {sorted(_SCHEDULERS)}")
+
+
+def validate_scheduler_options(policy: str, options: dict) -> None:
+    """Reject unknown/misspelled options for a policy, loudly.
+
+    Args:
+        policy: registered policy name or shorthand alias.
+        options: candidate keyword options.
+
+    Raises:
+        KeyError: unknown policy.
+        ValueError: an option the policy's factory does not accept — the
+            message names the offending key and the accepted fields.
+    """
+    plugin, _ = resolve_scheduler(policy)
+    unknown = sorted(set(options) - set(plugin.fields))
+    if unknown:
+        raise ValueError(
+            f"unknown option(s) {unknown!r} for scheduling policy "
+            f"{plugin.name!r}; accepted fields: {sorted(plugin.fields)}")
+    if plugin.validate is not None:
+        plugin.validate(dict(options))
+
+
+def build_scheduler(policy: str, total: int, num_units: int, **options):
+    """Build a load balancer by name — the registry-backed policy factory.
+
+    The non-deprecated replacement for ``repro.core.make_scheduler``:
+    exactly the same contract (``KeyError`` for unknown policies, the
+    ``dynN`` shorthand, per-policy ``ValueError`` on bad sizes/speeds)
+    plus strict option validation.
+
+    Args:
+        policy: registered policy name or shorthand alias.
+        total: size of the 1-D index space to split.
+        num_units: number of Coexecution Units the launch will run on.
+        **options: policy-specific options (validated against the
+            plugin's declared fields).
+
+    Returns:
+        A fresh one-shot scheduler for exactly one launch.
+
+    Raises:
+        KeyError: unknown policy.
+        ValueError: unknown option key, or invalid sizes/speeds.
+    """
+    plugin, implied = resolve_scheduler(policy)
+    merged = {**implied, **options}
+    validate_scheduler_options(plugin.name, merged)
+    return plugin.factory(total, num_units, **merged)
+
+
+def build_workload(name: str, **options):
+    """Build a registered workload profile by name.
+
+    Args:
+        name: registered profile name.
+        **options: profile options (validated against declared fields).
+
+    Returns:
+        Whatever the profile factory returns — for the paper's built-ins,
+        ``(Workload, cpu_unit, gpu_unit)``.
+
+    Raises:
+        KeyError: unknown profile.
+        ValueError: unknown option key.
+    """
+    _ensure_builtins()
+    key = _normalize(name)
+    plugin = _WORKLOADS.get(key)
+    if plugin is None:
+        raise KeyError(f"unknown workload {name!r}; "
+                       f"choose from {sorted(_WORKLOADS)}")
+    unknown = sorted(set(options) - set(plugin.fields))
+    if unknown:
+        raise ValueError(
+            f"unknown option(s) {unknown!r} for workload {plugin.name!r}; "
+            f"accepted fields: {sorted(plugin.fields)}")
+    if plugin.validate is not None:
+        plugin.validate(dict(options))
+    return plugin.factory(**options)
+
+
+class temporary_plugins:
+    """Context manager restoring the registry on exit (for tests/demos).
+
+    Example::
+
+        with temporary_plugins():
+            register_scheduler("mine", MyScheduler, fields=("knob",))
+            ...
+        # "mine" is gone again
+    """
+
+    def __enter__(self) -> "temporary_plugins":
+        self._sched = dict(_SCHEDULERS)
+        self._work = dict(_WORKLOADS)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _SCHEDULERS.clear()
+        _SCHEDULERS.update(self._sched)
+        _WORKLOADS.clear()
+        _WORKLOADS.update(self._work)
+
+
+def _iter_scheduler_plugins() -> Iterator[SchedulerPlugin]:
+    """Yield registered scheduler plugins (for the API snapshot tool)."""
+    _ensure_builtins()
+    yield from _SCHEDULERS.values()

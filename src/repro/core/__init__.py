@@ -1,5 +1,11 @@
 """Coexecutor Runtime — the paper's contribution as a composable JAX module.
 
+Configuration is declarative: build a ``repro.api.CoexecSpec`` and hand
+it to ``CoexecutorRuntime.from_spec`` / ``CoexecEngine.from_spec`` /
+``simulate(..., spec=...)``. The kwarg-era entry points below
+(``rt.config``, ``make_scheduler``, engine admission kwargs) remain as
+deprecation shims that emit ``DeprecationWarning``.
+
 Public surface:
     CoexecutorRuntime, counits_from_devices     — real co-execution (Listing 1)
     CoexecEngine, LaunchHandle, LaunchStats     — persistent engine (start/

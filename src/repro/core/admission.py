@@ -104,8 +104,10 @@ def coerce_admission(admission) -> AdmissionConfig:
     """Normalize a policy name or config object into an AdmissionConfig.
 
     Args:
-        admission: an :class:`AdmissionConfig`, a policy-name string
-            (``"fifo"`` / ``"wfq"``), or ``None`` for the default config.
+        admission: an :class:`AdmissionConfig`, a declarative spec with a
+            ``to_config()`` method (:class:`repro.api.spec.AdmissionSpec`),
+            a policy-name string (``"fifo"`` / ``"wfq"``), or ``None`` for
+            the default config.
 
     Returns:
         The equivalent :class:`AdmissionConfig`.
@@ -114,6 +116,8 @@ def coerce_admission(admission) -> AdmissionConfig:
         return AdmissionConfig()
     if isinstance(admission, AdmissionConfig):
         return admission
+    if hasattr(admission, "to_config"):     # AdmissionSpec, duck-typed to
+        return admission.to_config()        # keep core free of api imports
     return AdmissionConfig(policy=str(admission).lower())
 
 

@@ -218,33 +218,71 @@ class CoexecEngine:
     or weighted-fair, optional launch fusion, optional backpressure.
     """
 
-    def __init__(self, units: Sequence[JaxUnit], *,
-                 memory: MemoryModel = MemoryModel.USM,
-                 admission: "str | AdmissionConfig" = "fifo",
+    _UNSET = object()
+
+    def __init__(self, units: Sequence[JaxUnit], *, spec=None,
+                 memory: "MemoryModel" = _UNSET,
+                 admission: "str | AdmissionConfig" = _UNSET,
                  fuse: Optional[bool] = None,
                  max_inflight: Optional[int] = None):
         """Build an engine over a fixed set of Coexecution Units.
 
+        The canonical configuration is a declarative
+        :class:`~repro.api.spec.CoexecSpec` (``spec=`` here, or
+        :meth:`from_spec` to also build the units). The per-knob kwargs
+        are the pre-spec surface: they still work but emit a
+        :class:`DeprecationWarning`, and cannot be combined with ``spec``.
+
         Args:
             units: the Coexecution Units; one worker thread each.
-            memory: USM or BUFFERS collection semantics.
-            admission: policy name (``"fifo"`` / ``"wfq"``) or a full
-                :class:`~.admission.AdmissionConfig`.
-            fuse: overrides the config's ``fuse`` flag when given.
-            max_inflight: overrides the config's launch cap when given.
+            spec: a ``CoexecSpec`` supplying memory + admission config.
+            memory: (deprecated) USM or BUFFERS collection semantics.
+            admission: (deprecated) policy name (``"fifo"`` / ``"wfq"``)
+                or a full :class:`~.admission.AdmissionConfig`.
+            fuse: (deprecated) overrides the config's ``fuse`` flag.
+            max_inflight: (deprecated) overrides the config's launch cap.
 
         Raises:
-            ValueError: on an empty unit list or bad admission options.
+            ValueError: empty unit list, bad admission options, or
+                ``spec`` combined with legacy kwargs.
         """
         if not units:
             raise ValueError("need at least one Coexecution Unit")
         self.units = list(units)
-        self.memory = memory
-        cfg = coerce_admission(admission)
+        legacy = {k: v for k, v in
+                  (("memory", memory), ("admission", admission))
+                  if v is not self._UNSET}
         if fuse is not None:
-            cfg = dataclasses.replace(cfg, fuse=bool(fuse))
+            legacy["fuse"] = fuse
         if max_inflight is not None:
-            cfg = dataclasses.replace(cfg, max_inflight=int(max_inflight))
+            legacy["max_inflight"] = max_inflight
+        if spec is not None and legacy:
+            raise ValueError(
+                f"pass either spec= or the legacy kwargs "
+                f"{sorted(legacy)}, not both")
+        if legacy:
+            import warnings
+
+            warnings.warn(
+                f"CoexecEngine({', '.join(sorted(legacy))}=...) kwargs are "
+                f"deprecated; build from a repro.api.CoexecSpec "
+                f"(CoexecEngine.from_spec or spec=)",
+                DeprecationWarning, stacklevel=2)
+        if spec is not None:
+            self.spec = spec
+            self.memory = spec.memory_model()
+            cfg = spec.admission_config()
+        else:
+            self.spec = None
+            self.memory = memory if memory is not self._UNSET \
+                else MemoryModel.USM
+            cfg = coerce_admission(
+                admission if admission is not self._UNSET else None)
+            if fuse is not None:
+                cfg = dataclasses.replace(cfg, fuse=bool(fuse))
+            if max_inflight is not None:
+                cfg = dataclasses.replace(
+                    cfg, max_inflight=int(max_inflight))
         self.admission = AdmissionController(
             len(self.units), cfg,
             fuse_materialize=self._materialize_fused,
@@ -257,6 +295,23 @@ class CoexecEngine:
         self._fused_kernels: dict = {}
         self._stop = False
         self._started = False
+
+    @classmethod
+    def from_spec(cls, spec, *, units: Optional[Sequence[JaxUnit]] = None
+                  ) -> "CoexecEngine":
+        """Build an engine entirely from a :class:`CoexecSpec`.
+
+        Args:
+            spec: the declarative configuration; its ``units`` section is
+                materialized unless ``units`` is supplied.
+            units: pre-built Coexecution Units overriding the spec's
+                ``units`` section.
+
+        Returns:
+            A constructed (not yet started) engine.
+        """
+        units = list(units) if units is not None else spec.build_units()
+        return cls(units, spec=spec)
 
     # -- lifecycle ---------------------------------------------------------
     @property

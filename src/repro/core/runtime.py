@@ -1,14 +1,24 @@
 """Public Coexecutor Runtime API (paper §3.3, Listing 1).
 
-Python rendering of the paper's C++ API::
+Python rendering of the paper's C++ API, configured by a declarative
+:class:`~repro.api.spec.CoexecSpec`::
 
-    rt = CoexecutorRuntime(policy="hguided")
-    rt.config(units=counits_cpu_gpu(), dist=0.35, memory="usm")
+    from repro.api import CoexecSpec
+
+    spec = (CoexecSpec.builder().policy("hguided").dist(0.35)
+            .memory("usm").build())
+    rt = CoexecutorRuntime.from_spec(spec)
     out = rt.launch(n, kernel, inputs)           # blocking co-execution
 
     h1 = rt.launch_async(n, kernel_a, inputs_a)  # non-blocking: a Future
     h2 = rt.launch_async(m, kernel_b, inputs_b)  # co-executions interleave
     out_a, out_b = h1.result(), h2.result()
+
+The pre-spec kwarg surface — ``CoexecutorRuntime("hguided").config(
+units=..., dist=0.35, memory="usm")`` — still works but is a deprecation
+shim: it builds the equivalent spec internally and emits a
+:class:`DeprecationWarning`. New code should use
+:meth:`CoexecutorRuntime.configure` / :meth:`CoexecutorRuntime.from_spec`.
 
 `kernel(offset, *chunks) -> chunk_out` is a pure JAX function over a package
 slice — the analogue of the SYCL command-group lambda. The runtime splits the
@@ -25,6 +35,7 @@ context manager) drains the engine and joins its worker threads.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -34,7 +45,6 @@ import jax
 from .admission import AdmissionConfig
 from .engine import CoexecEngine, LaunchHandle, LaunchStats
 from .memory import MemoryModel
-from .scheduler import SPEED_HINT_POLICIES, make_scheduler
 from .units import JaxUnit
 
 __all__ = ["CoexecutorRuntime", "LaunchStats", "counits_from_devices"]
@@ -69,21 +79,76 @@ def counits_from_devices(devices: Optional[Sequence["jax.Device"]] = None,
 
 
 class CoexecutorRuntime:
-    """The paper's `coexecutor_runtime<policy>` object."""
+    """The paper's `coexecutor_runtime<policy>` object, spec-configured."""
 
-    def __init__(self, policy: str = "hguided"):
-        self.policy = policy
+    def __init__(self, policy: str = "hguided", *, spec=None):
+        """Build a runtime for one scheduling policy (or a full spec).
+
+        Args:
+            policy: intra-launch policy name (Listing 1's ``<hg>``);
+                ignored when ``spec`` is given.
+            spec: full :class:`~repro.api.spec.CoexecSpec`; when omitted
+                an all-default spec with ``policy`` is used.
+        """
+        from repro.api.spec import CoexecSpec, SchedulerSpec
+
+        if spec is None:
+            spec = CoexecSpec(scheduler=SchedulerSpec(policy=policy))
+        self._spec = spec
         self._units: Optional[list[JaxUnit]] = None
-        self._memory = MemoryModel.USM
-        self._dist: Optional[Sequence[float]] = None
-        self._scheduler_kw: dict = {}
-        self._admission: "str | AdmissionConfig" = "fifo"
-        self._fuse: Optional[bool] = None
-        self._max_inflight: Optional[int] = None
         self._engine: Optional[CoexecEngine] = None
         self.last_stats: Optional[LaunchStats] = None
 
-    # -- configuration (paper: runtime.config(CounitSet::CpuGpu, dist(0.35)))
+    # -- declarative configuration (the CoexecSpec surface) ----------------
+    @classmethod
+    def from_spec(cls, spec, *, units: Optional[Sequence[JaxUnit]] = None
+                  ) -> "CoexecutorRuntime":
+        """Build a runtime entirely from a :class:`CoexecSpec`.
+
+        Args:
+            spec: the declarative configuration (validated here).
+            units: pre-built Coexecution Units overriding the spec's
+                ``units`` section (units are runtime objects, so specs
+                describe them rather than contain them).
+
+        Returns:
+            A configured runtime (engine starts on first launch).
+        """
+        rt = cls(spec=spec.validate())
+        if units is not None:
+            rt._units = list(units)
+        return rt
+
+    @property
+    def spec(self):
+        """The :class:`CoexecSpec` in force (frozen; replace to change)."""
+        return self._spec
+
+    @property
+    def policy(self) -> str:
+        """The configured intra-launch scheduling policy name."""
+        return self._spec.scheduler.policy
+
+    def configure(self, spec, *, units: Optional[Sequence[JaxUnit]] = None
+                  ) -> "CoexecutorRuntime":
+        """Swap in a new spec (the non-deprecated ``config`` successor).
+
+        Args:
+            spec: the new declarative configuration (validated here).
+            units: pre-built units overriding the spec's ``units``
+                section; ``None`` keeps previously supplied units.
+
+        Returns:
+            The runtime itself, for chaining. Reconfiguring shuts down
+            any running engine (units/memory/admission may have changed).
+        """
+        self._spec = spec.validate()
+        if units is not None:
+            self._units = list(units)
+        self.shutdown()
+        return self
+
+    # -- legacy configuration (paper: runtime.config(CounitSet, dist(0.35)))
     def config(self, units: Optional[Sequence[JaxUnit]] = None,
                *, dist: Optional[float | Sequence[float]] = None,
                memory: str | MemoryModel = MemoryModel.USM,
@@ -91,7 +156,12 @@ class CoexecutorRuntime:
                fuse: Optional[bool] = None,
                max_inflight: Optional[int] = None,
                **scheduler_kw) -> "CoexecutorRuntime":
-        """Configure units, memory model, admission policy and scheduler.
+        """Configure via kwargs (deprecated: build a ``CoexecSpec``).
+
+        Deprecated since the ``CoexecSpec`` API: this shim translates the
+        kwargs into the equivalent spec, emits a
+        :class:`DeprecationWarning`, and behaves exactly as before
+        (including resetting unspecified knobs to their defaults).
 
         Args:
             units: Coexecution Units (default: one per local jax device).
@@ -102,30 +172,45 @@ class CoexecutorRuntime:
                 or a full :class:`~.admission.AdmissionConfig`.
             fuse: coalesce small concurrent same-shaped launches.
             max_inflight: backpressure cap on admitted launches.
-            **scheduler_kw: forwarded to :func:`~.scheduler.make_scheduler`.
+            **scheduler_kw: policy-specific scheduler options.
 
         Returns:
             The runtime itself, for chaining. Reconfiguring shuts down any
             running engine (its units/memory/admission may have changed).
         """
-        self._units = list(units) if units is not None else None
+        from repro.api.spec import (AdmissionSpec, CoexecSpec, MemorySpec,
+                                    SchedulerSpec, UnitsSpec)
+
+        warnings.warn(
+            "CoexecutorRuntime.config(...) is deprecated; build a "
+            "repro.api.CoexecSpec and use configure()/from_spec() instead",
+            DeprecationWarning, stacklevel=2)
         if isinstance(dist, (int, float)):
-            # scalar hint = first unit's share, remainder spread evenly
-            # (the paper's dist(0.35) gives CPU 35 %, GPU 65 %).
-            n = len(self._units) if self._units else 2
-            rest = (1.0 - float(dist)) / max(n - 1, 1)
-            self._dist = [float(dist)] + [rest] * (n - 1)
+            dist_t: tuple[float, ...] = (float(dist),)
         elif dist is not None:
-            self._dist = [float(x) for x in dist]
-        self._memory = (memory if isinstance(memory, MemoryModel)
-                        else MemoryModel(str(memory).lower()))
-        self._admission = admission
-        self._fuse = fuse
-        self._max_inflight = max_inflight
-        self._scheduler_kw = scheduler_kw
-        # a reconfigure invalidates the running engine (units/memory change)
-        self.shutdown()
-        return self
+            dist_t = tuple(float(x) for x in dist)
+        else:
+            dist_t = ()
+        mem = memory.value if isinstance(memory, MemoryModel) \
+            else str(memory).lower()
+        if isinstance(admission, AdmissionConfig):
+            adm = AdmissionSpec.from_config(admission)
+        else:
+            adm = AdmissionSpec(policy=str(admission).lower())
+        if fuse is not None:
+            adm = adm.replace(fuse=bool(fuse))
+        if max_inflight is not None:
+            adm = adm.replace(max_inflight=int(max_inflight))
+        spec = CoexecSpec(
+            units=UnitsSpec(dist=dist_t),
+            scheduler=SchedulerSpec(policy=self.policy,
+                                    options=tuple(scheduler_kw.items())),
+            admission=adm,
+            memory=MemorySpec(model=mem),
+            workload=self._spec.workload,
+        )
+        self._units = list(units) if units is not None else None
+        return self.configure(spec)
 
     # -- engine lifecycle ---------------------------------------------------
     @property
@@ -136,11 +221,9 @@ class CoexecutorRuntime:
     def _get_engine(self) -> CoexecEngine:
         if self._engine is None or not self._engine.running:
             if self._units is None:
-                self._units = counits_from_devices()
-            self._engine = CoexecEngine(
-                self._units, memory=self._memory,
-                admission=self._admission, fuse=self._fuse,
-                max_inflight=self._max_inflight).start()
+                self._units = self._spec.build_units()
+            self._engine = CoexecEngine.from_spec(
+                self._spec, units=self._units).start()
         return self._engine
 
     def shutdown(self) -> None:
@@ -180,7 +263,8 @@ class CoexecutorRuntime:
             out: output container; allocated when ``None``.
             out_dtype: dtype of the allocated output.
             out_trailing_shape: trailing dims of the allocated output.
-            granularity: package alignment (local work size).
+            granularity: package alignment; overrides the spec's
+                ``scheduler.granularity`` when not 1.
             tenant: fairness flow for WFQ admission (defaults to a
                 per-launch tenant).
             weight: relative WFQ share of the tenant.
@@ -195,12 +279,11 @@ class CoexecutorRuntime:
             ValueError: invalid scheduler parameters for this policy.
         """
         engine = self._get_engine()
-        kw = dict(self._scheduler_kw)
-        if self.policy.lower().replace("-", "_") in SPEED_HINT_POLICIES \
-                and self._dist:
-            kw.setdefault("speeds", list(self._dist))
-        sched = make_scheduler(self.policy, total, len(engine.units),
-                               granularity=granularity, **kw)
+        n = len(engine.units)
+        sched_spec = self._spec.scheduler
+        if granularity != 1:
+            sched_spec = sched_spec.replace(granularity=granularity)
+        sched = sched_spec.build(total, n, speeds=self._spec.speeds_for(n))
         if out is None:
             out = np.zeros((total, *out_trailing_shape), dtype=out_dtype)
         return engine.submit(sched, kernel, inputs, out,

@@ -362,26 +362,60 @@ class WorkStealingScheduler(Scheduler):
         return pkg
 
 
-_REGISTRY = {
-    "static": StaticScheduler,
-    "dynamic": DynamicScheduler,
-    "hguided": HGuidedScheduler,
-    "work_stealing": WorkStealingScheduler,
-}
+# ---------------------------------------------------------------------------
+# Registration with the repro.api plugin registry
+# ---------------------------------------------------------------------------
+# The built-in policies register by name like any third-party plugin would:
+# the registry (not an if-chain here) is the single policy selection point,
+# and each registration declares exactly the option fields its constructor
+# accepts so misspelled options fail with a ValueError naming the key.
 
-# policies whose constructor takes a `speeds` hint (the paper's dist(0.35))
+def _dyn_shorthand(key: str) -> Optional[dict]:
+    """``dynN`` → Dynamic with N packages (``dyn5``/``dyn200`` of §5)."""
+    if key.startswith("dyn") and key != "dynamic" and key[3:].isdigit():
+        return {"num_packages": int(key[3:])}
+    return None
+
+
+def _register_builtin_policies() -> None:
+    """Idempotently register the paper's four policies (import side)."""
+    from repro.api.registry import register_scheduler
+
+    register_scheduler("static", StaticScheduler, fields=("speeds",),
+                       speed_hint=True, overwrite=True)
+    register_scheduler("dynamic", DynamicScheduler,
+                       fields=("num_packages",),
+                       shorthand=_dyn_shorthand, overwrite=True)
+    register_scheduler("hguided", HGuidedScheduler,
+                       fields=("speeds", "divisor", "min_package"),
+                       speed_hint=True, overwrite=True)
+    register_scheduler("work_stealing", WorkStealingScheduler,
+                       fields=("speeds", "chunks_per_unit", "chunk_items"),
+                       speed_hint=True, overwrite=True)
+
+
+_register_builtin_policies()
+
+# policies whose constructor takes a `speeds` hint (the paper's dist(0.35)).
+# Kept as a constant for backward compatibility; the registry is the source
+# of truth (repro.api.speed_hint_policies()).
 SPEED_HINT_POLICIES = ("static", "hguided", "work_stealing")
 
 
 def make_scheduler(policy: str, total: int, num_units: int, **kw) -> Scheduler:
-    """Build a load balancer by name: the paper's policy selection point.
+    """Build a load balancer by name (deprecated legacy entry point).
+
+    Deprecated since the ``CoexecSpec`` API: use
+    :func:`repro.api.build_scheduler` (same contract, registry-backed) or
+    ``SchedulerSpec.build`` / ``CoexecSpec.build_scheduler`` instead.
+    This shim delegates to the registry and emits a
+    :class:`DeprecationWarning`.
 
     Example: ``make_scheduler("hguided", n, 2, speeds=[0.35, 0.65])``.
 
     Args:
-        policy: one of ``static`` / ``dynamic`` / ``hguided`` /
-            ``work_stealing`` (case/hyphen-insensitive), or the ``dynN``
-            shorthand (``dyn5`` → Dynamic with 5 packages).
+        policy: registered policy name (case/hyphen-insensitive) or the
+            ``dynN`` shorthand (``dyn5`` → Dynamic with 5 packages).
         total: size of the 1-D index space to split.
         num_units: number of Coexecution Units the launch will run on.
         **kw: policy-specific options (``speeds``, ``granularity``,
@@ -392,14 +426,15 @@ def make_scheduler(policy: str, total: int, num_units: int, **kw) -> Scheduler:
 
     Raises:
         KeyError: if ``policy`` names no registered scheduler.
-        ValueError: if the sizes/speeds are invalid for the policy.
+        ValueError: on an unknown option key (named, with the policy's
+            accepted fields) or invalid sizes/speeds.
     """
-    key = policy.lower().replace("-", "_")
-    if key.startswith("dyn") and key != "dynamic":
-        # convenience: "dyn5" / "dyn200" → Dynamic with N packages
-        kw.setdefault("num_packages", int(key[3:]))
-        key = "dynamic"
-    if key not in _REGISTRY:
-        raise KeyError(f"unknown scheduling policy {policy!r}; "
-                       f"choose from {sorted(_REGISTRY)}")
-    return _REGISTRY[key](total, num_units, **kw)
+    import warnings
+
+    from repro.api.registry import build_scheduler
+
+    warnings.warn(
+        "make_scheduler() is deprecated; use repro.api.build_scheduler() "
+        "or a CoexecSpec (repro.api.CoexecSpec) instead",
+        DeprecationWarning, stacklevel=2)
+    return build_scheduler(policy, total, num_units, **kw)

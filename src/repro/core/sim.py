@@ -117,13 +117,42 @@ def _item_costs(workload: Workload, unit: SimUnit) -> np.ndarray:
     return np.concatenate([[0.0], np.cumsum(w)])
 
 
-def simulate(scheduler: Scheduler, units: Sequence[SimUnit],
+def simulate(scheduler: Optional[Scheduler], units: Sequence[SimUnit],
              workload: Workload, *,
-             memory: MemoryModel = MemoryModel.USM,
+             memory: Optional[MemoryModel] = None,
              costs: MemoryCosts = MemoryCosts(),
-             validate: bool = True) -> SimResult:
-    """Run the Commander loop in virtual time. Deterministic."""
+             validate: bool = True, spec=None) -> SimResult:
+    """Run the Commander loop in virtual time. Deterministic.
+
+    Args:
+        scheduler: fresh one-shot load balancer, or ``None`` to build one
+            from ``spec`` (its policy/options/dist drive the split, with
+            the units' calibrated speeds as the default hint).
+        units: the simulated Coexecution Units.
+        workload: the data-parallel problem.
+        memory: package-movement cost model; ``None`` takes the spec's
+            memory section (USM when no spec is given either).
+        costs: calibrated data-movement cost parameters.
+        validate: assert the packages exactly tile the index space.
+        spec: optional :class:`~repro.api.spec.CoexecSpec` — the same
+            object that configures the real engine drives the DES, which
+            is what keeps real-vs-sim parity spec-driven.
+
+    Returns:
+        The run's :class:`SimResult`.
+
+    Raises:
+        ValueError: scheduler/unit count mismatch, or ``scheduler=None``
+            without a spec.
+    """
     n = len(units)
+    if memory is None:
+        memory = spec.memory_model() if spec is not None else MemoryModel.USM
+    if scheduler is None:
+        if spec is None:
+            raise ValueError("need a scheduler or a spec to build one from")
+        speeds = spec.speeds_for(n) or [u.speed for u in units]
+        scheduler = spec.scheduler.build(workload.total, n, speeds=speeds)
     if scheduler.num_units != n:
         raise ValueError("scheduler/unit count mismatch")
 
@@ -351,10 +380,10 @@ def _fuse_sim_launches(members: list[_SimLaunch],
 
 
 def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
-                   admission="fifo",
-                   memory: MemoryModel = MemoryModel.USM,
+                   admission=None,
+                   memory: Optional[MemoryModel] = None,
                    costs: MemoryCosts = MemoryCosts(),
-                   validate: bool = True) -> MultiSimResult:
+                   validate: bool = True, spec=None) -> MultiSimResult:
     """Run concurrent co-executions through the admission layer.
 
     The exact :class:`~.admission.AdmissionController` the real engine
@@ -365,10 +394,16 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
     Args:
         specs: one :class:`LaunchSpec` per launch; schedulers must be
             fresh and built for ``len(units)``.
-        admission: policy name or :class:`~.admission.AdmissionConfig`.
-        memory: USM or BUFFERS package-movement cost model.
+        admission: policy name, :class:`~.admission.AdmissionConfig`, or
+            :class:`~repro.api.spec.AdmissionSpec`; ``None`` takes the
+            admission section of ``spec`` (plain FIFO without one).
+        memory: USM or BUFFERS package-movement cost model; ``None``
+            takes the spec's memory section (USM without one).
         costs: calibrated data-movement cost parameters.
         validate: assert each launch's packages exactly tile its space.
+        spec: optional :class:`~repro.api.spec.CoexecSpec` — the same
+            object that configures the real engine supplies the admission
+            and memory sections here, keeping both substrates in sync.
 
     Returns:
         A :class:`MultiSimResult` with per-launch latencies, the tenant
@@ -378,15 +413,20 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
         ValueError: on a scheduler/unit-count mismatch.
     """
     n = len(units)
-    cfg = coerce_admission(admission)
-    for spec in specs:
-        if spec.scheduler.num_units != n:
+    if memory is None:
+        memory = spec.memory_model() if spec is not None else MemoryModel.USM
+    if admission is None and spec is not None:
+        cfg = spec.admission_config()
+    else:
+        cfg = coerce_admission(admission)
+    for ls in specs:
+        if ls.scheduler.num_units != n:
             raise ValueError("scheduler/unit count mismatch in spec")
 
-    def fuse_key(spec: LaunchSpec):
-        if not cfg.fuse or spec.workload.total > cfg.fuse_threshold:
+    def fuse_key(ls: LaunchSpec):
+        if not cfg.fuse or ls.workload.total > cfg.fuse_threshold:
             return None
-        wl = spec.workload
+        wl = ls.workload
         return (wl.name, wl.total, wl.bytes_in_per_item,
                 wl.bytes_out_per_item)
 

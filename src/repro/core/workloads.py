@@ -162,11 +162,33 @@ def _weights(spec: BenchSpec) -> np.ndarray | None:
 
 def paper_workload(name: str, *, size_scale: float = 1.0
                    ) -> tuple[Workload, SimUnit, SimUnit]:
-    """Build (workload, cpu_unit, gpu_unit) for one paper benchmark.
+    """Build (workload, cpu_unit, gpu_unit) for one registered workload.
 
-    size_scale scales the problem size (Fig. 8 scalability sweeps); device
-    speeds are fixed, so GPU-solo time scales linearly with it.
+    Dispatches through the :mod:`repro.api.registry` workload registry, so
+    `name` may be any registered profile — the paper's six benchmarks
+    register below, third-party profiles via
+    :func:`repro.api.register_workload`. ``size_scale`` scales the problem
+    size (Fig. 8 scalability sweeps); device speeds are fixed, so GPU-solo
+    time scales linearly with it.
+
+    Args:
+        name: registered workload profile name.
+        size_scale: problem-size multiplier.
+
+    Returns:
+        ``(workload, cpu_unit, gpu_unit)``.
+
+    Raises:
+        KeyError: unknown profile name.
     """
+    from repro.api.registry import build_workload
+
+    return build_workload(name, size_scale=size_scale)
+
+
+def _build_paper_workload(name: str, *, size_scale: float = 1.0
+                          ) -> tuple[Workload, SimUnit, SimUnit]:
+    """Registry factory for one paper benchmark (Table 1 calibration)."""
     spec = SPECS[name]
     groups = max(16, int(spec.groups * size_scale))
     weights = _weights(spec)
@@ -221,3 +243,16 @@ def effective_shares(wl: Workload, cpu: SimUnit, gpu: SimUnit,
 REGULAR = ("gaussian", "matmul", "taylor")
 IRREGULAR = ("mandelbrot", "rap", "ray")
 ALL_BENCHMARKS = REGULAR + IRREGULAR
+
+
+def _register_builtin_workloads() -> None:
+    """Idempotently register the paper's six profiles (import side)."""
+    from repro.api.registry import register_workload
+
+    for bench in ALL_BENCHMARKS:
+        register_workload(bench,
+                          functools.partial(_build_paper_workload, bench),
+                          fields=("size_scale",), overwrite=True)
+
+
+_register_builtin_workloads()

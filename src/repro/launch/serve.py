@@ -11,12 +11,14 @@ configs serve via the dry-run path (compile-only proof).
 Co-execution mode: each "request" is one data-parallel kernel launch
 served through `CoexecutorRuntime.launch_async` on a long-lived engine —
 up to --concurrent launches interleave on the same Coexecution Units.
-`--policy all` sweeps work_stealing against static/dynamic/hguided; with
-`--coexec sim` the same sweep runs on the DES instead of real threads.
-`--admission wfq` swaps the engine's FIFO drain for weighted-fair
-queueing, `--fuse` coalesces small same-shaped concurrent launches; on
-the sim path those flags (or --tenants > 1) switch to the multi-tenant
-DES sweep with p50/p99 latency and Jain fairness per row.
+Every co-execution flag is *derived* from the `repro.api.CoexecSpec`
+fields (see `repro.api.cli`): the parsed flags fold into one spec that
+drives the real engine and the DES identically, and `--spec-json` dumps
+the resolved spec as a reproducible artifact. `--policy all` sweeps every
+registered policy; with `--coexec sim` the same sweep runs on the DES
+instead of real threads; `--admission wfq` / `--fuse` / `--tenants N`
+switch the sim path to the multi-tenant DES sweep with p50/p99 latency
+and Jain fairness per row.
 
     PYTHONPATH=src python -m repro.launch.serve --coexec real \
         --policy all --requests 16 --concurrent 8 --n 65536
@@ -30,8 +32,6 @@ from __future__ import annotations
 import argparse
 import time
 
-COEXEC_POLICIES = ("static", "dynamic", "hguided", "work_stealing")
-
 
 def _percentile_ms(sorted_s: list, q: float) -> float:
     """Nearest-rank percentile of sorted seconds, in milliseconds."""
@@ -43,42 +43,60 @@ def _percentile_ms(sorted_s: list, q: float) -> float:
     return 1e3 * sorted_s[idx]
 
 
-def default_two_units():
-    """Two Coexecution Units on this host's first device (the CPU-only
-    container's stand-in for the paper's CPU+GPU pair)."""
-    import jax
+def default_serve_spec():
+    """The serve CLI's base spec: two same-device units, dist 0.4.
 
-    from ..core import counits_from_devices
+    Two Coexecution Units on this host's first device are the CPU-only
+    container's stand-in for the paper's CPU+GPU pair; flags the user
+    passes override these fields (see `repro.api.cli.spec_from_args`).
+    """
+    from repro.api import CoexecSpec
 
-    return counits_from_devices(jax.local_devices()[:1] * 2,
-                                kinds=["cpu", "cpu"],
-                                speed_hints=[0.4, 0.6])
+    return (CoexecSpec.builder()
+            .policy("all")      # sweep every registered policy by default
+            .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.4, 0.6))
+            .dist(0.4)
+            .workload("mandelbrot")
+            .build())
 
 
-def coexec_real_rows(policies=COEXEC_POLICIES, *, n: int = 1 << 16,
-                     requests: int = 16, concurrent: int = 8,
-                     units=None, admission: str = "fifo",
-                     fuse: bool = False) -> list[dict]:
-    """Serve `requests` kernel launches per policy through the persistent
-    engine (at most `concurrent` in flight); one measurement dict each.
-    Shared by `serve --coexec real` and `benchmarks.run coexec`.
-    `admission`/`fuse` select the engine's cross-launch queueing policy.
+def _sweep_policies(spec) -> tuple[str, ...]:
+    """Expand ``policy="all"`` into every registered policy name."""
+    from repro.api import scheduler_names
+
+    if spec.scheduler.policy == "all":
+        return scheduler_names()
+    return (spec.scheduler.policy,)
+
+
+def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
+    """Serve ``spec.workload.requests`` kernel launches per policy through
+    the persistent engine (at most ``spec.workload.concurrent`` in
+    flight); one measurement dict each. Shared by ``serve --coexec real``
+    and ``benchmarks.run coexec``. The spec's admission section selects
+    the engine's cross-launch queueing policy.
     """
     import numpy as np
 
     from ..core import CoexecutorRuntime
     from ..kernels import package_kernel
 
+    if spec is None:
+        spec = default_serve_spec()
     if units is None:
-        units = default_two_units()
+        units = spec.build_units()
+    n = spec.workload.items
+    requests = spec.workload.requests
+    concurrent = spec.workload.concurrent
     rng = np.random.default_rng(0)
     datas = [rng.uniform(-2, 2, n).astype(np.float32)
              for _ in range(requests)]
     kernel = package_kernel("taylor")
     rows = []
-    for policy in policies:
-        with CoexecutorRuntime(policy) as rt:
-            rt.config(units=units, dist=0.4, admission=admission, fuse=fuse)
+    for policy in (policies or _sweep_policies(spec)):
+        pspec = spec.replace(
+            scheduler=spec.scheduler.replace(policy=policy))
+        with CoexecutorRuntime.from_spec(pspec, units=units) as rt:
             rt.launch(n, kernel, [datas[0]])        # warm the jit cache
             t0 = time.perf_counter()
             served, pkgs, lats, inflight = 0, 0, [], []
@@ -107,20 +125,26 @@ def coexec_real_rows(policies=COEXEC_POLICIES, *, n: int = 1 << 16,
     return rows
 
 
-def coexec_sim_rows(workload: str,
-                    policies=COEXEC_POLICIES) -> list[dict]:
-    """The same policy sweep on the DES (virtual time, deterministic)."""
-    from ..core import SPEED_HINT_POLICIES, make_scheduler, paper_workload, \
-        simulate
+def coexec_sim_rows(spec=None, *, policies=None) -> list[dict]:
+    """The same policy sweep on the DES (virtual time, deterministic).
 
-    wl, cpu, gpu = paper_workload(workload)
+    The spec's scheduler section (options, granularity) drives the DES
+    split exactly as it drives the real engine; the speed hint is the
+    DES units' calibrated speeds (the profile's ground truth), not the
+    spec's ``dist`` — `dist` describes real devices the DES replaces.
+    """
+    from ..core import paper_workload, simulate
+
+    if spec is None:
+        spec = default_serve_spec()
+    workload = spec.workload.name
+    wl, cpu, gpu = paper_workload(workload,
+                                  size_scale=spec.workload.size_scale)
     rows = []
-    for policy in policies:
-        kw = {}
-        if policy in SPEED_HINT_POLICIES:
-            kw["speeds"] = [cpu.speed, gpu.speed]
-        sched = make_scheduler(policy, wl.total, 2, **kw)
-        r = simulate(sched, [cpu, gpu], wl)
+    for policy in (policies or _sweep_policies(spec)):
+        sched = spec.scheduler.replace(policy=policy).build(
+            wl.total, 2, speeds=[cpu.speed, gpu.speed])
+        r = simulate(sched, [cpu, gpu], wl, spec=spec)
         rows.append(dict(workload=workload, policy=policy,
                          seconds=r.total_s, packages=r.num_packages,
                          balance=r.balance(),
@@ -128,26 +152,33 @@ def coexec_sim_rows(workload: str,
     return rows
 
 
-def coexec_multi_rows(workload: str = "taylor",
-                      tenants=(1, 2, 4, 8, 16, 32), *,
+def coexec_multi_rows(spec=None, *, tenants=None, policies=None,
                       per_tenant_items: int = 2048,
                       num_packages: int = 16,
-                      policy: str = "dynamic",
-                      admissions=("fifo", "wfq"),
-                      fuse_modes=(False, True)) -> list[dict]:
+                      admissions=None,
+                      fuse_modes=None) -> list[dict]:
     """Multi-tenant admission sweep on the DES: one row per (tenant count,
-    admission policy, fusion mode) with p50/p99 latency, Jain fairness
-    over per-tenant throughput, and total dispatched packages. `policy`
-    picks each tenant's intra-launch scheduler. Shared by
-    `serve --coexec sim --admission/--fuse/--tenants` and
-    `benchmarks.run coexec-multi`.
+    policy, admission policy, fusion mode) with p50/p99 latency, Jain
+    fairness over per-tenant throughput, and total dispatched packages.
+    Sweep axes default to the single point the spec describes (its
+    admission policy/fuse flag and ``workload.tenants``); pass tuples to
+    sweep. Shared by ``serve --coexec sim --admission/--fuse/--tenants``
+    and ``benchmarks.run coexec-multi``.
     """
-    from ..core import (SPEED_HINT_POLICIES, AdmissionConfig, LaunchSpec,
-                        Workload, jain_index, make_scheduler, paper_workload,
-                        simulate_multi)
-
     import numpy as np
 
+    from ..core import (LaunchSpec, Workload, jain_index, paper_workload,
+                        simulate_multi)
+
+    if spec is None:
+        spec = default_serve_spec()
+    workload = spec.workload.name
+    if tenants is None:
+        tenants = (spec.workload.tenants or 8,)
+    if admissions is None:
+        admissions = (spec.admission.policy,)
+    if fuse_modes is None:
+        fuse_modes = (spec.admission.fuse,)
     base, cpu, gpu = paper_workload(workload)
     per_item_in = base.bytes_in_per_item
     per_item_out = base.bytes_out_per_item
@@ -158,13 +189,18 @@ def coexec_multi_rows(workload: str = "taylor",
         idx = np.linspace(0, len(base.weights) - 1,
                           per_tenant_items).astype(int)
         weights = base.weights[idx]
-    sched_kw = {}
-    if policy in SPEED_HINT_POLICIES:
-        sched_kw["speeds"] = [cpu.speed, gpu.speed]
-    elif policy == "dynamic":
-        sched_kw["num_packages"] = num_packages
 
-    def specs(nt):
+    def sched_for(policy):
+        # the spec's scheduler options/granularity apply; dynamic gets a
+        # per-tenant-sized package count unless the spec pins one
+        sched_spec = spec.scheduler.replace(policy=policy)
+        if policy == "dynamic" and \
+                "num_packages" not in sched_spec.options_dict():
+            sched_spec = sched_spec.with_options(num_packages=num_packages)
+        return sched_spec.build(per_tenant_items, 2,
+                                speeds=[cpu.speed, gpu.speed])
+
+    def specs(nt, policy):
         out = []
         for t in range(nt):
             wl = Workload(name=base.name, total=per_tenant_items,
@@ -174,40 +210,41 @@ def coexec_multi_rows(workload: str = "taylor",
                           * per_tenant_items / base.total,
                           weights=weights,
                           contention_scale=base.contention_scale)
-            sched = make_scheduler(policy, per_tenant_items, 2, **sched_kw)
-            out.append(LaunchSpec(wl, sched, tenant=f"t{t}"))
+            out.append(LaunchSpec(wl, sched_for(policy), tenant=f"t{t}"))
         return out
 
     rows = []
-    for nt in tenants:
-        for adm in admissions:
-            for fuse in fuse_modes:
-                cfg = AdmissionConfig(policy=adm, fuse=fuse,
-                                      fuse_threshold=per_tenant_items,
-                                      fuse_wait_s=0.0)
-                res = simulate_multi(specs(nt), [cpu, gpu], admission=cfg)
-                lats = sorted(res.latencies())
-                thru = [r.items / max(r.latency_s, 1e-12)
-                        for r in res.launches]
-                rows.append(dict(
-                    workload=workload, tenants=nt, admission=adm, fuse=fuse,
-                    policy=policy,
-                    p50_ms=_percentile_ms(lats, 0.5),
-                    p99_ms=_percentile_ms(lats, 0.99),
-                    fairness=jain_index(thru),
-                    packages=res.dispatched_packages,
-                    fused_batches=res.fused_batches,
-                    total_ms=1e3 * res.total_s))
+    for policy in (policies or ("dynamic",)):
+        for nt in tenants:
+            for adm in admissions:
+                for fuse in fuse_modes:
+                    cfg = spec.admission.replace(
+                        policy=adm, fuse=fuse,
+                        fuse_threshold=per_tenant_items,
+                        fuse_wait_s=0.0).to_config()
+                    res = simulate_multi(specs(nt, policy), [cpu, gpu],
+                                         admission=cfg)
+                    lats = sorted(res.latencies())
+                    thru = [r.items / max(r.latency_s, 1e-12)
+                            for r in res.launches]
+                    rows.append(dict(
+                        workload=workload, tenants=nt, admission=adm,
+                        fuse=fuse, policy=policy,
+                        p50_ms=_percentile_ms(lats, 0.5),
+                        p99_ms=_percentile_ms(lats, 0.99),
+                        fairness=jain_index(thru),
+                        packages=res.dispatched_packages,
+                        fused_batches=res.fused_batches,
+                        total_ms=1e3 * res.total_s))
     return rows
 
 
-def serve_coexec_real(args) -> None:
-    policies = (COEXEC_POLICIES if args.policy == "all" else (args.policy,))
-    for row in coexec_real_rows(policies, n=args.n, requests=args.requests,
-                                concurrent=args.concurrent,
-                                admission=args.admission, fuse=args.fuse):
-        print(f"[serve/coexec] {row['policy']:13s} ({args.admission}"
-              f"{'+fuse' if args.fuse else ''}): {row['requests']} "
+def serve_coexec_real(spec) -> None:
+    for row in coexec_real_rows(spec):
+        print(f"[serve/coexec] {row['policy']:13s} "
+              f"({spec.admission.policy}"
+              f"{'+fuse' if spec.admission.fuse else ''}): "
+              f"{row['requests']} "
               f"requests ({row['concurrent']} in flight) in "
               f"{row['seconds']:.3f}s = {row['req_per_s']:6.1f} req/s, "
               f"{row['requests'] * row['n'] / row['seconds'] / 1e6:7.2f} "
@@ -215,35 +252,37 @@ def serve_coexec_real(args) -> None:
               f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms")
 
 
-def serve_coexec_sim(args) -> None:
-    if args.admission != "fifo" or args.fuse or args.tenants is not None:
-        policies = (COEXEC_POLICIES if args.policy == "all"
-                    else (args.policy,))
-        for policy in policies:
-            for row in coexec_multi_rows(args.workload,
-                                         tenants=(args.tenants or 8,),
-                                         policy=policy,
-                                         admissions=(args.admission,),
-                                         fuse_modes=(args.fuse,)):
-                print(f"[serve/coexec-multi] {row['workload']}"
-                      f"/{row['policy']}/{row['tenants']}t/{row['admission']}"
-                      f"{'+fuse' if row['fuse'] else ''}: "
-                      f"p50={row['p50_ms']:.2f}ms p99={row['p99_ms']:.2f}ms "
-                      f"fairness={row['fairness']:.3f} "
-                      f"packages={row['packages']} "
-                      f"(fused_batches={row['fused_batches']})")
+def serve_coexec_sim(spec) -> None:
+    multi = (spec.admission.policy != "fifo" or spec.admission.fuse
+             or spec.workload.tenants is not None)
+    if multi:
+        for row in coexec_multi_rows(spec, policies=_sweep_policies(spec)):
+            print(f"[serve/coexec-multi] {row['workload']}"
+                  f"/{row['policy']}/{row['tenants']}t/{row['admission']}"
+                  f"{'+fuse' if row['fuse'] else ''}: "
+                  f"p50={row['p50_ms']:.2f}ms p99={row['p99_ms']:.2f}ms "
+                  f"fairness={row['fairness']:.3f} "
+                  f"packages={row['packages']} "
+                  f"(fused_batches={row['fused_batches']})")
         return
-    policies = (COEXEC_POLICIES if args.policy == "all" else (args.policy,))
-    for row in coexec_sim_rows(args.workload, policies):
+    for row in coexec_sim_rows(spec):
         print(f"[serve/coexec-sim] {row['workload']}/{row['policy']:13s}: "
               f"{row['seconds']:7.3f}s, {row['packages']:4d} packages, "
               f"balance={row['balance']:.2f}, steals={row['steals']}")
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI parser: LM flags + spec-derived co-execution flags.
+
+    Returns:
+        A parser whose co-execution flags are generated from the
+        ``CoexecSpec`` fields by :func:`repro.api.cli.add_spec_args` —
+        adding a spec field adds a serve flag with no edit here.
+    """
+    from repro.api import add_spec_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-tokens", type=int, default=16)
@@ -252,34 +291,29 @@ def main() -> None:
                     help="serve co-execution kernel requests instead of LM "
                          "decode: 'real' uses the persistent CoexecEngine, "
                          "'sim' the discrete-event simulator")
-    ap.add_argument("--policy", default="all",
-                    help=f"coexec scheduling policy to serve with, or "
-                         f"'all' to sweep {COEXEC_POLICIES}")
-    ap.add_argument("--concurrent", type=int, default=8,
-                    help="max in-flight launch_async requests (coexec real)")
-    ap.add_argument("--n", type=int, default=1 << 16,
-                    help="items per coexec request (coexec real)")
-    ap.add_argument("--workload", default="mandelbrot",
-                    help="paper workload profile (coexec sim)")
-    ap.add_argument("--admission", choices=["fifo", "wfq"], default="fifo",
-                    help="cross-launch queueing: FIFO drain or "
-                         "weighted-fair (deficit round robin per tenant)")
-    ap.add_argument("--fuse", action="store_true",
-                    help="coalesce small same-shaped concurrent launches "
-                         "into shared dispatches")
-    ap.add_argument("--tenants", type=int, default=None,
-                    help="concurrent tenants for the multi-tenant sim "
-                         "sweep (coexec sim; implied 8 when --admission "
-                         "wfq or --fuse is given)")
+    ap.add_argument("--spec-json", action="store_true",
+                    help="print the resolved CoexecSpec as JSON and exit")
+    add_spec_args(ap)
+    return ap
+
+
+def main() -> None:
+    from repro.api import spec_from_args
+
+    ap = build_parser()
     args = ap.parse_args()
+    try:
+        spec = spec_from_args(args, base=default_serve_spec()).validate()
+    except (KeyError, ValueError) as e:
+        ap.error(str(e))
 
-    if args.tenants is not None and args.tenants < 1:
-        ap.error("--tenants must be a positive integer")
-
+    if args.spec_json:
+        print(spec.to_json(indent=2))
+        return
     if args.coexec == "real":
-        return serve_coexec_real(args)
+        return serve_coexec_real(spec)
     if args.coexec == "sim":
-        return serve_coexec_sim(args)
+        return serve_coexec_sim(spec)
 
     import jax
     import jax.numpy as jnp
@@ -292,13 +326,14 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
     step = jax.jit(model.decode_step)
 
+    requests = spec.workload.requests
     B, P, G = args.batch, args.prompt_len, args.max_tokens
     served = 0
     t0 = time.perf_counter()
     rngs = jax.random.split(jax.random.PRNGKey(1),
-                            -(-args.requests // B))
+                            -(-requests // B))
     for batch_id, rk in enumerate(rngs):
-        n = min(B, args.requests - served)
+        n = min(B, requests - served)
         prompts = jax.random.randint(rk, (B, P), 0, cfg.vocab_size)
         cache = model.init_cache(B, P + G)
         if model.prefill is not None:

@@ -13,7 +13,7 @@ import pytest
 # how pytest was invoked (PYTHONPATH=src is the documented way, this is the
 # safety net for bare `pytest` runs)
 _ROOT = Path(__file__).resolve().parent.parent
-for p in (str(_ROOT / "src"), str(_ROOT / "tests")):
+for p in (str(_ROOT / "src"), str(_ROOT / "tests"), str(_ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)
 

@@ -1,0 +1,336 @@
+"""The declarative CoexecSpec API: round trips, registry, deprecations.
+
+Covers the PR's acceptance criteria:
+* lossless spec round trips (dict and JSON), randomized via _propcheck;
+* strict option validation — unknown/misspelled scheduler kwargs raise
+  ValueError naming the offending key and the accepted fields;
+* third-party plugin registration without core edits;
+* the legacy kwarg paths (rt.config, make_scheduler, engine kwargs)
+  still work but emit DeprecationWarning, while the spec paths are
+  warning-free;
+* one spec drives the real engine and simulate_multi identically.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+
+from repro.api import (AdmissionSpec, CoexecSpec, MemorySpec, SchedulerSpec,
+                       UnitsSpec, WorkloadSpec, build_scheduler,
+                       register_scheduler, register_workload,
+                       scheduler_names, speed_hint_policies,
+                       temporary_plugins, workload_names)
+from repro.core import (CoexecEngine, CoexecutorRuntime, LaunchSpec,
+                        Scheduler, make_scheduler, paper_workload,
+                        simulate, simulate_multi)
+
+
+def two_units():
+    from repro.api import CoexecSpec
+
+    return (CoexecSpec.builder()
+            .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.4, 0.6))
+            .build().build_units())
+
+
+# ---------------------------------------------------------------------------
+# Round trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(policy=st.sampled_from(("static", "dynamic", "hguided",
+                               "work_stealing")),
+       granularity=st.integers(1, 256),
+       num_packages=st.integers(1, 64),
+       admission=st.sampled_from(("fifo", "wfq")),
+       fuse=st.sampled_from((False, True)),
+       max_inflight=st.integers(1, 128),
+       memory=st.sampled_from(("usm", "buffers")),
+       workload=st.sampled_from(("taylor", "mandelbrot", "rap")),
+       items=st.integers(16, 1 << 20),
+       tenants=st.integers(1, 64),
+       dist=st.floats(0.05, 0.95))
+def test_spec_round_trip_randomized(policy, granularity, num_packages,
+                                    admission, fuse, max_inflight, memory,
+                                    workload, items, tenants, dist):
+    options = {"num_packages": num_packages} if policy == "dynamic" else {}
+    spec = CoexecSpec(
+        units=UnitsSpec(count=2, kinds=("cpu", "gpu"),
+                        speed_hints=(0.4, 0.6), dist=(dist,)),
+        scheduler=SchedulerSpec(policy=policy, granularity=granularity,
+                                options=tuple(options.items())),
+        admission=AdmissionSpec(policy=admission, fuse=fuse,
+                                max_inflight=max_inflight),
+        memory=MemorySpec(model=memory),
+        workload=WorkloadSpec(name=workload, items=items, tenants=tenants),
+    )
+    assert CoexecSpec.from_dict(spec.to_dict()) == spec
+    assert CoexecSpec.from_json(spec.to_json()) == spec
+    assert spec.validate() is spec
+
+
+def test_spec_rejects_unknown_fields_and_versions():
+    with pytest.raises(ValueError, match="unknown AdmissionSpec field"):
+        AdmissionSpec.from_dict({"polciy": "wfq"})
+    data = CoexecSpec().to_dict()
+    data["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        CoexecSpec.from_dict(data)
+
+
+def test_spec_options_are_order_insensitive_and_frozen():
+    a = SchedulerSpec(policy="dynamic",
+                      options=(("num_packages", 8), ("granularity", 2)))
+    b = SchedulerSpec(policy="dynamic",
+                      options=(("granularity", 2), ("num_packages", 8)))
+    assert a == b
+    with pytest.raises(Exception):      # frozen dataclass
+        a.policy = "static"
+    # list option values freeze to tuples (JSON round trip preserves them)
+    c = SchedulerSpec(policy="hguided", options=(("speeds", [0.4, 0.6]),))
+    assert c.options_dict()["speeds"] == (0.4, 0.6)
+    assert SchedulerSpec.from_dict(c.to_dict()) == c
+
+
+def test_builder_issue_example():
+    spec = (CoexecSpec.builder()
+            .policy("hguided")
+            .admission(wfq=True, max_inflight=64)
+            .fuse(True)
+            .build())
+    assert spec.scheduler.policy == "hguided"
+    assert spec.admission.policy == "wfq"
+    assert spec.admission.max_inflight == 64
+    assert spec.admission.fuse is True
+    # builder on a base spec derives without mutating the base
+    derived = CoexecSpec.builder(spec).policy("dynamic",
+                                              num_packages=4).build()
+    assert spec.scheduler.policy == "hguided"
+    assert derived.scheduler.policy == "dynamic"
+    assert derived.scheduler.options_dict() == {"num_packages": 4}
+    assert derived.admission == spec.admission
+
+
+def test_admission_spec_config_round_trip():
+    spec = AdmissionSpec(policy="wfq", fuse=True, fuse_limit=8,
+                         max_inflight=3, quantum=512)
+    assert AdmissionSpec.from_config(spec.to_config()) == spec
+
+
+# ---------------------------------------------------------------------------
+# Registry: strict validation + plugins
+# ---------------------------------------------------------------------------
+
+def test_unknown_scheduler_kwarg_raises_value_error_naming_key():
+    with pytest.raises(ValueError) as ei:
+        build_scheduler("static", 100, 2, chunk_pkgs=5)
+    msg = str(ei.value)
+    assert "chunk_pkgs" in msg           # the offending key, by name
+    assert "static" in msg
+    assert "speeds" in msg and "granularity" in msg    # accepted fields
+    # the deprecated shim inherits the same strictness
+    with pytest.raises(ValueError, match="num_package"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            make_scheduler("dynamic", 100, 2, num_package=5)  # misspelled
+    # spec validation reports it too, before anything is built
+    bad = CoexecSpec(scheduler=SchedulerSpec(
+        policy="hguided", options=(("divisr", 3.0),)))
+    with pytest.raises(ValueError, match="divisr"):
+        bad.validate()
+
+
+def test_unknown_policy_and_workload_raise_key_error():
+    with pytest.raises(KeyError):
+        build_scheduler("nope", 10, 1)
+    with pytest.raises(KeyError):
+        paper_workload("nope")
+    with pytest.raises(KeyError):
+        WorkloadSpec(name="nope").validate()
+
+
+def test_builtin_registrations_present():
+    assert set(scheduler_names()) >= {"static", "dynamic", "hguided",
+                                      "work_stealing"}
+    assert set(workload_names()) >= {"gaussian", "matmul", "taylor",
+                                     "mandelbrot", "rap", "ray"}
+    assert set(speed_hint_policies()) == {"static", "hguided",
+                                          "work_stealing"}
+    # shorthand aliases resolve through the registry
+    s = build_scheduler("dyn17", 1000, 2)
+    assert s.num_packages == 17
+    assert build_scheduler("work-stealing", 100, 2).name == "work_stealing"
+
+
+def test_third_party_scheduler_plugin_end_to_end():
+    class EveryOther(Scheduler):
+        """Toy policy: fixed-size packages, round-robin by request."""
+
+        name = "every_other"
+
+        def __init__(self, total, num_units, *, step=7, granularity=1):
+            super().__init__(total, num_units, granularity=granularity)
+            self.step = int(step)
+
+        def _package_size(self, unit):
+            return self.step
+
+    with temporary_plugins():
+        register_scheduler("every_other", EveryOther, fields=("step",))
+        assert "every_other" in scheduler_names()
+        spec = CoexecSpec.builder().policy("every_other", step=5).build()
+        sched = spec.build_scheduler(101, 2)
+        assert isinstance(sched, EveryOther) and sched.step == 5
+        # unknown options are rejected with the plugin's own field list
+        with pytest.raises(ValueError, match="stepp"):
+            build_scheduler("every_other", 10, 1, stepp=3)
+        # duplicate registration is refused without overwrite
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("every_other", EveryOther)
+    assert "every_other" not in scheduler_names()    # scope restored
+
+
+def test_third_party_workload_plugin():
+    def tiny(size_scale=1.0):
+        from repro.core import SimUnit, Workload
+
+        n = int(64 * size_scale)
+        wl = Workload(name="tiny", total=n, bytes_in_per_item=4.0,
+                      bytes_out_per_item=4.0, working_set_bytes=8.0 * n)
+        return wl, SimUnit("cpu", "cpu", speed=100.0), \
+            SimUnit("gpu", "gpu", speed=200.0)
+
+    with temporary_plugins():
+        register_workload("tiny", tiny, fields=("size_scale",))
+        wl, cpu, gpu = paper_workload("tiny", size_scale=2.0)
+        assert wl.total == 128
+        spec = CoexecSpec.builder().workload("tiny").build()
+        wl2, *_ = spec.build_workload()
+        assert wl2.name == "tiny"
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: old paths warn, new paths are silent
+# ---------------------------------------------------------------------------
+
+def test_legacy_paths_emit_deprecation_warning():
+    with pytest.warns(DeprecationWarning, match="make_scheduler"):
+        make_scheduler("dyn8", 100, 2)
+    with pytest.warns(DeprecationWarning, match="config"):
+        CoexecutorRuntime("dyn8").config(units=two_units(), dist=0.4)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        CoexecEngine(two_units(), admission="wfq", max_inflight=4)
+
+
+def test_spec_paths_are_warning_free():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        spec = (CoexecSpec.builder().policy("dyn8").dist(0.4)
+                .admission(wfq=True).build())
+        units = two_units()
+        engine = CoexecEngine.from_spec(spec, units=units)
+        assert engine.admission.config == spec.admission_config()
+        rt = CoexecutorRuntime.from_spec(spec, units=units)
+        assert rt.policy == "dyn8"
+        wl, cpu, gpu = paper_workload("taylor")
+        simulate(None, [cpu, gpu], wl, spec=spec)
+
+
+def test_engine_rejects_spec_plus_legacy_kwargs():
+    spec = CoexecSpec()
+    with pytest.raises(ValueError, match="not both"):
+        CoexecEngine(two_units(), spec=spec, max_inflight=4)
+
+
+def test_legacy_config_behavior_is_preserved():
+    """config() resets unspecified knobs to defaults, exactly as before."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        rt = CoexecutorRuntime("hguided")
+        rt.config(units=two_units(), dist=0.3, admission="wfq", fuse=True)
+        assert rt.spec.admission.policy == "wfq"
+        assert rt.spec.admission.fuse is True
+        assert rt.spec.units.dist == (0.3,)
+        rt.config(units=two_units())          # wholesale reconfigure
+        assert rt.spec.admission.policy == "fifo"
+        assert rt.spec.admission.fuse is False
+        assert rt.spec.units.dist == ()
+
+
+# ---------------------------------------------------------------------------
+# One spec, two substrates (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_one_spec_drives_engine_and_des_identically():
+    """Serve-style CLI args → spec → JSON round trip → real + DES runs."""
+    import argparse
+
+    from repro.api import add_spec_args, args_from_spec, spec_from_args
+
+    ap = argparse.ArgumentParser()
+    add_spec_args(ap)
+    argv = ["--policy", "dyn8", "--admission", "wfq", "--n", "2048",
+            "--tenants", "3", "--workload", "taylor",
+            "--max-inflight", "16"]
+    spec = spec_from_args(ap.parse_args(argv)).validate()
+
+    # (a) the spec is a lossless artifact
+    assert CoexecSpec.from_json(spec.to_json()) == spec
+    # (b) and regenerates equivalent CLI args
+    assert spec_from_args(ap.parse_args(args_from_spec(spec))) == spec
+
+    n_tenants = spec.workload.tenants
+    total = spec.workload.items
+
+    # (c) the DES run, configured by the spec
+    import dataclasses
+
+    wl, cpu, gpu = spec.build_workload()
+    wl = dataclasses.replace(wl, total=total, weights=None)
+    sim_specs = [LaunchSpec(wl, spec.build_scheduler(total, 2),
+                            tenant=f"t{i}") for i in range(n_tenants)]
+    sim = simulate_multi(sim_specs, [cpu, gpu], spec=spec)
+    sim_pkgs = sorted(r.num_packages for r in sim.launches)
+
+    # (d) the real engine run, configured by the same spec object
+    units = two_units()
+    def kernel(offset, chunk):
+        return chunk * 2.0
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        with CoexecutorRuntime.from_spec(spec, units=units) as rt:
+            data = [np.arange(total, dtype=np.float32) + i
+                    for i in range(n_tenants)]
+            handles = [rt.launch_async(total, kernel,
+                                       [data[i]], tenant=f"t{i}")
+                       for i in range(n_tenants)]
+            outs = [h.result() for h in handles]
+            engine_cfg = rt.engine.admission.config
+            real_pkgs = sorted(len(h.packages) for h in handles)
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(out, data[i] * 2.0)
+
+    # identical admission behavior: both substrates ran the exact config
+    assert engine_cfg == spec.admission_config()
+    # identical policy behavior: dyn8 issues exactly 8 packages per
+    # launch on both substrates (deterministic package count)
+    assert real_pkgs == sim_pkgs == [8] * n_tenants
+
+
+def test_simulate_multi_spec_matches_explicit_admission():
+    """spec= and admission= are the same code path (same controller)."""
+    wl, cpu, gpu = paper_workload("taylor")
+    spec = CoexecSpec.builder().admission(wfq=True).build()
+
+    def mk_specs():
+        return [LaunchSpec(wl, spec.build_scheduler(wl.total, 2),
+                           tenant=f"t{i}") for i in range(3)]
+
+    a = simulate_multi(mk_specs(), [cpu, gpu], spec=spec)
+    b = simulate_multi(mk_specs(), [cpu, gpu],
+                       admission=spec.admission_config())
+    assert a.dispatched_packages == b.dispatched_packages
+    assert a.latencies() == b.latencies()

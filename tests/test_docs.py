@@ -1,27 +1,46 @@
-"""Docs subsystem stays healthy: mermaid/links parse, docstrings hold.
+"""Docs subsystem stays healthy: mermaid/links parse, docstrings hold,
+the public-API snapshot matches, and the examples only use the
+non-deprecated (CoexecSpec) surface.
 
 Runs the same stdlib-only checkers as CI's docs job, so a broken doc
-link or a stripped public docstring fails tier-1 locally too.
+link, a stripped public docstring or an accidental API-surface break
+fails tier-1 locally too.
 """
+import ast
+import os
 import pathlib
 import subprocess
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
+# the kwarg-era entry points (all emit DeprecationWarning); examples must
+# demonstrate the spec surface only — see docs/api.md's deprecation table
+DEPRECATED_CALLS = {"make_scheduler"}
+DEPRECATED_METHODS = {"config"}
 
-def _run(script: str) -> subprocess.CompletedProcess:
-    return subprocess.run([sys.executable, str(REPO / "scripts" / script)],
-                          capture_output=True, text=True, timeout=60)
+
+def _run(script: str, *args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, str(REPO / "scripts" / script),
+                           *args],
+                          capture_output=True, text=True, timeout=120,
+                          env=env)
 
 
 def test_docs_exist_and_linked_from_readme():
-    for page in ("architecture.md", "policies.md", "benchmarks.md"):
+    for page in ("api.md", "architecture.md", "policies.md",
+                 "benchmarks.md"):
         assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
     readme = (REPO / "README.md").read_text()
+    assert "docs/api.md" in readme
     assert "docs/architecture.md" in readme
     assert "docs/policies.md" in readme
     assert "docs/benchmarks.md" in readme
+    # the architecture page links the API page (mermaid + module map)
+    assert "api.md" in (REPO / "docs" / "architecture.md").read_text()
 
 
 def test_check_docs_passes():
@@ -32,3 +51,49 @@ def test_check_docs_passes():
 def test_check_docstrings_passes():
     proc = _run("check_docstrings.py")
     assert proc.returncode == 0, proc.stderr
+
+
+def test_check_api_snapshot_matches():
+    proc = _run("check_api.py")
+    assert proc.returncode == 0, (proc.stdout, proc.stderr)
+
+
+def test_api_snapshot_committed_and_covers_both_modules():
+    snap = (REPO / "scripts" / "api_snapshot.txt").read_text()
+    assert "repro.api.CoexecSpec" in snap
+    assert "repro.core.CoexecutorRuntime" in snap
+
+
+def _deprecated_uses(path: pathlib.Path) -> list[str]:
+    """Calls to deprecated surface in one source file (by AST)."""
+    tree = ast.parse(path.read_text())
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in DEPRECATED_CALLS:
+            hits.append(f"{path.name}:{node.lineno} {fn.id}()")
+        elif isinstance(fn, ast.Attribute) and fn.attr in (
+                DEPRECATED_CALLS | DEPRECATED_METHODS):
+            # `.config(...)` on anything is the runtime's legacy surface;
+            # argparse etc. don't define a .config() so this stays exact
+            hits.append(f"{path.name}:{node.lineno} .{fn.attr}()")
+    return hits
+
+
+def test_examples_use_only_non_deprecated_surface():
+    hits = []
+    for example in sorted((REPO / "examples").glob("*.py")):
+        hits += _deprecated_uses(example)
+    assert not hits, (
+        "examples must demonstrate the CoexecSpec surface, not the "
+        f"deprecated kwarg API: {hits}")
+
+
+def test_examples_import_the_spec_api():
+    """The migrated examples actually demonstrate repro.api."""
+    for name in ("quickstart.py", "concurrent_requests.py"):
+        text = (REPO / "examples" / name).read_text()
+        assert "from repro.api import" in text, name
+        assert "CoexecSpec" in text, name
