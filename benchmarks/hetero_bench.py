@@ -33,37 +33,84 @@ SPEEDS = {"podA": 1.0, "podB": 0.5, "podC": 0.25}
 STEPS = 24
 MICROBATCHES = 14
 
-def run_coexec(spec=None):
-    """Package-scheduler sweep: DES (sim) and persistent engine (real).
+def coexec_structured_rows(spec=None, *, smoke: bool = False) -> list[dict]:
+    """The coexec suite as machine-readable dicts (the JSON artifact).
 
-    The measurement loops live in `repro.launch.serve` (shared with the
-    `serve --coexec {real,sim}` CLI); this wrapper only formats CSV rows.
-    `spec` is an optional `repro.api.CoexecSpec` base — `benchmarks.run`
-    builds it from its spec-derived CLI flags.
+    One dict per (substrate, workload/kernel, policy, memory model) with
+    throughput plus the data plane's dispatch and staging-copy counters —
+    what `benchmarks.run` serializes into ``BENCH_coexec.json`` so the
+    perf trajectory is tracked across PRs. The real path sweeps both
+    memory models; ``smoke`` shrinks sizes for CI.
     """
     from repro.launch.serve import (coexec_real_rows, coexec_sim_rows,
                                     default_serve_spec)
 
     base = spec if spec is not None else default_serve_spec()
-    rows = []
-    # simulated path: one regular + one irregular paper workload
+    rows: list[dict] = []
+    # simulated path: one regular + one irregular paper workload, both
+    # memory cost models (USM vs BUFFERS is now an end-to-end axis)
     for wl_name in ("taylor", "mandelbrot"):
-        wl_spec = base.replace(workload=base.workload.replace(name=wl_name))
-        for r in coexec_sim_rows(wl_spec):
-            rows.append((f"coexec-sim/{wl_name}/{r['policy']}",
+        for mem in ("usm", "buffers"):
+            wl_spec = base.replace(
+                workload=base.workload.replace(name=wl_name),
+                memory=base.memory.replace(model=mem))
+            for r in coexec_sim_rows(wl_spec):
+                rows.append(dict(kind="sim", workload=wl_name, memory=mem,
+                                 **{k: r[k] for k in
+                                    ("policy", "seconds", "packages",
+                                     "balance", "steals", "dispatches",
+                                     "h2d_copies", "d2h_copies")}))
+    # real path: concurrent launch_async requests on the engine, both
+    # data planes, serving the workload's registered kernel. Units are
+    # shared across the sweep so each kernel jit-compiles once.
+    items, requests = (1 << 12, 4) if smoke else (1 << 14, 8)
+    units = base.build_units()
+    for mem in ("usm", "buffers"):
+        real_spec = base.replace(
+            workload=base.workload.replace(
+                name="taylor", items=items, requests=requests,
+                concurrent=requests),
+            memory=base.memory.replace(model=mem))
+        for r in coexec_real_rows(real_spec, units=units):
+            rows.append(dict(kind="real", workload=r["kernel"], **{
+                k: r[k] for k in
+                ("kernel", "memory", "policy", "requests", "n", "seconds",
+                 "packages", "req_per_s", "items_per_s", "dispatches",
+                 "h2d_copies", "d2h_copies", "p50_ms", "p99_ms")}))
+    return rows
+
+
+def run_coexec(spec=None, *, smoke: bool = False, structured=None):
+    """Package-scheduler sweep: DES (sim) and persistent engine (real).
+
+    The measurement loops live in `repro.launch.serve` (shared with the
+    `serve --coexec {real,sim}` CLI); this wrapper formats the structured
+    rows of :func:`coexec_structured_rows` as CSV (pass ``structured`` to
+    format pre-measured rows instead of re-running). `spec` is an
+    optional `repro.api.CoexecSpec` base — `benchmarks.run` builds it
+    from its spec-derived CLI flags.
+    """
+    if structured is None:
+        structured = coexec_structured_rows(spec, smoke=smoke)
+    rows = []
+    for r in structured:
+        if r["kind"] == "sim":
+            rows.append((f"coexec-sim/{r['workload']}/{r['policy']}"
+                         f"/{r['memory']}",
                          round(r["seconds"] * 1e3, 1),
                          f"packages={r['packages']};"
                          f"balance={r['balance']:.2f};"
-                         f"steals={r['steals']}"))
-    # real path: concurrent launch_async requests on the engine
-    real_spec = base.replace(workload=base.workload.replace(
-        name="taylor", items=1 << 14, requests=8, concurrent=8))
-    for r in coexec_real_rows(real_spec):
-        rows.append((f"coexec-real/taylor/{r['policy']}",
-                     round(r["seconds"] * 1e3, 1),
-                     f"requests={r['requests']};packages={r['packages']};"
-                     f"req_per_s={r['req_per_s']:.1f};"
-                     f"p99_ms={r['p99_ms']:.1f}"))
+                         f"steals={r['steals']};"
+                         f"h2d={r['h2d_copies']};d2h={r['d2h_copies']}"))
+        else:
+            rows.append((f"coexec-real/{r['kernel']}/{r['policy']}"
+                         f"/{r['memory']}",
+                         round(r["seconds"] * 1e3, 1),
+                         f"requests={r['requests']};"
+                         f"packages={r['packages']};"
+                         f"req_per_s={r['req_per_s']:.1f};"
+                         f"h2d={r['h2d_copies']};d2h={r['d2h_copies']};"
+                         f"p99_ms={r['p99_ms']:.1f}"))
     return rows
 
 

@@ -4,15 +4,22 @@ benchmarks. Prints ``name,value,derived`` CSV rows.
   python -m benchmarks.run                 # everything
   python -m benchmarks.run fig5 fig7       # selected artifacts
   python -m benchmarks.run coexec --policy work_stealing --n 16384
+  python -m benchmarks.run coexec --smoke  # CI-sized data-plane exercise
+  python -m benchmarks.run --list          # registered plugins
 
 The co-execution suites (``coexec`` / ``coexec-multi``) take the same
 spec-derived flags as ``repro.launch.serve`` — both CLIs generate them
 from the ``repro.api.CoexecSpec`` fields, so a new spec field becomes a
-new flag in both tools with no edits here.
+new flag in both tools with no edits here. When a coexec suite runs, the
+driver also writes the machine-readable ``BENCH_coexec.json`` (path via
+``--bench-json``): per-workload/policy/memory throughput plus the data
+plane's dispatch and staging-copy counters, the artifact CI uploads so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -31,12 +38,21 @@ def build_parser(suite_names) -> argparse.ArgumentParser:
     ap.add_argument("suites", nargs="*", metavar="SUITE",
                     help=f"suites to run (default: all); "
                          f"have {sorted(suite_names)}")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered schedulers, workloads and "
+                         "kernels (with their option fields) and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the coexec suite to CI-smoke sizes")
+    ap.add_argument("--bench-json", default="BENCH_coexec.json",
+                    metavar="PATH",
+                    help="where to write the machine-readable coexec "
+                         "results (default: %(default)s)")
     add_spec_args(ap)
     return ap
 
 
 def main() -> None:
-    from repro.api import spec_from_args
+    from repro.api import registry_listing, spec_from_args
 
     from . import hetero_bench, kernel_micro, paper_figs, roofline_table
     from repro.launch.serve import default_serve_spec
@@ -45,15 +61,26 @@ def main() -> None:
         list(dict(paper_figs.ALL))
         + ["kernels", "hetero", "coexec", "coexec-multi", "roofline"])
     args = ap.parse_args()
+    if args.list:
+        print(registry_listing())
+        return
     try:
         spec = spec_from_args(args, base=default_serve_spec()).validate()
     except (KeyError, ValueError) as e:
         ap.error(str(e))
 
+    bench_rows: list[dict] = []
+
+    def coexec_suite():
+        structured = hetero_bench.coexec_structured_rows(spec,
+                                                         smoke=args.smoke)
+        bench_rows.extend(structured)
+        return hetero_bench.run_coexec(spec, structured=structured)
+
     suites = dict(paper_figs.ALL)
     suites["kernels"] = kernel_micro.run
     suites["hetero"] = hetero_bench.run
-    suites["coexec"] = lambda: hetero_bench.run_coexec(spec)
+    suites["coexec"] = coexec_suite
     suites["coexec-multi"] = lambda: hetero_bench.run_coexec_multi(spec)
     suites["roofline"] = roofline_table.run
 
@@ -66,6 +93,13 @@ def main() -> None:
             continue
         for name, value, derived in suites[key]():
             print(f"{name},{value},{derived}")
+
+    if bench_rows:
+        doc = {"version": 1, "spec": spec.to_dict(), "rows": bench_rows}
+        with open(args.bench_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.bench_json} ({len(bench_rows)} rows)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,62 +1,49 @@
-"""Co-execute the paper's six benchmarks (real kernels, real threads) and
+"""Co-execute the paper's benchmarks (real kernels, real threads) and
 reproduce the scheduler comparison on this host's devices.
+
+Every kernel is resolved through the plugin registry
+(`repro.api.build_kernel`) and declares its own data semantics — split
+arrays, broadcast operands, stencil halos — so the one loop below drives
+all of them with no per-kernel glue; `--memory buffers` switches the
+engine's data plane and the printed staging-copy counters show the cost.
 
     PYTHONPATH=src python examples/coexec_benchmarks.py [--n 16384]
 """
 import argparse
 import time
 
-import numpy as np
-
-from repro.api import CoexecSpec
+from repro.api import CoexecSpec, build_kernel, kernel_demo_inputs
 from repro.core import CoexecutorRuntime
-from repro.kernels import demo_spheres, package_kernel
-
-
-def inputs_for(name: str, n: int):
-    rng = np.random.default_rng(0)
-    if name == "taylor":
-        return [rng.uniform(-2, 2, n).astype(np.float32)]
-    if name == "mandelbrot":
-        side = int(np.sqrt(n))
-        re_ = np.linspace(-2.2, 0.8, side, dtype=np.float32)
-        im = np.linspace(-1.4, 1.4, side, dtype=np.float32)
-        cre, cim = np.meshgrid(re_, im)
-        return [cre.ravel(), cim.ravel()]
-    if name == "ray":
-        dx, dy = rng.uniform(-.4, .4, (2, n)).astype(np.float32)
-        dz = np.sqrt(np.maximum(1 - dx**2 - dy**2, .5)).astype(np.float32)
-        return [dx, dy, dz]
-    if name == "rap":
-        L = 64
-        return [rng.normal(size=(n, L)).astype(np.float32),
-                rng.integers(0, L, size=n).astype(np.int32)]
-    raise KeyError(name)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1 << 14)
+    ap.add_argument("--memory", choices=("usm", "buffers"), default="usm")
     args = ap.parse_args()
 
     base = (CoexecSpec.builder()
             .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.5, 0.5))
             .dist(0.5)
+            .memory(args.memory)
             .build())
     units = base.build_units()      # shared across policies (one jit cache)
     for name in ("taylor", "mandelbrot", "ray", "rap"):
-        ins = inputs_for(name, args.n)
-        total = len(ins[0])
-        print(f"== {name} ({total} items)")
+        kernel = build_kernel(name)
+        ins = kernel_demo_inputs(name, args.n)
+        print(f"== {name} ({args.n} items, {args.memory})")
         for policy in ("static", "dyn16", "hguided", "work_stealing"):
             spec = base.replace(
                 scheduler=base.scheduler.replace(policy=policy))
             rt = CoexecutorRuntime.from_spec(spec, units=units)
             t0 = time.perf_counter()
-            rt.launch(total, package_kernel(name), ins)
+            rt.launch(args.n, kernel, ins)
             dt = time.perf_counter() - t0
+            st = rt.last_stats
             print(f"   {policy:8s}: {dt * 1e3:7.1f} ms, "
-                  f"{rt.last_stats.num_packages:3d} packages")
+                  f"{st.num_packages:3d} packages, "
+                  f"copies h2d={st.data.h2d_copies} "
+                  f"d2h={st.data.d2h_copies}")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.api import CoexecSpec
 from repro.core import CoexecutorRuntime
-from repro.kernels import package_kernel
 
 
 def main() -> None:
@@ -34,7 +33,7 @@ def main() -> None:
             .dist(0.4)
             .workload("taylor", items=args.n, requests=args.requests)
             .build())
-    kernel = package_kernel(spec.workload.name)
+    kernel = spec.build_kernel()        # resolved via the kernel registry
     rng = np.random.default_rng(0)
     xs = [rng.uniform(-2, 2, args.n).astype(np.float32)
           for _ in range(args.requests)]

@@ -30,6 +30,7 @@ MODULES = [
     f"{API}/registry.py",
     f"{API}/spec.py",
     f"{CORE}/admission.py",
+    f"{CORE}/dataplane.py",
     f"{CORE}/energy.py",
     f"{CORE}/engine.py",
     f"{CORE}/runtime.py",
@@ -61,8 +62,19 @@ STRICT: dict[str, tuple[str, ...]] = {
     "cli.py::add_spec_args": ("Args:",),
     "cli.py::args_from_spec": ("Args:", "Returns:"),
     "cli.py::spec_from_args": ("Args:", "Returns:"),
+    "dataplane.py::ArgSpec": ("name", "role", "axis", "halo", "default"),
+    "dataplane.py::CoexecKernel.bind": ("Args:", "Returns:", "Raises:"),
+    "dataplane.py::DataPlane.execute": ("Args:",),
+    "dataplane.py::DataPlane.plan": ("Args:", "Returns:", "Raises:"),
+    "dataplane.py::DataPlaneCounters": ("dispatches", "h2d_copies",
+                                        "d2h_copies"),
+    "dataplane.py::as_coexec_kernel": ("Args:", "Returns:"),
+    "dataplane.py::make_plane": ("Args:", "Returns:", "Raises:"),
+    "registry.py::build_kernel": ("Args:", "Returns:", "Raises:"),
     "registry.py::build_scheduler": ("Args:", "Returns:", "Raises:"),
     "registry.py::build_workload": ("Args:", "Returns:", "Raises:"),
+    "registry.py::kernel_demo_inputs": ("Args:", "Returns:", "Raises:"),
+    "registry.py::register_kernel": ("Args:", "Returns:", "Raises:"),
     "registry.py::register_scheduler": ("Args:", "Returns:", "Raises:"),
     "registry.py::register_workload": ("Args:", "Returns:", "Raises:"),
     "registry.py::validate_scheduler_options": ("Args:", "Raises:"),

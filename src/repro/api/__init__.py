@@ -3,8 +3,10 @@
 One typed object, :class:`CoexecSpec`, configures every layer: the real
 persistent engine, the paper-facing runtime, the discrete-event
 simulators, and the CLIs (whose flags are derived from the spec fields).
-Schedulers and workloads plug in by name through :mod:`repro.api.registry`
-so third-party policies register without editing core.
+Schedulers, workloads and co-executable kernels plug in by name through
+:mod:`repro.api.registry` so third-party policies, profiles and kernels
+register without editing core (``build_kernel``/``kernel_demo_inputs``
+resolve kernels; ``registry_listing`` powers the CLIs' ``--list``).
 
     from repro.api import CoexecSpec
 
@@ -23,22 +25,27 @@ registry how-to. The legacy kwarg surfaces (``rt.config(...)``,
 """
 from . import registry
 from .cli import (SPEC_SECTIONS, add_spec_args, args_from_spec,
-                  spec_from_args)
-from .registry import (SchedulerPlugin, WorkloadPlugin, build_scheduler,
-                       build_workload, register_scheduler,
+                  registry_listing, spec_from_args)
+from .registry import (KernelPlugin, SchedulerPlugin, WorkloadPlugin,
+                       build_kernel, build_scheduler, build_workload,
+                       kernel_demo_inputs, kernel_names, kernel_plugin,
+                       register_kernel, register_scheduler,
                        register_workload, scheduler_names,
                        speed_hint_policies, temporary_plugins,
-                       validate_scheduler_options, workload_names)
+                       validate_scheduler_options, workload_names,
+                       workload_plugin)
 from .spec import (SPEC_VERSION, AdmissionSpec, CoexecSpec,
                    CoexecSpecBuilder, MemorySpec, SchedulerSpec, UnitsSpec,
                    WorkloadSpec)
 
 __all__ = [
-    "AdmissionSpec", "CoexecSpec", "CoexecSpecBuilder", "MemorySpec",
-    "SPEC_SECTIONS", "SPEC_VERSION", "SchedulerPlugin", "SchedulerSpec",
-    "UnitsSpec", "WorkloadPlugin", "WorkloadSpec", "add_spec_args",
-    "args_from_spec", "build_scheduler", "build_workload", "registry",
-    "register_scheduler", "register_workload", "scheduler_names",
+    "AdmissionSpec", "CoexecSpec", "CoexecSpecBuilder", "KernelPlugin",
+    "MemorySpec", "SPEC_SECTIONS", "SPEC_VERSION", "SchedulerPlugin",
+    "SchedulerSpec", "UnitsSpec", "WorkloadPlugin", "WorkloadSpec",
+    "add_spec_args", "args_from_spec", "build_kernel", "build_scheduler",
+    "build_workload", "kernel_demo_inputs", "kernel_names",
+    "kernel_plugin", "register_kernel", "register_scheduler",
+    "register_workload", "registry", "registry_listing", "scheduler_names",
     "spec_from_args", "speed_hint_policies", "temporary_plugins",
-    "validate_scheduler_options", "workload_names",
+    "validate_scheduler_options", "workload_names", "workload_plugin",
 ]

@@ -31,7 +31,7 @@ from typing import Any, Optional, Sequence
 from .spec import CoexecSpec
 
 __all__ = ["SPEC_SECTIONS", "add_spec_args", "spec_from_args",
-           "args_from_spec"]
+           "args_from_spec", "registry_listing"]
 
 # section order fixes flag ordering in --help and in args_from_spec output
 SPEC_SECTIONS = ("scheduler", "admission", "workload", "units", "memory")
@@ -191,6 +191,55 @@ def spec_from_args(args: argparse.Namespace, *,
         sub = getattr(spec, section).replace(**{f.name: value})
         spec = spec.replace(**{section: sub})
     return spec
+
+
+def registry_listing() -> str:
+    """Human-readable dump of every registered plugin (``--list``).
+
+    One line per registered scheduler, workload and kernel with its
+    declared option fields — the introspection surface both CLIs print,
+    so a freshly registered third-party plugin is discoverable without
+    reading code. Kernels additionally show their per-argument partition
+    semantics (split axis/halo, broadcast, defaults).
+
+    Returns:
+        The formatted multi-line listing.
+    """
+    from . import registry
+
+    lines = ["schedulers:"]
+    for name in registry.scheduler_names():
+        plugin, _ = registry.resolve_scheduler(name)
+        extra = "  [takes a speeds hint]" if plugin.speed_hint else ""
+        lines.append(f"  {name:14s} options: "
+                     f"{', '.join(sorted(plugin.fields)) or '-'}{extra}")
+    lines.append("workloads:")
+    for name in registry.workload_names():
+        fields = registry.workload_plugin(name).fields
+        lines.append(f"  {name:14s} options: "
+                     f"{', '.join(sorted(fields)) or '-'}")
+    lines.append("kernels:")
+    for name in registry.kernel_names():
+        plugin = registry.kernel_plugin(name)
+        try:
+            kernel = plugin.factory()
+            args = []
+            for a in kernel.args:
+                if a.role.value == "split":
+                    halo = f"+halo{a.halo}" if a.halo else ""
+                    axis = f"@axis{a.axis}" if a.axis else ""
+                    args.append(f"{a.name}[split{axis}{halo}]")
+                else:
+                    dflt = "=default" if a.default is not None else ""
+                    args.append(f"{a.name}[broadcast{dflt}]")
+            args_desc = ", ".join(args)
+        except Exception:
+            # a factory with required options cannot be probed for its
+            # argument semantics; still list the kernel itself
+            args_desc = "(factory needs options)"
+        lines.append(f"  {name:14s} args: {args_desc}; options: "
+                     f"{', '.join(sorted(plugin.fields)) or '-'}")
+    return "\n".join(lines)
 
 
 def _format_kv(key: str, value: Any) -> str:

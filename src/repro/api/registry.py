@@ -1,4 +1,4 @@
-"""Plugin registry for schedulers and workloads (the `CoexecSpec` backend).
+"""Plugin registry for schedulers, workloads and kernels (`CoexecSpec` backend).
 
 The paper's runtime selects its load balancer by name (Listing 1's
 ``<hg>`` template parameter); PR 1–2 rendered that as an if-chain inside
@@ -14,6 +14,14 @@ policies and workload profiles register *without editing core*:
 * :func:`register_workload` — a profile name and a factory returning
   ``(Workload, cpu_unit, gpu_unit)``, the contract of
   :func:`repro.core.workloads.paper_workload`.
+* :func:`register_kernel` — a kernel name and a factory returning a
+  typed :class:`~repro.core.dataplane.CoexecKernel` (per-argument
+  SPLIT/BROADCAST semantics + output slot), optionally with a demo-input
+  generator so benchmarks and parity tests can drive any registered
+  kernel. This replaces the ``package_kernel`` if-chain of hand-written
+  closures: the paper's six kernels register in
+  :mod:`repro.kernels.ops`, third-party kernels register here without
+  editing core.
 * shorthand resolvers — pattern aliases such as ``dyn5`` → Dynamic with 5
   packages register alongside the policy they expand to.
 
@@ -28,12 +36,13 @@ import dataclasses
 from typing import Callable, Iterator, Optional
 
 __all__ = [
-    "SchedulerPlugin", "WorkloadPlugin",
-    "register_scheduler", "register_workload",
-    "scheduler_names", "workload_names",
-    "resolve_scheduler", "build_scheduler", "build_workload",
-    "validate_scheduler_options", "speed_hint_policies",
-    "temporary_plugins",
+    "KernelPlugin", "SchedulerPlugin", "WorkloadPlugin",
+    "register_kernel", "register_scheduler", "register_workload",
+    "kernel_names", "scheduler_names", "workload_names",
+    "resolve_scheduler", "build_kernel", "build_scheduler",
+    "build_workload", "kernel_demo_inputs", "kernel_plugin",
+    "workload_plugin", "validate_scheduler_options",
+    "speed_hint_policies", "temporary_plugins",
 ]
 
 
@@ -83,8 +92,35 @@ class WorkloadPlugin:
     validate: Optional[Callable[[dict], None]] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelPlugin:
+    """One registered co-executable kernel.
+
+    Attributes:
+        name: canonical kernel name.
+        factory: ``factory(**options) -> CoexecKernel`` — must return the
+            *same* kernel object for the same options (cache it), so the
+            engine's jit cache and fusion coalescing key stay warm across
+            builds.
+        fields: option names the factory accepts (the validation
+            whitelist, e.g. ``terms`` for the Taylor kernel).
+        demo_inputs: optional ``fn(n, rng) -> list[np.ndarray]``
+            generating representative inputs for an ``n``-item launch —
+            what lets benchmarks and parity tests drive *every*
+            registered kernel without per-kernel glue.
+        validate: optional ``fn(options: dict) -> None`` pre-build hook.
+    """
+
+    name: str
+    factory: Callable
+    fields: tuple[str, ...] = ()
+    demo_inputs: Optional[Callable] = None
+    validate: Optional[Callable[[dict], None]] = None
+
+
 _SCHEDULERS: dict[str, SchedulerPlugin] = {}
 _WORKLOADS: dict[str, WorkloadPlugin] = {}
+_KERNELS: dict[str, KernelPlugin] = {}
 
 
 def register_scheduler(name: str, factory: Callable, *,
@@ -153,6 +189,37 @@ def register_workload(name: str, factory: Callable, *,
     return plugin
 
 
+def register_kernel(name: str, factory: Callable, *,
+                    fields: tuple[str, ...] = (),
+                    demo_inputs: Optional[Callable] = None,
+                    validate: Optional[Callable] = None,
+                    overwrite: bool = False) -> KernelPlugin:
+    """Register a co-executable kernel under ``name``.
+
+    Args:
+        name: kernel name; normalized like policy names.
+        factory: ``factory(**options) -> CoexecKernel`` (should memoize).
+        fields: accepted option names.
+        demo_inputs: ``fn(n, rng) -> list[np.ndarray]`` demo generator.
+        validate: per-kernel option validation hook.
+        overwrite: allow replacing an existing registration.
+
+    Returns:
+        The stored :class:`KernelPlugin`.
+
+    Raises:
+        ValueError: duplicate name without ``overwrite``.
+    """
+    key = _normalize(name)
+    if key in _KERNELS and not overwrite:
+        raise ValueError(f"kernel {key!r} is already registered; "
+                         f"pass overwrite=True to replace it")
+    plugin = KernelPlugin(key, factory, fields=tuple(fields),
+                          demo_inputs=demo_inputs, validate=validate)
+    _KERNELS[key] = plugin
+    return plugin
+
+
 def _ensure_builtins() -> None:
     """Make sure core's built-in policies/workloads have registered.
 
@@ -165,6 +232,16 @@ def _ensure_builtins() -> None:
         import repro.core.workloads  # noqa: F401
 
 
+def _ensure_kernels() -> None:
+    """Make sure the paper's built-in kernels have registered.
+
+    Separate from :func:`_ensure_builtins` because the kernel package is
+    the heavy import (Pallas modules); sim-only flows never pay it.
+    """
+    if not _KERNELS:
+        import repro.kernels.ops  # noqa: F401  (registers built-ins)
+
+
 def scheduler_names() -> tuple[str, ...]:
     """Registered policy names, sorted (shorthand aliases excluded)."""
     _ensure_builtins()
@@ -175,6 +252,104 @@ def workload_names() -> tuple[str, ...]:
     """Registered workload profile names, sorted."""
     _ensure_builtins()
     return tuple(sorted(_WORKLOADS))
+
+
+def kernel_names() -> tuple[str, ...]:
+    """Registered co-executable kernel names, sorted."""
+    _ensure_kernels()
+    return tuple(sorted(_KERNELS))
+
+
+def workload_plugin(name: str) -> WorkloadPlugin:
+    """Look one workload plugin up by name.
+
+    Args:
+        name: registered profile name (case/hyphen-insensitive).
+
+    Returns:
+        The stored :class:`WorkloadPlugin`.
+
+    Raises:
+        KeyError: no workload of that name is registered.
+    """
+    _ensure_builtins()
+    key = _normalize(name)
+    plugin = _WORKLOADS.get(key)
+    if plugin is None:
+        raise KeyError(f"unknown workload {name!r}; "
+                       f"choose from {sorted(_WORKLOADS)}")
+    return plugin
+
+
+def kernel_plugin(name: str) -> KernelPlugin:
+    """Look one kernel plugin up by name.
+
+    Args:
+        name: registered kernel name (case/hyphen-insensitive).
+
+    Returns:
+        The stored :class:`KernelPlugin`.
+
+    Raises:
+        KeyError: no kernel of that name is registered.
+    """
+    _ensure_kernels()
+    key = _normalize(name)
+    plugin = _KERNELS.get(key)
+    if plugin is None:
+        raise KeyError(f"unknown kernel {name!r}; "
+                       f"choose from {sorted(_KERNELS)}")
+    return plugin
+
+
+def build_kernel(name: str, **options):
+    """Build (resolve) a registered kernel by name.
+
+    Args:
+        name: registered kernel name.
+        **options: kernel options (validated against declared fields).
+
+    Returns:
+        The kernel object the factory returns — for the paper's
+        built-ins, a :class:`~repro.core.dataplane.CoexecKernel`.
+
+    Raises:
+        KeyError: unknown kernel.
+        ValueError: unknown option key (named, with accepted fields).
+    """
+    plugin = kernel_plugin(name)
+    unknown = sorted(set(options) - set(plugin.fields))
+    if unknown:
+        raise ValueError(
+            f"unknown option(s) {unknown!r} for kernel {plugin.name!r}; "
+            f"accepted fields: {sorted(plugin.fields)}")
+    if plugin.validate is not None:
+        plugin.validate(dict(options))
+    return plugin.factory(**options)
+
+
+def kernel_demo_inputs(name: str, n: int, *, seed: int = 0) -> list:
+    """Representative inputs for an ``n``-item launch of one kernel.
+
+    Args:
+        name: registered kernel name.
+        n: launch index-space size.
+        seed: RNG seed (vary it for independent requests).
+
+    Returns:
+        Host input arrays acceptable to the kernel's declared arguments.
+
+    Raises:
+        KeyError: unknown kernel.
+        ValueError: the kernel registered no demo-input generator.
+    """
+    import numpy as np
+
+    plugin = kernel_plugin(name)
+    if plugin.demo_inputs is None:
+        raise ValueError(f"kernel {plugin.name!r} registered no "
+                         f"demo-input generator")
+    return plugin.demo_inputs(int(n), np.random.default_rng(seed))
 
 
 def speed_hint_policies() -> tuple[str, ...]:
@@ -306,6 +481,7 @@ class temporary_plugins:
     def __enter__(self) -> "temporary_plugins":
         self._sched = dict(_SCHEDULERS)
         self._work = dict(_WORKLOADS)
+        self._kern = dict(_KERNELS)
         return self
 
     def __exit__(self, *exc) -> None:
@@ -313,6 +489,8 @@ class temporary_plugins:
         _SCHEDULERS.update(self._sched)
         _WORKLOADS.clear()
         _WORKLOADS.update(self._work)
+        _KERNELS.clear()
+        _KERNELS.update(self._kern)
 
 
 def _iter_scheduler_plugins() -> Iterator[SchedulerPlugin]:

@@ -388,12 +388,17 @@ class MemorySpec(_SubSpec):
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec(_SubSpec):
-    """What to run: profile, per-launch size, and serving shape."""
+    """What to run: profile, kernel, per-launch size, and serving shape."""
 
     name: str = dataclasses.field(
         default="taylor", metadata=_cli(
             "workload", "registered workload profile (paper Table 1 "
                         "benchmarks, or a plugin)"))
+    kernel: str = dataclasses.field(
+        default="", metadata=_cli(
+            "kernel", "registered package kernel for the real engine "
+                      "(default: the workload's same-named kernel, "
+                      "falling back to taylor)"))
     size_scale: float = dataclasses.field(
         default=1.0, metadata=_cli(
             "size-scale", "problem-size multiplier for the profile "
@@ -412,15 +417,19 @@ class WorkloadSpec(_SubSpec):
             "tenants", "concurrent tenants for the multi-tenant DES sweep"))
 
     def validate(self) -> None:
-        """Check the profile exists and the serving shape is sane.
+        """Check the profile/kernel exist and the serving shape is sane.
 
         Raises:
-            KeyError: unknown workload profile.
+            KeyError: unknown workload profile, or an explicitly named
+                kernel that is not registered.
             ValueError: non-positive sizes/counts.
         """
         if self.name not in registry.workload_names():
             raise KeyError(f"unknown workload {self.name!r}; choose from "
                            f"{list(registry.workload_names())}")
+        if self.kernel and self.kernel not in registry.kernel_names():
+            raise KeyError(f"unknown kernel {self.kernel!r}; choose from "
+                           f"{list(registry.kernel_names())}")
         if self.items <= 0 or self.requests <= 0 or self.concurrent <= 0:
             raise ValueError("items/requests/concurrent must be positive")
         if self.size_scale <= 0:
@@ -436,6 +445,28 @@ class WorkloadSpec(_SubSpec):
         """
         return registry.build_workload(self.name,
                                        size_scale=self.size_scale)
+
+    def resolve_kernel(self) -> str:
+        """The kernel name real co-execution paths should serve.
+
+        Returns:
+            The explicit :attr:`kernel` when set; otherwise the
+            workload's same-named registered kernel, falling back to
+            ``"taylor"`` for profiles with no kernel twin.
+        """
+        if self.kernel:
+            return self.kernel
+        if self.name in registry.kernel_names():
+            return self.name
+        return "taylor"
+
+    def build_kernel(self):
+        """Resolve the served kernel through the kernel registry.
+
+        Returns:
+            The registered :class:`~repro.core.dataplane.CoexecKernel`.
+        """
+        return registry.build_kernel(self.resolve_kernel())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -576,6 +607,10 @@ class CoexecSpec(_SubSpec):
         """The described workload profile (see ``WorkloadSpec.build``)."""
         return self.workload.build()
 
+    def build_kernel(self):
+        """The served kernel (see ``WorkloadSpec.build_kernel``)."""
+        return self.workload.build_kernel()
+
     def admission_config(self) -> AdmissionConfig:
         """The admission section as a core ``AdmissionConfig``."""
         return self.admission.to_config()
@@ -711,6 +746,7 @@ class CoexecSpecBuilder:
         return self._update(admission=adm)
 
     def workload(self, name: Optional[str] = None, *,
+                 kernel: Optional[str] = None,
                  items: Optional[int] = None,
                  requests: Optional[int] = None,
                  concurrent: Optional[int] = None,
@@ -720,6 +756,8 @@ class CoexecSpecBuilder:
         wl = self._spec.workload
         if name is not None:
             wl = wl.replace(name=str(name))
+        if kernel is not None:
+            wl = wl.replace(kernel=str(kernel))
         if items is not None:
             wl = wl.replace(items=int(items))
         if requests is not None:

@@ -22,11 +22,15 @@ Public surface:
     simulate_multi, LaunchSpec, MultiSimResult  — multi-tenant DES (admission
                                                   policies in virtual time)
     MemoryModel, MemoryCosts                    — USM vs Buffers (§3.1)
+    CoexecKernel, ArgSpec, ArgRole, OutputSpec  — typed kernel protocol
+    DataPlaneCounters, make_plane               — real USM/BUFFERS data plane
     PowerModel, energy_report, edp_ratio        — energy/EDP model (§5.2)
     paper_workload, ALL_BENCHMARKS              — Table 1 profiles
 """
 from .admission import (ADMISSION_POLICIES, AdmissionConfig,
                         AdmissionController, AdmissionFull, jain_index)
+from .dataplane import (ArgRole, ArgSpec, CoexecKernel, DataPlaneCounters,
+                        OutputSpec, as_coexec_kernel, make_plane)
 from .energy import (EnergyReport, PowerModel, PAPER_POWER, TPU_POWER,
                      edp_ratio, energy_report, geomean)
 from .engine import (CoexecEngine, LaunchHandle, LaunchStats,
@@ -46,16 +50,18 @@ from .workloads import (ALL_BENCHMARKS, IRREGULAR, REGULAR, SPECS,
 
 __all__ = [
     "ADMISSION_POLICIES", "ALL_BENCHMARKS", "AdmissionConfig",
-    "AdmissionController", "AdmissionFull", "CoexecEngine",
-    "CoexecutorRuntime", "DynamicScheduler", "EnergyReport",
+    "AdmissionController", "AdmissionFull", "ArgRole", "ArgSpec",
+    "CoexecEngine", "CoexecKernel", "CoexecutorRuntime",
+    "DataPlaneCounters", "DynamicScheduler", "EnergyReport",
     "EwmaThroughput", "HGuidedScheduler", "IRREGULAR", "JaxUnit",
     "LaunchHandle", "LaunchSimResult", "LaunchSpec", "LaunchStats",
     "LaunchWaitTimeout", "MemoryCosts", "MemoryModel", "MultiSimResult",
-    "PAPER_POWER", "Package", "PowerModel", "REGULAR", "Range", "SPECS",
-    "SPEED_HINT_POLICIES", "Scheduler", "SimResult", "SimUnit", "SpeedBoard",
-    "StaticScheduler", "TPU_MEMORY_COSTS", "TPU_POWER",
-    "WorkStealingScheduler", "Workload", "counits_from_devices", "edp_ratio",
-    "energy_report", "geomean", "jain_index", "make_scheduler",
-    "paper_workload", "simulate", "simulate_multi", "solo_run",
-    "static_bounds", "validate_cover",
+    "OutputSpec", "PAPER_POWER", "Package", "PowerModel", "REGULAR",
+    "Range", "SPECS", "SPEED_HINT_POLICIES", "Scheduler", "SimResult",
+    "SimUnit", "SpeedBoard", "StaticScheduler", "TPU_MEMORY_COSTS",
+    "TPU_POWER", "WorkStealingScheduler", "Workload", "as_coexec_kernel",
+    "counits_from_devices", "edp_ratio", "energy_report", "geomean",
+    "jain_index", "make_plane", "make_scheduler", "paper_workload",
+    "simulate", "simulate_multi", "solo_run", "static_bounds",
+    "validate_cover",
 ]

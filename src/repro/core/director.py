@@ -9,11 +9,13 @@ launch queue); the Director survives as the thin blocking wrapper that
 mirrors the paper's Fig. 2a vocabulary: configure the units, run the
 Commander protocol over one index space, merge the results.
 
-The memory-model semantics are unchanged:
-* USM     — units write their slices directly into one shared host output
-            array (the logically-unified allocation).
-* BUFFERS — each package's output chunk is a separate buffer merged into
-            the host container (explicit copy, same destination here).
+The memory-model semantics are real (see :mod:`repro.core.dataplane`):
+* USM     — units compute on zero-copy views of the shared inputs and
+            write their slices directly into one shared host output
+            array (the logically-unified allocation; no staging copies).
+* BUFFERS — each package's inputs are staged with ``device_put`` and its
+            output chunk copied back through a separate buffer before the
+            merge into the host container (explicit, counted copies).
 """
 from __future__ import annotations
 
@@ -38,7 +40,10 @@ class Director:
 
     def __init__(self, units: Sequence[JaxUnit], *,
                  memory: MemoryModel = MemoryModel.USM):
-        self.engine = CoexecEngine(units, memory=memory)
+        from repro.api.spec import CoexecSpec, MemorySpec
+
+        self.engine = CoexecEngine(
+            units, spec=CoexecSpec(memory=MemorySpec(model=memory.value)))
 
     @property
     def units(self) -> list[JaxUnit]:
@@ -57,8 +62,10 @@ class Director:
                *, adaptive: bool = True) -> list[Package]:
         """Blocking co-execution of `kernel` over the whole index space.
 
-        kernel(offset_scalar, *chunks) -> chunk_out ; chunks are the package
-        slices of `inputs` (padded to the unit's size bucket).
+        kernel(offset_scalar, *chunks) -> chunk_out ; the chunks are
+        staged from `inputs` by the engine's data plane per the configured
+        memory model (and per the kernel's declared argument semantics
+        when it is a :class:`~repro.core.dataplane.CoexecKernel`).
         """
         self.engine.start()
         handle = self.engine.submit(scheduler, kernel, inputs, out,

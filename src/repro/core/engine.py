@@ -23,7 +23,11 @@ launch. This module provides that engine for the Coexecutor Runtime:
   other's state;
 * a persistent :class:`~.profiler.SpeedBoard` — throughput measured on
   earlier launches seeds the adaptive (HGuided) speed refinement of later
-  ones, which a per-launch thread pool could never do.
+  ones, which a per-launch thread pool could never do;
+* a per-memory-model data plane (:mod:`~repro.core.dataplane`) between
+  the workers and the units: the spec's ``MemorySpec`` selects zero-copy
+  unified-shared-memory movement or per-package staged buffers, with
+  copy/dispatch counters surfaced in each launch's :class:`LaunchStats`.
 
 Lifecycle::
 
@@ -52,6 +56,8 @@ import numpy as np
 
 from .admission import (AdmissionConfig, AdmissionController, AdmissionFull,
                         coerce_admission)
+from .dataplane import (CoexecKernel, DataPlaneCounters, as_coexec_kernel,
+                        make_plane)
 from .memory import MemoryModel
 from .package import Package, Range, validate_cover
 from .profiler import SpeedBoard
@@ -85,12 +91,21 @@ class LaunchStats:
     packages only, never from cumulative unit counters). For a launch that
     was served through a fused batch, ``packages`` holds one synthesized
     package covering the launch's whole index space, timed by the shared
-    dispatch that computed it.
+    dispatch that computed it (and ``data`` is the member's even integer
+    share of the batch's counters, so summing member stats recovers the
+    batch's real copy/dispatch totals).
+
+    ``data`` carries the launch's data-plane accounting — dispatches and
+    explicit H2D/D2H staging copies/bytes — so the USM-vs-BUFFERS
+    distinction of the configured :class:`~.memory.MemoryModel` is
+    observable per launch (USM performs zero staging copies).
     """
 
     total_s: float
     packages: list[Package]
     unit_busy_s: dict[str, float]
+    data: DataPlaneCounters = dataclasses.field(
+        default_factory=DataPlaneCounters)
 
     @property
     def num_packages(self) -> int:
@@ -185,7 +200,7 @@ class _Launch:
     __slots__ = ("id", "scheduler", "kernel", "inputs", "out", "adaptive",
                  "handle", "outstanding", "done_pkgs", "failed", "finalized",
                  "t_submit", "tenant", "weight", "fuse_key", "slots",
-                 "members", "wfq_cost_scale")
+                 "members", "wfq_cost_scale", "plan")
 
     def __init__(self, launch_id: int, scheduler: Scheduler, kernel: Callable,
                  inputs: Sequence[np.ndarray], out: np.ndarray,
@@ -208,6 +223,7 @@ class _Launch:
         self.slots = 1
         self.members: Optional[list["_Launch"]] = None   # fused batches only
         self.wfq_cost_scale = 1      # work-items each package unit is worth
+        self.plan = None             # LaunchPlan, set by the engine
 
 
 class CoexecEngine:
@@ -283,6 +299,9 @@ class CoexecEngine:
             if max_inflight is not None:
                 cfg = dataclasses.replace(
                     cfg, max_inflight=int(max_inflight))
+        # the data plane implementing self.memory: USM = zero-copy shared
+        # views + in-place collection, BUFFERS = per-package staging copies
+        self.plane = make_plane(self.memory)
         self.admission = AdmissionController(
             len(self.units), cfg,
             fuse_materialize=self._materialize_fused,
@@ -376,8 +395,13 @@ class CoexecEngine:
 
         Args:
             scheduler: fresh one-shot load balancer for this launch.
-            kernel: package kernel ``fn(offset, *chunks) -> chunk_out``.
-            inputs: full host input arrays (sliced per package).
+            kernel: a typed :class:`~.dataplane.CoexecKernel`, or a legacy
+                positional closure ``fn(offset, *chunks) -> chunk_out``
+                (treated as all-``SPLIT`` axis-0 arguments).
+            inputs: full host input arrays (moved per the kernel's
+                declared per-argument semantics and the engine's memory
+                model; a typed kernel's trailing ``BROADCAST`` defaults
+                may be omitted).
             out: preallocated output container the results land in.
             adaptive: refresh HGuided speeds from the engine's SpeedBoard.
             tenant: fairness flow this launch belongs to; defaults to a
@@ -390,11 +414,14 @@ class CoexecEngine:
             The launch's :class:`LaunchHandle`.
 
         Raises:
-            ValueError: mismatched unit count, reused scheduler, or
-                non-positive weight.
+            ValueError: mismatched unit count, reused scheduler,
+                non-positive weight, or inputs that do not satisfy the
+                kernel's declared argument semantics.
             RuntimeError: engine not started, or shut down.
             AdmissionFull: at capacity and ``block=False``.
         """
+        kernel = as_coexec_kernel(kernel, len(inputs))
+        plan = self.plane.plan(kernel, inputs, out, scheduler.total)
         if scheduler.num_units != len(self.units):
             raise ValueError(
                 f"scheduler built for {scheduler.num_units} units, engine "
@@ -424,6 +451,7 @@ class CoexecEngine:
                     raise RuntimeError("engine is shut down")
             launch = _Launch(next(self._ids), scheduler, kernel, inputs, out,
                              adaptive)
+            launch.plan = plan
             if tenant is not None:
                 launch.tenant = str(tenant)
             launch.weight = float(weight)
@@ -440,9 +468,13 @@ class CoexecEngine:
         Eligible launches are small (≤ ``fuse_threshold`` items) with every
         input and the output indexed by the full index space on axis 0 —
         the shape contract that makes member stacking a pure reshape.
+        Typed kernels with broadcast args, halos or non-zero split axes
+        are ineligible (their operands do not stack along the member axis).
         """
         cfg = self.admission.config
         if not cfg.fuse:
+            return None
+        if isinstance(kernel, CoexecKernel) and not kernel.all_split:
             return None
         total = scheduler.total
         if total > cfg.fuse_threshold:
@@ -497,6 +529,9 @@ class CoexecEngine:
         fused = _Launch(next(self._ids), sched,
                         self._fused_kernel(first.kernel), inputs, out,
                         adaptive=False)
+        fused.plan = self.plane.plan(
+            as_coexec_kernel(fused.kernel, len(inputs)), inputs, out,
+            sched.total)
         fused.tenant = f"fused-{fused.id}"
         fused.weight = sum(m.weight for m in members)
         fused.members = list(members)
@@ -542,7 +577,8 @@ class CoexecEngine:
         launch.handle.stats = LaunchStats(
             total_s=time.perf_counter() - launch.t_submit,
             packages=list(launch.done_pkgs),
-            unit_busy_s=busy)
+            unit_busy_s=busy,
+            data=launch.plan.counters.snapshot())
         launch.handle._future.set_result(launch.out)
 
     def _demux_fused_locked(self, fused: _Launch) -> None:
@@ -554,6 +590,9 @@ class CoexecEngine:
         """
         now = time.perf_counter()
         pkgs = sorted(fused.done_pkgs, key=lambda p: p.offset)
+        # the batch's data-plane accounting, attributed in even integer
+        # shares so per-member stats still *sum* to the real copy counts
+        data_shares = fused.plan.counters.snapshot().split(len(fused.members))
         for i, m in enumerate(fused.members):
             cover = next(p for p in pkgs
                          if p.offset <= i < p.offset + p.size)
@@ -566,7 +605,8 @@ class CoexecEngine:
                 cover.t_complete - cover.t_issue, 0.0) / cover.size
             np.copyto(m.out, fused.out[i])
             m.handle.stats = LaunchStats(total_s=now - m.t_submit,
-                                         packages=[mp], unit_busy_s=busy)
+                                         packages=[mp], unit_busy_s=busy,
+                                         data=data_shares[i])
             m.handle._future.set_result(m.out)
 
     def _handles_of(self, launch: _Launch) -> list[LaunchHandle]:
@@ -605,14 +645,11 @@ class CoexecEngine:
             launch, pkg = work
             pkg.t_issue = time.perf_counter()
             try:
-                chunk = unit.run_package(launch.kernel, pkg.offset, pkg.size,
-                                         launch.inputs)
-                pkg.t_complete = time.perf_counter()
-                # collection: USM writes in place into the launch's shared
-                # container; BUFFERS is the same destination on this
-                # substrate but modeled as an explicit merge copy.
-                launch.out[pkg.offset:pkg.offset + pkg.size] = chunk
-                pkg.t_collected = time.perf_counter()
+                # the engine's data plane stages inputs per the memory
+                # model (USM: zero-copy shared views; BUFFERS: per-package
+                # device_put + copy-back), dispatches on the unit, and
+                # lands the chunk in the launch's output container.
+                self.plane.execute(unit, launch.plan, pkg)
             except BaseException as e:
                 with self._cv:
                     launch.outstanding -= 1

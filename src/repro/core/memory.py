@@ -12,10 +12,17 @@ governed by its own model, as in the paper):
                 the host container. Costs one H2D + one D2H proportional to
                 the package bytes, plus a fixed submission overhead.
 
-The cost model below drives both the discrete-event simulator (paper
-reproduction) and the accounting layer of the real runtime. Bandwidths are
-calibrated to the paper's platform (Kaby Lake iGPU sharing LLC/DRAM with the
-CPU) and overridable for TPU-class parts.
+Two layers consume the model selection:
+
+* the **cost model** below drives the discrete-event simulator (paper
+  reproduction) — bandwidths calibrated to the paper's platform (Kaby
+  Lake iGPU sharing LLC/DRAM with the CPU), overridable for TPU-class
+  parts;
+* the **real data plane** (:mod:`repro.core.dataplane`) implements the
+  semantics on the live engine: ``MemoryModel.USM`` selects zero-copy
+  shared-array movement with in-place collection, ``MemoryModel.BUFFERS``
+  per-package ``device_put`` staging and copy-back, both instrumented
+  with copy/dispatch counters surfaced in launch stats.
 """
 from __future__ import annotations
 
@@ -24,6 +31,13 @@ import enum
 
 
 class MemoryModel(enum.Enum):
+    """Package data-movement strategy (paper §3.1): USM or Buffers.
+
+    The enum selects both the DES cost model (:class:`MemoryCosts`) and
+    the real engine's data plane
+    (:func:`repro.core.dataplane.make_plane`).
+    """
+
     USM = "usm"
     BUFFERS = "buffers"
 

@@ -43,6 +43,7 @@ import numpy as np
 import jax
 
 from .admission import AdmissionConfig
+from .dataplane import CoexecKernel
 from .engine import CoexecEngine, LaunchHandle, LaunchStats
 from .memory import MemoryModel
 from .units import JaxUnit
@@ -258,9 +259,14 @@ class CoexecutorRuntime:
 
         Args:
             total: size of the 1-D index space to co-execute.
-            kernel: package kernel ``fn(offset, *chunks) -> chunk_out``.
-            inputs: full host input arrays (sliced per package).
-            out: output container; allocated when ``None``.
+            kernel: a registered/typed
+                :class:`~repro.core.dataplane.CoexecKernel`, or a legacy
+                package closure ``fn(offset, *chunks) -> chunk_out``.
+            inputs: full host input arrays (moved per the kernel's
+                declared per-argument semantics).
+            out: output container; allocated when ``None`` (a typed
+                kernel's declared output slot wins over ``out_dtype`` /
+                ``out_trailing_shape``).
             out_dtype: dtype of the allocated output.
             out_trailing_shape: trailing dims of the allocated output.
             granularity: package alignment; overrides the spec's
@@ -285,7 +291,10 @@ class CoexecutorRuntime:
             sched_spec = sched_spec.replace(granularity=granularity)
         sched = sched_spec.build(total, n, speeds=self._spec.speeds_for(n))
         if out is None:
-            out = np.zeros((total, *out_trailing_shape), dtype=out_dtype)
+            if isinstance(kernel, CoexecKernel):
+                out = kernel.alloc_out(total, inputs)
+            else:
+                out = np.zeros((total, *out_trailing_shape), dtype=out_dtype)
         return engine.submit(sched, kernel, inputs, out,
                              tenant=tenant, weight=weight, block=block)
 

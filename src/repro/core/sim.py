@@ -34,6 +34,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .admission import AdmissionController, coerce_admission
+from .dataplane import DataPlaneCounters
 from .energy import EnergyReport, PowerModel, energy_report
 from .memory import MemoryCosts, MemoryModel
 from .package import Package, validate_cover
@@ -72,7 +73,14 @@ class Workload:
 
 @dataclasses.dataclass
 class SimResult:
-    """Timeline + metrics of one simulated co-execution."""
+    """Timeline + metrics of one simulated co-execution.
+
+    ``data`` mirrors the real engine's per-launch
+    :class:`~.dataplane.DataPlaneCounters`: the modeled dispatch count
+    and the staging copies the memory model implies (one H2D and one D2H
+    per package under BUFFERS, none under USM), so spec-driven
+    real-vs-sim comparisons read the same counter surface.
+    """
 
     workload: str
     policy: str
@@ -83,6 +91,8 @@ class SimResult:
     host_busy_s: float                   # serialized launch+collect seconds
     packages: list[Package]
     num_packages: int
+    data: DataPlaneCounters = dataclasses.field(
+        default_factory=DataPlaneCounters)
 
     def balance(self, fast: str = "gpu", slow: str = "cpu") -> float:
         """Paper's balancing efficiency T_fast/T_slow (1.0 = perfect)."""
@@ -100,6 +110,17 @@ class SimResult:
         # host management burns CPU-core time on top of CPU compute
         busy["cpu"] = busy.get("cpu", 0.0) + self.host_busy_s
         return energy_report(power, busy, self.total_s)
+
+
+def _count_package(counters: DataPlaneCounters, memory: MemoryModel,
+                   in_bytes: float, out_bytes: float) -> None:
+    """Model one package's data-plane accounting (mirrors the real planes)."""
+    counters.dispatches += 1
+    if memory is MemoryModel.BUFFERS:
+        counters.h2d_copies += 1
+        counters.h2d_bytes += int(in_bytes)
+        counters.d2h_copies += 1
+        counters.d2h_bytes += int(out_bytes)
 
 
 def _item_costs(workload: Workload, unit: SimUnit) -> np.ndarray:
@@ -171,6 +192,7 @@ def simulate(scheduler: Optional[Scheduler], units: Sequence[SimUnit],
         tie += 1
 
     host_busy = 0.0
+    counters = DataPlaneCounters()
     busy_until = [0.0] * n            # compute-busy horizon per unit
     collector_free = [0.0] * n        # per-unit collection thread horizon
     unit_finish = {u.name: 0.0 for u in units}
@@ -187,6 +209,7 @@ def simulate(scheduler: Optional[Scheduler], units: Sequence[SimUnit],
         pkg.t_issue = t
         in_bytes = pkg.size * workload.bytes_in_per_item
         out_bytes = pkg.size * workload.bytes_out_per_item
+        _count_package(counters, memory, in_bytes, out_bytes)
 
         # package emission on this unit's manager thread
         launch_cost = costs.launch_cost(memory, int(in_bytes))
@@ -239,6 +262,7 @@ def simulate(scheduler: Optional[Scheduler], units: Sequence[SimUnit],
         host_busy_s=host_busy,
         packages=packages,
         num_packages=len(packages),
+        data=counters,
     )
 
 
@@ -295,7 +319,13 @@ class LaunchSimResult:
 
 @dataclasses.dataclass
 class MultiSimResult:
-    """Timeline + per-launch metrics of one multi-tenant simulation."""
+    """Timeline + per-launch metrics of one multi-tenant simulation.
+
+    ``data`` aggregates the modeled data-plane accounting across every
+    dispatched package (same surface as the real engine's per-launch
+    counters: staging copies are zero under USM, one H2D + one D2H per
+    package under BUFFERS).
+    """
 
     total_s: float
     launches: list[LaunchSimResult]
@@ -305,6 +335,8 @@ class MultiSimResult:
     host_busy_s: float
     # (t_complete, tenant, items) per dispatched package — service curve
     service: list[tuple[float, str, int]]
+    data: DataPlaneCounters = dataclasses.field(
+        default_factory=DataPlaneCounters)
 
     def latencies(self) -> list[float]:
         """Per-launch latencies in completion order."""
@@ -454,6 +486,7 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
         tie += 1
 
     host_busy = 0.0
+    counters = DataPlaneCounters()
     busy_until = [0.0] * n
     collector_free = [0.0] * n
     service: list[tuple[float, str, int]] = []
@@ -508,6 +541,7 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
         pkg.t_issue = t
         in_bytes = pkg.size * wl.bytes_in_per_item
         out_bytes = pkg.size * wl.bytes_out_per_item
+        _count_package(counters, memory, in_bytes, out_bytes)
 
         launch_cost = costs.launch_cost(memory, int(in_bytes))
         host_busy += launch_cost
@@ -573,4 +607,5 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
         fused_members=controller.fused_members,
         host_busy_s=host_busy,
         service=service,
+        data=counters,
     )

@@ -11,17 +11,17 @@ talks to the Commander loop. Two substrates implement the same interface:
   ``jax.Device`` asynchronously (JAX's async dispatch stream plays the role
   of the oneAPI DAG) and reports completion when the output buffer is ready.
 
-Package kernels have the signature ``fn(offset, chunk_inputs...) -> chunk_out``
-and are compiled per package-size bucket (dynamic package sizes would
-otherwise trigger unbounded recompilation — sizes are padded up to the
-bucket, then sliced).
+Package kernels keep the signature ``fn(offset, chunk_inputs...) ->
+chunk_out``; *how* the chunks reach the unit (zero-copy USM views vs
+staged per-package buffers, padding to size buckets) is decided by the
+data plane (:mod:`repro.core.dataplane`), which drives :meth:`JaxUnit.
+dispatch`. The unit itself only owns the device, the per-kernel jit
+cache, and its busy-time accounting.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import threading
-import time
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
@@ -65,41 +65,34 @@ class SimUnit:
 class JaxUnit:
     """A real Coexecution Unit backed by a jax.Device.
 
-    The management thread (owned by the Director) calls :meth:`run_package`;
-    dispatch is asynchronous and completion is detected by blocking on the
-    output buffer, mirroring the event-driven collection of the paper.
+    The engine's management thread drives the unit through the launch's
+    data plane (:meth:`~repro.core.dataplane.DataPlane.execute`), which
+    stages inputs per the configured memory model and calls
+    :meth:`dispatch`; dispatch is asynchronous and completion is detected
+    by blocking on the output buffer, mirroring the event-driven
+    collection of the paper.
     """
 
     def __init__(self, name: str, device: "jax.Device", *, kind: str = "cpu",
-                 speed_hint: float = 1.0,
-                 size_buckets: Sequence[int] = ()):
+                 speed_hint: float = 1.0):
         self.name = name
         self.kind = kind
         self.device = device
         self.speed_hint = float(speed_hint)
-        self._compiled: dict[tuple[Any, int], Any] = {}
-        self._size_buckets = sorted(size_buckets)
+        self._compiled: dict[Any, Any] = {}
         self.busy_s = 0.0
         self._lock = threading.Lock()
 
-    # -- size bucketing ----------------------------------------------------
-    def bucket(self, size: int) -> int:
-        if self._size_buckets:
-            i = bisect.bisect_left(self._size_buckets, size)
-            if i < len(self._size_buckets):
-                return self._size_buckets[i]
-        # default: next power of two — bounds compilations to O(log total)
-        b = 1
-        while b < size:
-            b <<= 1
-        return b
+    def compiled(self, fn: Callable) -> Any:
+        """The unit's cached ``jax.jit`` entry for one kernel body.
 
-    def _get_compiled(self, fn: Callable) -> Any:
-        # One jit per kernel; the package-size *bucket* is implicit in the
-        # padded chunk shape, so XLA caches one executable per bucket.
-        # Computation placement follows the committed (device_put) inputs.
-        # Locked: one unit may be shared by several engines/directors, whose
-        # worker threads race on first-compile of the same kernel.
+        One jit per kernel; distinct chunk shapes cache one executable
+        each inside it (the data plane pads packages to power-of-two
+        size buckets, bounding compilations to O(log total)).
+        Computation placement follows the committed inputs. Locked: one
+        unit may be shared by several engines, whose worker threads race
+        on first-compile of the same kernel.
+        """
         with self._lock:
             got = self._compiled.get(fn)
             if got is None:
@@ -108,27 +101,24 @@ class JaxUnit:
         return got
 
     # -- execution ---------------------------------------------------------
-    def run_package(self, fn: Callable, offset: int, size: int,
-                    inputs: Sequence[np.ndarray]) -> np.ndarray:
-        """Execute ``fn(offset_scalar, *padded_chunks) -> chunk_out``.
+    def dispatch(self, fn: Callable, offset: int,
+                 args: Sequence[Any]) -> Any:
+        """Asynchronously launch ``fn(offset, *args)`` on this unit.
 
-        Inputs are the *full* host arrays; this unit slices its package range,
-        pads to the bucket size, dispatches, and returns the unpadded result.
-        The kernel sees the real offset (for index-dependent work such as
-        Mandelbrot pixel coordinates) and a fixed-bucket chunk.
+        The args are whatever the launch's data plane staged (host views
+        under USM, device-put buffers under BUFFERS). Dispatch runs
+        under ``jax.default_device(self.device)`` so *uncommitted* host
+        arrays (the USM plane's zero-copy views) still execute on this
+        unit's device — committed BUFFERS operands already carry their
+        placement. The kernel sees the real offset for index-dependent
+        work such as Mandelbrot pixel coordinates. Returns the (not yet
+        materialized) output array; the caller blocks on it to observe
+        completion.
         """
-        bucket = self.bucket(size)
-        chunks = []
-        for arr in inputs:
-            chunk = np.asarray(arr[offset:offset + size])
-            if bucket != size:
-                pad = [(0, bucket - size)] + [(0, 0)] * (chunk.ndim - 1)
-                chunk = np.pad(chunk, pad)
-            chunks.append(jax.device_put(chunk, self.device))
-        compiled = self._get_compiled(fn)
-        t0 = time.perf_counter()
-        out = compiled(jnp.int32(offset), *chunks)
-        out = np.asarray(out)  # blocks until ready (completion event)
+        with jax.default_device(self.device):
+            return self.compiled(fn)(jnp.int32(offset), *args)
+
+    def add_busy(self, seconds: float) -> None:
+        """Account dispatch-to-completion time against this unit."""
         with self._lock:
-            self.busy_s += time.perf_counter() - t0
-        return out[:size]
+            self.busy_s += seconds

@@ -2,7 +2,11 @@
 
 Layout per kernel: `<name>.py` holds the `pl.pallas_call` + BlockSpec
 implementation, `ref.py` the pure-jnp oracle, `ops.py` the jit'd wrapper
-with impl dispatch and the Coexecutor package adapters.
+with impl dispatch plus the typed co-executable kernels
+(:class:`~repro.core.dataplane.CoexecKernel`) registered in the
+:mod:`repro.api.registry` kernel registry. Resolve them with
+``repro.api.build_kernel(name)``; ``package_kernel`` is a deprecation
+shim over the same registry.
 """
 from . import ref
 from .flash_attention import flash_attention

@@ -1,10 +1,26 @@
-"""Jit'd public wrappers + implementation dispatch for all kernels.
+"""Jit'd public wrappers + the typed co-executable kernels.
 
-``impl="pallas"`` runs the Pallas kernel (interpret mode off-TPU),
-``impl="ref"`` the pure-jnp oracle. ``package_kernel(name)`` adapts a
-benchmark to the Coexecutor Runtime's package signature
-``fn(offset, *chunks) -> chunk_out`` so the paper's six benchmarks can be
-co-executed exactly like Listing 1.
+Two surfaces live here:
+
+* ``<name>_op(...)`` — jit-friendly wrappers with implementation dispatch:
+  ``impl="pallas"`` runs the Pallas kernel (interpret mode off-TPU),
+  ``impl="ref"`` the pure-jnp oracle.
+* the paper's six benchmarks as **typed co-executable kernels**
+  (:class:`~repro.core.dataplane.CoexecKernel`): each declares its
+  per-argument partition semantics — SPLIT along an axis (with a halo for
+  the Gaussian stencil), BROADCAST for whole-array operands (MatMul's
+  ``B``, Ray's sphere scene) — and an output slot, and registers in the
+  :mod:`repro.api.registry` kernel registry next to the schedulers and
+  workloads. Third-party kernels register the same way, without editing
+  core; resolve any of them with ``repro.api.build_kernel(name)`` and
+  hand the result straight to ``CoexecutorRuntime.launch`` /
+  ``CoexecEngine.submit``.
+
+Each registration also carries a demo-input generator
+(``repro.api.kernel_demo_inputs``) so the serving benchmarks and the
+USM-vs-BUFFERS parity tests can drive every registered kernel without
+per-kernel glue. The pre-registry ``package_kernel(name)`` if-chain is
+gone; the name survives only as a deprecation shim over the registry.
 """
 from __future__ import annotations
 
@@ -13,6 +29,10 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataplane import (ArgRole, ArgSpec, CoexecKernel,
+                                  OutputSpec)
 
 from . import ref
 from .flash_attention import flash_attention
@@ -71,45 +91,185 @@ def linear_attention_op(q, k, v, log_decay, *, impl: str = "pallas", **kw):
 
 
 # ---------------------------------------------------------------------------
-# Coexecutor package adapters (the paper's Listing-1 shape)
+# Typed co-executable kernels (registered; paper Listing-1 benchmarks)
 # ---------------------------------------------------------------------------
+# Factories are memoized so repeated build_kernel() calls return the same
+# CoexecKernel object — the engines' jit caches and fusion keys hash on it.
 
-def package_kernel(name: str) -> Callable:
-    """Package-form kernel ``fn(offset, *chunks) -> chunk`` for `name`.
+_GAUSS_DEMO_W = 96        # demo image width (rows are the index space)
+_MATMUL_DEMO_K = 32       # demo inner dim; B is (K, N2)
+_MATMUL_DEMO_N2 = 24
+_RAP_DEMO_L = 48          # demo candidate-resource count per row
 
-    Index spaces match the DES workload profiles: rows for gaussian/matmul/
-    rap, flat elements (row-blocks of 128 lanes) for taylor/mandelbrot/ray.
+
+@functools.lru_cache(maxsize=None)
+def _taylor_kernel(terms: int = 12) -> CoexecKernel:
+    """Taylor-series sin over a split 1-D array (regular, compute-bound)."""
+    def fn(offset, x, _terms=int(terms)):
+        return ref.taylor_sin(x, terms=_terms)
+
+    return CoexecKernel("taylor", fn, (ArgSpec("x"),), OutputSpec())
+
+
+def _taylor_inputs(n: int, rng) -> list:
+    return [rng.uniform(-2, 2, n).astype(np.float32)]
+
+
+@functools.lru_cache(maxsize=None)
+def _gaussian_kernel() -> CoexecKernel:
+    """Separable 5x5 blur; rows split with a 2-row zero-filled halo.
+
+    The halo is what the pre-protocol closure faked with five pre-shifted
+    input copies: the data plane now hands each package its row range
+    plus two rows of context on either side (zeros beyond the image, as
+    in the reference's zero padding), so co-executed output matches
+    :func:`repro.kernels.ref.gaussian_blur` on the full image exactly.
     """
-    if name == "taylor":
-        def fn(offset, chunk):
-            return ref.taylor_sin(chunk)
-        return fn
-    if name == "gaussian":
-        def fn(offset, s0, s1, s2, s3, s4):
-            t = [float(x) for x in ref.GAUSS_TAPS]
-            vert = (t[0] * s0 + t[1] * s1 + t[2] * s2 + t[3] * s3 +
-                    t[4] * s4)
-            xp = jnp.pad(vert, ((0, 0), (2, 2)))
-            W = vert.shape[1]
-            return (t[0] * xp[:, 0:W] + t[1] * xp[:, 1:W + 1] +
-                    t[2] * xp[:, 2:W + 2] + t[3] * xp[:, 3:W + 3] +
-                    t[4] * xp[:, 4:W + 4])
-        return fn
-    if name == "matmul":
-        def fn(offset, a_rows, b):
-            return ref.matmul(a_rows, b)
-        return fn
-    if name == "mandelbrot":
-        def fn(offset, cre, cim):
-            return ref.mandelbrot(cre, cim)
-        return fn
-    if name == "ray":
-        spheres = demo_spheres()
-        def fn(offset, dx, dy, dz):
-            return ref.raytrace(dx, dy, dz, spheres)
-        return fn
-    if name == "rap":
-        def fn(offset, values, lengths):
-            return ref.rap(values, lengths)
-        return fn
-    raise KeyError(name)
+    def fn(offset, img):
+        taps = jnp.asarray(ref.GAUSS_TAPS, dtype=img.dtype)
+        rows = img.shape[0] - 4                    # drop the 2+2 halo
+        vert = sum(taps[d] * img[d:d + rows, :] for d in range(5))
+        padded = jnp.pad(vert, ((0, 0), (2, 2)))
+        W = vert.shape[1]
+        return sum(taps[d] * padded[:, d:d + W] for d in range(5))
+
+    return CoexecKernel("gaussian", fn, (ArgSpec("img", halo=2),),
+                        OutputSpec(trailing=lambda ins: (ins[0].shape[1],)))
+
+
+def _gaussian_inputs(n: int, rng) -> list:
+    return [rng.normal(size=(n, _GAUSS_DEMO_W)).astype(np.float32)]
+
+
+@functools.lru_cache(maxsize=None)
+def _matmul_kernel() -> CoexecKernel:
+    """Row-split MatMul: A splits by rows, B broadcasts whole.
+
+    The broadcast declaration is the protocol's point: the runtime knows
+    ``B`` is not indexed by the launch's index space, so the USM plane
+    shares it and the BUFFERS plane stages it per package (the paper's
+    accessor-per-command-group cost), instead of the old contract that
+    silently sliced every input by rows.
+    """
+    def fn(offset, a_rows, b):
+        return ref.matmul(a_rows, b)
+
+    return CoexecKernel(
+        "matmul", fn,
+        (ArgSpec("a"), ArgSpec("b", role=ArgRole.BROADCAST)),
+        OutputSpec(trailing=lambda ins: (ins[1].shape[1],)))
+
+
+def _matmul_inputs(n: int, rng) -> list:
+    return [rng.normal(size=(n, _MATMUL_DEMO_K)).astype(np.float32),
+            rng.normal(size=(_MATMUL_DEMO_K,
+                             _MATMUL_DEMO_N2)).astype(np.float32)]
+
+
+@functools.lru_cache(maxsize=None)
+def _mandelbrot_kernel(max_iter: int = 64) -> CoexecKernel:
+    """Escape iterations over split coordinate arrays (irregular)."""
+    def fn(offset, cre, cim, _it=int(max_iter)):
+        return ref.mandelbrot(cre, cim, max_iter=_it)
+
+    return CoexecKernel("mandelbrot", fn,
+                        (ArgSpec("cre"), ArgSpec("cim")), OutputSpec())
+
+
+def _mandelbrot_inputs(n: int, rng) -> list:
+    return [rng.uniform(-2.2, 0.8, n).astype(np.float32),
+            rng.uniform(-1.4, 1.4, n).astype(np.float32)]
+
+
+@functools.lru_cache(maxsize=None)
+def _ray_kernel() -> CoexecKernel:
+    """Ray tracing: split ray directions, broadcast sphere scene.
+
+    The scene is a trailing BROADCAST argument with a default (the demo
+    scene), so both ``launch(n, kernel, [dx, dy, dz])`` and an explicit
+    ``[dx, dy, dz, spheres]`` work.
+    """
+    def fn(offset, dx, dy, dz, spheres):
+        return ref.raytrace(dx, dy, dz, spheres)
+
+    return CoexecKernel(
+        "ray", fn,
+        (ArgSpec("dx"), ArgSpec("dy"), ArgSpec("dz"),
+         ArgSpec("spheres", role=ArgRole.BROADCAST,
+                 default=lambda: np.asarray(demo_spheres()))),
+        OutputSpec())
+
+
+def _ray_inputs(n: int, rng) -> list:
+    dx, dy = rng.uniform(-0.4, 0.4, (2, n)).astype(np.float32)
+    dz = np.sqrt(np.maximum(1 - dx**2 - dy**2, 0.5)).astype(np.float32)
+    return [dx, dy, dz]
+
+
+@functools.lru_cache(maxsize=None)
+def _rap_kernel() -> CoexecKernel:
+    """Resource-allocation rows: values and lengths split together."""
+    def fn(offset, values, lengths):
+        return ref.rap(values, lengths)
+
+    return CoexecKernel("rap", fn,
+                        (ArgSpec("values"), ArgSpec("lengths")),
+                        OutputSpec())
+
+
+def _rap_inputs(n: int, rng) -> list:
+    return [rng.normal(size=(n, _RAP_DEMO_L)).astype(np.float32),
+            rng.integers(0, _RAP_DEMO_L, size=n).astype(np.int32)]
+
+
+def _register_builtin_kernels() -> None:
+    """Idempotently register the paper's six kernels (import side)."""
+    from repro.api.registry import register_kernel
+
+    register_kernel("taylor", _taylor_kernel, fields=("terms",),
+                    demo_inputs=_taylor_inputs, overwrite=True)
+    register_kernel("gaussian", _gaussian_kernel,
+                    demo_inputs=_gaussian_inputs, overwrite=True)
+    register_kernel("matmul", _matmul_kernel,
+                    demo_inputs=_matmul_inputs, overwrite=True)
+    register_kernel("mandelbrot", _mandelbrot_kernel,
+                    fields=("max_iter",),
+                    demo_inputs=_mandelbrot_inputs, overwrite=True)
+    register_kernel("ray", _ray_kernel,
+                    demo_inputs=_ray_inputs, overwrite=True)
+    register_kernel("rap", _rap_kernel,
+                    demo_inputs=_rap_inputs, overwrite=True)
+
+
+_register_builtin_kernels()
+
+
+def package_kernel(name: str) -> CoexecKernel:
+    """Resolve a kernel by name (deprecated legacy entry point).
+
+    Deprecated since the kernel registry: use
+    :func:`repro.api.build_kernel` (same contract, plus option
+    validation). This shim delegates to the registry and emits a
+    :class:`DeprecationWarning`. The returned typed kernel is callable
+    with the old package signature ``fn(offset, *chunks)``, so existing
+    call sites keep working; note the Gaussian kernel now takes the image
+    itself (haloed split) instead of five pre-shifted copies.
+
+    Args:
+        name: registered kernel name.
+
+    Returns:
+        The registered :class:`~repro.core.dataplane.CoexecKernel`.
+
+    Raises:
+        KeyError: unknown kernel name.
+    """
+    import warnings
+
+    from repro.api.registry import build_kernel
+
+    warnings.warn(
+        "package_kernel() is deprecated; resolve kernels through the "
+        "registry (repro.api.build_kernel) instead",
+        DeprecationWarning, stacklevel=2)
+    return build_kernel(name)

@@ -13,15 +13,21 @@ served through `CoexecutorRuntime.launch_async` on a long-lived engine —
 up to --concurrent launches interleave on the same Coexecution Units.
 Every co-execution flag is *derived* from the `repro.api.CoexecSpec`
 fields (see `repro.api.cli`): the parsed flags fold into one spec that
-drives the real engine and the DES identically, and `--spec-json` dumps
-the resolved spec as a reproducible artifact. `--policy all` sweeps every
-registered policy; with `--coexec sim` the same sweep runs on the DES
-instead of real threads; `--admission wfq` / `--fuse` / `--tenants N`
-switch the sim path to the multi-tenant DES sweep with p50/p99 latency
-and Jain fairness per row.
+drives the real engine and the DES identically, `--spec-json` dumps the
+resolved spec as a reproducible artifact, and `--list` prints every
+registered scheduler/workload/kernel with its declared option fields.
+The served kernel is any registered kernel (`--kernel`, defaulting to
+the workload's same-named kernel), and `--memory {usm,buffers}` selects
+the engine's real data plane — rows report its dispatch and
+staging-copy counters. `--policy all` sweeps every registered policy;
+with `--coexec sim` the same sweep runs on the DES instead of real
+threads; `--admission wfq` / `--fuse` / `--tenants N` switch the sim
+path to the multi-tenant DES sweep with p50/p99 latency and Jain
+fairness per row.
 
     PYTHONPATH=src python -m repro.launch.serve --coexec real \
-        --policy all --requests 16 --concurrent 8 --n 65536
+        --policy all --requests 16 --concurrent 8 --n 65536 \
+        --kernel mandelbrot --memory buffers
     PYTHONPATH=src python -m repro.launch.serve --coexec sim \
         --policy all --workload mandelbrot
     PYTHONPATH=src python -m repro.launch.serve --coexec sim \
@@ -74,12 +80,13 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
     the persistent engine (at most ``spec.workload.concurrent`` in
     flight); one measurement dict each. Shared by ``serve --coexec real``
     and ``benchmarks.run coexec``. The spec's admission section selects
-    the engine's cross-launch queueing policy.
+    the engine's cross-launch queueing policy; its workload section picks
+    the served kernel (any registered kernel, via ``--kernel`` or the
+    workload's name) and its memory section the data plane, whose
+    dispatch/copy counters are aggregated into each row.
     """
-    import numpy as np
-
+    from repro.api import kernel_demo_inputs
     from ..core import CoexecutorRuntime
-    from ..kernels import package_kernel
 
     if spec is None:
         spec = default_serve_spec()
@@ -88,27 +95,30 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
     n = spec.workload.items
     requests = spec.workload.requests
     concurrent = spec.workload.concurrent
-    rng = np.random.default_rng(0)
-    datas = [rng.uniform(-2, 2, n).astype(np.float32)
-             for _ in range(requests)]
-    kernel = package_kernel("taylor")
+    kname = spec.workload.resolve_kernel()
+    kernel = spec.workload.build_kernel()
+    datas = [kernel_demo_inputs(kname, n, seed=i) for i in range(requests)]
     rows = []
     for policy in (policies or _sweep_policies(spec)):
         pspec = spec.replace(
             scheduler=spec.scheduler.replace(policy=policy))
         with CoexecutorRuntime.from_spec(pspec, units=units) as rt:
-            rt.launch(n, kernel, [datas[0]])        # warm the jit cache
+            rt.launch(n, kernel, datas[0])          # warm the jit cache
             t0 = time.perf_counter()
             served, pkgs, lats, inflight = 0, 0, [], []
+            h2d, d2h, dispatches = 0, 0, 0
 
             def _reap(h, t_sub):
-                nonlocal served, pkgs
+                nonlocal served, pkgs, h2d, d2h, dispatches
                 h.result()
                 served, pkgs = served + 1, pkgs + h.stats.num_packages
+                h2d += h.stats.data.h2d_copies
+                d2h += h.stats.data.d2h_copies
+                dispatches += h.stats.data.dispatches
                 lats.append(time.perf_counter() - t_sub)
 
             for i, d in enumerate(datas):
-                inflight.append((rt.launch_async(n, kernel, [d],
+                inflight.append((rt.launch_async(n, kernel, d,
                                                  tenant=f"t{i}"),
                                  time.perf_counter()))
                 if len(inflight) >= concurrent:
@@ -117,9 +127,13 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
                 _reap(h, t_sub)
             dt = time.perf_counter() - t0
         lats.sort()
-        rows.append(dict(policy=policy, requests=served, n=n,
+        rows.append(dict(kernel=kname, memory=spec.memory.model,
+                         policy=policy, requests=served, n=n,
                          concurrent=concurrent, seconds=dt, packages=pkgs,
                          req_per_s=served / dt,
+                         items_per_s=served * n / dt,
+                         dispatches=dispatches,
+                         h2d_copies=h2d, d2h_copies=d2h,
                          p50_ms=_percentile_ms(lats, 0.5),
                          p99_ms=_percentile_ms(lats, 0.99)))
     return rows
@@ -146,9 +160,13 @@ def coexec_sim_rows(spec=None, *, policies=None) -> list[dict]:
             wl.total, 2, speeds=[cpu.speed, gpu.speed])
         r = simulate(sched, [cpu, gpu], wl, spec=spec)
         rows.append(dict(workload=workload, policy=policy,
+                         memory=r.memory,
                          seconds=r.total_s, packages=r.num_packages,
                          balance=r.balance(),
-                         steals=getattr(sched, "steals", 0)))
+                         steals=getattr(sched, "steals", 0),
+                         dispatches=r.data.dispatches,
+                         h2d_copies=r.data.h2d_copies,
+                         d2h_copies=r.data.d2h_copies))
     return rows
 
 
@@ -241,14 +259,15 @@ def coexec_multi_rows(spec=None, *, tenants=None, policies=None,
 
 def serve_coexec_real(spec) -> None:
     for row in coexec_real_rows(spec):
-        print(f"[serve/coexec] {row['policy']:13s} "
+        print(f"[serve/coexec] {row['kernel']}/{row['policy']:13s} "
               f"({spec.admission.policy}"
-              f"{'+fuse' if spec.admission.fuse else ''}): "
-              f"{row['requests']} "
+              f"{'+fuse' if spec.admission.fuse else ''}"
+              f"/{row['memory']}): {row['requests']} "
               f"requests ({row['concurrent']} in flight) in "
               f"{row['seconds']:.3f}s = {row['req_per_s']:6.1f} req/s, "
-              f"{row['requests'] * row['n'] / row['seconds'] / 1e6:7.2f} "
+              f"{row['items_per_s'] / 1e6:7.2f} "
               f"Mitems/s, {row['packages']} packages, "
+              f"copies h2d={row['h2d_copies']} d2h={row['d2h_copies']}, "
               f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms")
 
 
@@ -293,15 +312,21 @@ def build_parser() -> argparse.ArgumentParser:
                          "'sim' the discrete-event simulator")
     ap.add_argument("--spec-json", action="store_true",
                     help="print the resolved CoexecSpec as JSON and exit")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered schedulers, workloads and "
+                         "kernels (with their option fields) and exit")
     add_spec_args(ap)
     return ap
 
 
 def main() -> None:
-    from repro.api import spec_from_args
+    from repro.api import registry_listing, spec_from_args
 
     ap = build_parser()
     args = ap.parse_args()
+    if args.list:
+        print(registry_listing())
+        return
     try:
         spec = spec_from_args(args, base=default_serve_spec()).validate()
     except (KeyError, ValueError) as e:

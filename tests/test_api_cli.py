@@ -41,6 +41,7 @@ SERVE_STYLE_ARGV = [
      "--granularity", "64"],
     ["--workload", "mandelbrot", "--size-scale", "0.5",
      "--memory", "buffers"],
+    ["--kernel", "rap", "--memory", "buffers", "--n", "2048"],
     ["--units", "2", "--unit-kinds", "cpu,gpu", "--speed-hints", "0.4,0.6",
      "--dist", "0.35"],
     ["--max-inflight", "8", "--fuse-threshold", "2048", "--fuse-limit",
@@ -118,6 +119,11 @@ def test_bad_flag_values_error_cleanly():
 def test_spec_json_flag_exists():
     ns = serve_parser().parse_args(["--coexec", "sim", "--spec-json"])
     assert ns.spec_json is True
+
+
+def test_list_flag_exists_on_both_clis():
+    assert serve_parser().parse_args(["--list"]).list is True
+    assert bench_parser().parse_args(["--list"]).list is True
 
 
 def test_none_literal_resets_optional_fields_over_base():

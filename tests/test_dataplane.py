@@ -1,0 +1,333 @@
+"""The CoexecKernel protocol + USM/BUFFERS data plane (acceptance tests).
+
+* every registered kernel runs on the real engine under both memory
+  models with **bitwise-identical** results;
+* USM performs **zero** staging copies (the counters prove it) while
+  BUFFERS pays per-package H2D/D2H — strictly more;
+* per-argument semantics do what they declare (broadcast operands are
+  not sliced, halos reproduce the monolithic stencil exactly, outputs
+  allocate from the declared slot);
+* the kernel registry behaves like the scheduler/workload registries:
+  introspection, strict option validation, third-party registration,
+  and a warning shim for the retired ``package_kernel`` if-chain.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (CoexecSpec, build_kernel, kernel_demo_inputs,
+                       kernel_names, kernel_plugin, register_kernel,
+                       registry_listing, temporary_plugins)
+from repro.core import (ArgRole, ArgSpec, CoexecEngine, CoexecKernel,
+                        CoexecutorRuntime, OutputSpec)
+from repro.kernels import ref
+
+PAPER_KERNELS = ("gaussian", "mandelbrot", "matmul", "rap", "ray", "taylor")
+N = 700          # deliberately not a power of two (uneven package sizes)
+
+
+def base_spec(memory: str = "usm", policy: str = "hguided") -> CoexecSpec:
+    return (CoexecSpec.builder()
+            .policy(policy)
+            .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.4, 0.6))
+            .dist(0.4)
+            .memory(memory)
+            .build())
+
+
+@pytest.fixture(scope="module")
+def shared_units():
+    """One unit set for the whole module (warm jit caches across tests)."""
+    return base_spec().build_units()
+
+
+def run_engine(memory, kernel, inputs, units, policy="hguided"):
+    spec = base_spec(memory, policy)
+    with CoexecEngine.from_spec(spec, units=units) as engine:
+        sched = spec.build_scheduler(N, len(units))
+        h = engine.submit(sched, kernel, inputs, kernel.alloc_out(N, inputs))
+        out = h.result(timeout=120)
+    return out.copy(), h.stats
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: bitwise USM-vs-BUFFERS parity + counter assertions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", PAPER_KERNELS)
+def test_usm_buffers_bitwise_parity_every_kernel(name, shared_units):
+    # dyn16's package structure is deterministic and identical across the
+    # two runs, so the same executables see the same values — any output
+    # difference would be the data plane's fault (the thing under test).
+    # (hguided splits are request-order-dependent, and XLA codegen may
+    # contract FMAs differently per chunk shape.)
+    kernel = build_kernel(name)
+    inputs = kernel_demo_inputs(name, N, seed=7)
+    usm_out, usm_stats = run_engine("usm", kernel, inputs, shared_units,
+                                    policy="dyn16")
+    buf_out, buf_stats = run_engine("buffers", kernel, inputs, shared_units,
+                                    policy="dyn16")
+
+    assert np.array_equal(usm_out, buf_out), (
+        f"{name}: USM and BUFFERS results differ")
+    # USM: zero staging copies, by construction
+    assert usm_stats.data.h2d_copies == 0
+    assert usm_stats.data.d2h_copies == 0
+    assert usm_stats.data.h2d_bytes == 0 and usm_stats.data.d2h_bytes == 0
+    # BUFFERS: one D2H per package, one H2D per (package, argument)
+    assert buf_stats.data.d2h_copies == buf_stats.num_packages
+    assert buf_stats.data.h2d_copies == \
+        buf_stats.num_packages * len(kernel.args)
+    # strictly fewer staging copies under USM (the paper's USM advantage)
+    assert usm_stats.data.staging_copies < buf_stats.data.staging_copies
+    # dispatch counts agree with the package log on both planes
+    assert usm_stats.data.dispatches == usm_stats.num_packages
+    assert buf_stats.data.dispatches == buf_stats.num_packages
+
+
+def test_memory_spec_reaches_engine_plane(shared_units):
+    """MemorySpec selects the engine's actual data plane, not a label."""
+    from repro.core.dataplane import BuffersDataPlane, UsmDataPlane
+
+    usm = CoexecEngine.from_spec(base_spec("usm"), units=shared_units)
+    buf = CoexecEngine.from_spec(base_spec("buffers"), units=shared_units)
+    assert isinstance(usm.plane, UsmDataPlane)
+    assert isinstance(buf.plane, BuffersDataPlane)
+
+
+# ---------------------------------------------------------------------------
+# Per-argument semantics
+# ---------------------------------------------------------------------------
+
+def test_broadcast_operand_is_not_sliced(shared_units):
+    """MatMul's B reaches the kernel whole — the declaration at work."""
+    kernel = build_kernel("matmul")
+    a, b = kernel_demo_inputs("matmul", N, seed=3)
+    out, stats = run_engine("usm", kernel, [a, b], shared_units)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-5, atol=1e-5)
+    assert out.shape == (N, b.shape[1])     # trailing from the declaration
+
+
+def test_gaussian_halo_matches_monolithic_reference(shared_units):
+    """Split-with-halo reproduces the whole-image stencil bit for bit
+    (zero fill beyond the image edges, like the reference's padding)."""
+    kernel = build_kernel("gaussian")
+    (img,) = kernel_demo_inputs("gaussian", N, seed=11)
+    out, _ = run_engine("usm", kernel, [img], shared_units, policy="dyn8")
+    want = np.asarray(ref.gaussian_blur(jnp.asarray(img)))
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-7)
+
+
+def test_ray_broadcast_default_fills_missing_scene(shared_units):
+    """Ray's sphere scene is a trailing BROADCAST default: both arities
+    work and agree."""
+    from repro.kernels import demo_spheres
+
+    kernel = build_kernel("ray")
+    dx, dy, dz = kernel_demo_inputs("ray", N, seed=5)
+    out3, _ = run_engine("usm", kernel, [dx, dy, dz], shared_units,
+                         policy="dyn8")
+    out4, _ = run_engine("usm", kernel,
+                         [dx, dy, dz, np.asarray(demo_spheres())],
+                         shared_units, policy="dyn8")
+    np.testing.assert_array_equal(out3, out4)
+
+
+def test_runtime_allocates_output_from_declaration():
+    """launch(out=None) with a typed kernel uses its declared out slot."""
+    kernel = build_kernel("rap")
+    vals, lens = kernel_demo_inputs("rap", 256, seed=1)
+    with CoexecutorRuntime.from_spec(base_spec()) as rt:
+        out = rt.launch(256, kernel, [vals, lens])
+    assert out.shape == (256,) and out.dtype == np.float32
+    want = np.asarray(ref.rap(jnp.asarray(vals), jnp.asarray(lens)))
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+def test_split_extent_mismatch_raises(shared_units):
+    kernel = build_kernel("taylor")
+    spec = base_spec()
+    with CoexecEngine.from_spec(spec, units=shared_units) as engine:
+        with pytest.raises(ValueError, match="index space"):
+            engine.submit(spec.build_scheduler(N, 2), kernel,
+                          [np.zeros(N + 1, np.float32)],
+                          np.zeros(N, np.float32))
+
+
+def test_argspec_validation():
+    with pytest.raises(ValueError, match="halo"):
+        ArgSpec("x", role=ArgRole.BROADCAST, halo=2)
+    with pytest.raises(ValueError, match="BROADCAST"):
+        ArgSpec("x", default=lambda: np.zeros(3))
+    kernel = CoexecKernel("k", lambda off, x: x, (ArgSpec("x"),),
+                          OutputSpec())
+    with pytest.raises(ValueError, match="takes 1 args"):
+        kernel.bind([np.zeros(3), np.zeros(3)])
+
+
+# ---------------------------------------------------------------------------
+# Registry: introspection, validation, plugins, shim
+# ---------------------------------------------------------------------------
+
+def test_builtin_kernels_registered():
+    assert set(kernel_names()) >= set(PAPER_KERNELS)
+
+
+def test_kernel_factories_are_memoized():
+    """Same options ⇒ same object: jit caches and fusion keys stay warm."""
+    assert build_kernel("taylor") is build_kernel("taylor")
+    assert build_kernel("taylor", terms=8) is build_kernel("taylor", terms=8)
+    assert build_kernel("taylor") is not build_kernel("taylor", terms=8)
+
+
+def test_unknown_kernel_and_options_rejected():
+    with pytest.raises(KeyError):
+        build_kernel("nope")
+    with pytest.raises(ValueError, match="trems"):
+        build_kernel("taylor", trems=8)     # misspelled, named in the error
+    with pytest.raises(KeyError):
+        CoexecSpec.builder().workload("taylor", kernel="nope").build()
+
+
+def test_registry_listing_covers_all_three_registries():
+    listing = registry_listing()
+    assert "schedulers:" in listing
+    assert "workloads:" in listing
+    assert "kernels:" in listing
+    assert "img[split+halo2]" in listing            # gaussian's declaration
+    assert "b[broadcast]" in listing                # matmul's declaration
+    assert "spheres[broadcast=default]" in listing  # ray's default scene
+
+
+def test_third_party_kernel_plugin_end_to_end(shared_units):
+    """A kernel registered without core edits runs on the engine."""
+    def factory(scale=2.0):
+        def fn(offset, x, _s=float(scale)):
+            return x * _s
+
+        return CoexecKernel("doubler", fn, (ArgSpec("x"),), OutputSpec())
+
+    with temporary_plugins():
+        register_kernel("doubler", factory, fields=("scale",),
+                        demo_inputs=lambda n, rng:
+                        [rng.normal(size=n).astype(np.float32)])
+        assert "doubler" in kernel_names()
+        kernel = build_kernel("doubler", scale=3.0)
+        (x,) = kernel_demo_inputs("doubler", N, seed=2)
+        out, stats = run_engine("usm", kernel, [x], shared_units)
+        np.testing.assert_allclose(out, x * 3.0)
+        assert stats.data.staging_copies == 0
+        with pytest.raises(ValueError, match="already registered"):
+            register_kernel("doubler", factory)
+    assert "doubler" not in kernel_names()          # scope restored
+
+
+def test_workload_spec_resolves_kernel():
+    assert CoexecSpec().workload.resolve_kernel() == "taylor"
+    wl = CoexecSpec.builder().workload("mandelbrot").build().workload
+    assert wl.resolve_kernel() == "mandelbrot"
+    wl = CoexecSpec.builder().workload("mandelbrot",
+                                       kernel="rap").build().workload
+    assert wl.resolve_kernel() == "rap"
+    assert wl.build_kernel() is build_kernel("rap")
+
+
+def test_package_kernel_shim_warns_and_delegates():
+    from repro.kernels import package_kernel
+
+    with pytest.warns(DeprecationWarning, match="package_kernel"):
+        kernel = package_kernel("taylor")
+    assert kernel is build_kernel("taylor")
+    # still callable with the legacy package signature
+    x = np.linspace(-1, 1, 64, dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(kernel(0, x)), np.sin(x),
+                               rtol=1e-3, atol=1e-4)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(KeyError):
+            package_kernel("nope")
+
+
+def test_registry_listing_survives_option_requiring_factory():
+    """--list must not crash on a factory with a required option."""
+    def needs_options(scale):            # no default: factory() raises
+        return CoexecKernel("scaled", lambda off, x, _s=scale: x * _s,
+                            (ArgSpec("x"),), OutputSpec())
+
+    with temporary_plugins():
+        register_kernel("scaled", needs_options, fields=("scale",))
+        listing = registry_listing()
+    assert "scaled" in listing
+    assert "factory needs options" in listing
+
+
+def test_usm_dispatch_places_on_the_units_device():
+    """Uncommitted USM views still execute on the unit's device (the
+    engine's co-execution claim would silently serialize otherwise)."""
+    import jax
+
+    from repro.core import counits_from_devices
+
+    (unit,) = counits_from_devices(jax.local_devices()[:1])
+    out = unit.dispatch(lambda off, x: x * 2.0, 0,
+                        [np.ones(8, np.float32)])
+    assert list(out.devices()) == [unit.device]
+
+
+def test_fused_member_counters_sum_to_batch_totals():
+    """Summing fused members' stats must not overcount the batch."""
+    from repro.core import CoexecEngine, DataPlaneCounters
+    from repro.api import build_scheduler
+
+    c = DataPlaneCounters(dispatches=2, h2d_copies=7, d2h_copies=2)
+    shares = c.split(3)
+    assert sum(s.dispatches for s in shares) == 2
+    assert sum(s.h2d_copies for s in shares) == 7
+    assert sum(s.d2h_copies for s in shares) == 2
+
+    spec = base_spec("buffers")
+    units = spec.build_units()
+    k = 8
+    data = [np.full(256, i, np.float32) for i in range(k)]
+
+    def kernel(offset, chunk):           # one object: launches can fuse
+        return chunk * 2.0
+
+    with CoexecEngine(units, spec=spec.replace(
+            admission=spec.admission.replace(
+                fuse=True, fuse_threshold=1024,
+                fuse_wait_s=0.5))) as engine:
+        handles = [engine.submit(build_scheduler("dyn4", 256, 2),
+                                 kernel, [data[i]],
+                                 np.zeros(256, np.float32))
+                   for i in range(k)]
+        outs = [h.result(timeout=120) for h in handles]
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(out, data[i] * 2.0)
+    fused = [h for h in handles if h.stats.num_packages == 1]
+    assert len(fused) >= 2                       # fusion actually happened
+    total_dispatch = sum(h.stats.data.dispatches for h in handles)
+    # the batch dispatched at most one package per unit plus any unfused
+    # stragglers — far fewer than k launches' worth; summing member
+    # shares recovers the true total instead of k x batch
+    assert total_dispatch <= 2 * len(units) + (k - len(fused)) * 4
+
+
+# ---------------------------------------------------------------------------
+# DES counter surface matches the real one
+# ---------------------------------------------------------------------------
+
+def test_sim_counters_mirror_memory_model():
+    from repro.core import SimUnit, Workload, simulate
+
+    wl = Workload(name="reg", total=2048, bytes_in_per_item=4.0,
+                  bytes_out_per_item=4.0, working_set_bytes=8.0 * 2048)
+    units = [SimUnit("cpu", "cpu", speed=1e5),
+             SimUnit("gpu", "gpu", speed=2e5)]
+    for mem, copies in (("usm", 0), ("buffers", 1)):
+        spec = CoexecSpec.builder().policy("dyn8").memory(mem).build()
+        r = simulate(None, units, wl, spec=spec)
+        assert r.data.dispatches == r.num_packages
+        assert r.data.h2d_copies == copies * r.num_packages
+        assert r.data.d2h_copies == copies * r.num_packages
+        if mem == "buffers":
+            assert r.data.h2d_bytes > 0 and r.data.d2h_bytes > 0

@@ -16,7 +16,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 
 # the kwarg-era entry points (all emit DeprecationWarning); examples must
 # demonstrate the spec surface only — see docs/api.md's deprecation table
-DEPRECATED_CALLS = {"make_scheduler"}
+DEPRECATED_CALLS = {"make_scheduler", "package_kernel"}
 DEPRECATED_METHODS = {"config"}
 
 

@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.api import CoexecSpec, build_scheduler
 from repro.core import (CoexecEngine, MemoryModel, SimUnit,
-                        counits_from_devices, make_scheduler, simulate,
+                        counits_from_devices, simulate,
                         validate_cover, Workload)
 
 TOTAL = 4096
@@ -50,7 +51,7 @@ def sched(policy):
     kw = {}
     if policy in ("static", "hguided", "work_stealing"):
         kw["speeds"] = list(SPEEDS)
-    return make_scheduler(policy, TOTAL, 2, granularity=GRAN, **kw)
+    return build_scheduler(policy, TOTAL, 2, granularity=GRAN, **kw)
 
 
 def irregular_kernel(offset, chunk):
@@ -104,13 +105,22 @@ def test_hguided_cover_parity(workload_fn):
 @pytest.mark.parametrize("memory", [MemoryModel.USM, MemoryModel.BUFFERS])
 def test_work_stealing_memory_models_parity(memory):
     """Both memory models preserve the count/cover parity (the memory model
-    changes per-package costs, never the package structure)."""
+    changes data movement and per-package costs, never the package
+    structure), and the DES models the same per-package staging copies
+    the real data plane counts."""
     wl = regular_workload()
     r = simulate(sched("work_stealing"), sim_units(), wl, memory=memory)
     data = np.arange(TOTAL, dtype=np.float32)
-    with CoexecEngine(real_units(), memory=memory) as engine:
+    spec = CoexecSpec.builder().memory(memory.value).build()
+    with CoexecEngine.from_spec(spec, units=real_units()) as engine:
         h = engine.submit(sched("work_stealing"), lambda off, c: c * 3.0,
                           [data], np.zeros(TOTAL, np.float32))
         out = h.result(timeout=120)
     np.testing.assert_allclose(out, data * 3.0)
     assert h.stats.num_packages == r.num_packages
+    # counter parity: per-package copy structure matches across substrates
+    # (the sim charges one H2D + one D2H per package under BUFFERS; the
+    # real plane pays one H2D per argument — one here — plus one D2H)
+    assert h.stats.data.dispatches == r.data.dispatches
+    assert (h.stats.data.h2d_copies == r.data.h2d_copies) and \
+        (h.stats.data.d2h_copies == r.data.d2h_copies)

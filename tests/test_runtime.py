@@ -1,18 +1,28 @@
-"""Real (threaded, JAX-dispatch) co-execution: the Listing-1 path."""
+"""Real (threaded, JAX-dispatch) co-execution: the Listing-1 path.
+
+Kernels resolve through the registry (`repro.api.build_kernel`) and the
+runtime is configured by `CoexecSpec` — the shim surfaces (`rt.config`,
+`package_kernel`) are covered separately with targeted warning checks.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import CoexecutorRuntime, counits_from_devices
-from repro.kernels import demo_spheres, package_kernel, ref
+from repro.api import CoexecSpec, build_kernel
+from repro.core import CoexecutorRuntime
+from repro.kernels import ref
 
 
-def two_units():
+def spec_for(policy: str, dist: float = 0.4,
+             memory: str = "usm") -> CoexecSpec:
     """Two Coexecution Units (sharing this host's one device)."""
-    devs = jax.local_devices() * 2
-    return counits_from_devices(devs, kinds=["cpu", "cpu"],
-                                speed_hints=[0.4, 0.6])
+    return (CoexecSpec.builder()
+            .policy(policy)
+            .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.4, 0.6))
+            .dist(dist)
+            .memory(memory)
+            .build())
 
 
 @pytest.mark.parametrize("policy", ["static", "dyn16", "hguided"])
@@ -24,11 +34,16 @@ def test_saxpy_all_policies(policy, memory):
     def kernel(offset, chunk):
         return chunk * 3.0
 
-    rt = CoexecutorRuntime(policy=policy)
-    rt.config(units=two_units(), dist=0.4, memory=memory)
-    out = rt.launch(n, kernel, [data], granularity=64)
+    spec = spec_for(policy, memory=memory)
+    with CoexecutorRuntime.from_spec(spec) as rt:
+        out = rt.launch(n, kernel, [data], granularity=64)
     np.testing.assert_allclose(out, data * 3.0)
     assert rt.last_stats.num_packages >= (1 if policy == "static" else 2)
+    # MemorySpec selects real data-plane behavior, visible in the stats
+    if memory == "usm":
+        assert rt.last_stats.data.staging_copies == 0
+    else:
+        assert rt.last_stats.data.staging_copies > 0
 
 
 def test_offset_dependent_kernel():
@@ -38,16 +53,16 @@ def test_offset_dependent_kernel():
         idx = jnp.arange(chunk.shape[0], dtype=jnp.float32) + offset
         return chunk + idx
 
-    rt = CoexecutorRuntime("dyn8").config(units=two_units())
-    out = rt.launch(n, kernel, [np.zeros(n, np.float32)])
+    with CoexecutorRuntime.from_spec(spec_for("dyn8")) as rt:
+        out = rt.launch(n, kernel, [np.zeros(n, np.float32)])
     np.testing.assert_allclose(out, np.arange(n, dtype=np.float32))
 
 
 def test_paper_benchmark_packages_taylor():
     n = 5000
     x = np.random.default_rng(0).uniform(-2, 2, n).astype(np.float32)
-    rt = CoexecutorRuntime("hguided").config(units=two_units(), dist=0.5)
-    out = rt.launch(n, package_kernel("taylor"), [x])
+    with CoexecutorRuntime.from_spec(spec_for("hguided", 0.5)) as rt:
+        out = rt.launch(n, build_kernel("taylor"), [x])
     np.testing.assert_allclose(out, np.sin(x), rtol=1e-3, atol=1e-4)
 
 
@@ -56,9 +71,9 @@ def test_paper_benchmark_packages_mandelbrot():
     re_ = np.linspace(-2.2, 0.8, side, dtype=np.float32)
     im = np.linspace(-1.4, 1.4, side, dtype=np.float32)
     cre, cim = np.meshgrid(re_, im)
-    rt = CoexecutorRuntime("dyn8").config(units=two_units())
-    out = rt.launch(side * side, package_kernel("mandelbrot"),
-                    [cre.ravel(), cim.ravel()])
+    with CoexecutorRuntime.from_spec(spec_for("dyn8")) as rt:
+        out = rt.launch(side * side, build_kernel("mandelbrot"),
+                        [cre.ravel(), cim.ravel()])
     want = np.asarray(ref.mandelbrot(jnp.asarray(cre.ravel()),
                                      jnp.asarray(cim.ravel())))
     np.testing.assert_allclose(out, want)
@@ -69,41 +84,60 @@ def test_paper_benchmark_packages_rap():
     rng = np.random.default_rng(1)
     vals = rng.normal(size=(n, L)).astype(np.float32)
     lens = rng.integers(0, L, size=n).astype(np.int32)
-    rt = CoexecutorRuntime("hguided").config(units=two_units(), dist=0.3)
-    out = rt.launch(n, package_kernel("rap"), [vals, lens])
+    with CoexecutorRuntime.from_spec(spec_for("hguided", 0.3)) as rt:
+        out = rt.launch(n, build_kernel("rap"), [vals, lens])
     want = np.asarray(ref.rap(jnp.asarray(vals), jnp.asarray(lens)))
     np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
 
 
 def test_matmul_rowwise_coexecution():
-    """MatMul co-executed by rows of A (the B operand rides along)."""
+    """MatMul co-executed by rows of A; B is a declared broadcast operand."""
     m, k, n2 = 160, 32, 24
     rng = np.random.default_rng(2)
     a = rng.normal(size=(m, k)).astype(np.float32)
     b = rng.normal(size=(k, n2)).astype(np.float32)
 
-    def kernel(offset, a_rows):
-        return a_rows @ b
-
-    rt = CoexecutorRuntime("dyn4").config(units=two_units())
-    out = rt.launch(m, kernel, [a], out_dtype=np.float32,
-                    out_trailing_shape=(n2,))
+    with CoexecutorRuntime.from_spec(spec_for("dyn4")) as rt:
+        # typed kernel: output shape/dtype derive from the declaration
+        out = rt.launch(m, build_kernel("matmul"), [a, b])
     np.testing.assert_allclose(out, a @ b, rtol=1e-5, atol=1e-5)
 
 
 def test_single_unit_degenerates_gracefully():
-    rt = CoexecutorRuntime("hguided").config(
-        units=counits_from_devices(), dist=1.0)
+    spec = (CoexecSpec.builder().policy("hguided").dist(1.0)
+            .units(count=1).build())
     n = 4096
-    out = rt.launch(n, lambda off, c: c + 1.0,
-                    [np.zeros(n, np.float32)])
+    with CoexecutorRuntime.from_spec(spec) as rt:
+        out = rt.launch(n, lambda off, c: c + 1.0,
+                        [np.zeros(n, np.float32)])
     np.testing.assert_allclose(out, 1.0)
 
 
 def test_launch_stats_recorded():
-    rt = CoexecutorRuntime("dyn8").config(units=two_units())
     n = 1 << 12
-    rt.launch(n, lambda off, c: c, [np.zeros(n, np.float32)])
-    st = rt.last_stats
+    with CoexecutorRuntime.from_spec(spec_for("dyn8")) as rt:
+        rt.launch(n, lambda off, c: c, [np.zeros(n, np.float32)])
+        st = rt.last_stats
     assert st is not None and st.total_s > 0
     assert sum(p.size for p in st.packages) == n
+    assert st.data.dispatches == st.num_packages
+
+
+def test_legacy_config_and_package_kernel_shims_still_work():
+    """The kwarg-era surface warns but behaves exactly as before."""
+    from repro.core import counits_from_devices
+    from repro.kernels import package_kernel
+
+    n = 4096
+    x = np.random.default_rng(3).uniform(-2, 2, n).astype(np.float32)
+    units = counits_from_devices(jax.local_devices() * 2,
+                                 kinds=["cpu", "cpu"],
+                                 speed_hints=[0.4, 0.6])
+    with pytest.warns(DeprecationWarning, match="package_kernel"):
+        kernel = package_kernel("taylor")
+    rt = CoexecutorRuntime("hguided")
+    with pytest.warns(DeprecationWarning, match="config"):
+        rt.config(units=units, dist=0.5)
+    with rt:
+        out = rt.launch(n, kernel, [x])
+    np.testing.assert_allclose(out, np.sin(x), rtol=1e-3, atol=1e-4)
