@@ -14,9 +14,11 @@ profiles, virtual time) AND on the real persistent CoexecEngine (concurrent
 up in the same CSV.
 
 `run_coexec_multi()` sweeps the *admission layer*: 1–32 concurrent
-tenants, FIFO vs weighted-fair queueing, fused vs unfused, reporting
-p50/p99 latency, Jain fairness over per-tenant throughput and dispatched
-package counts on the deterministic multi-launch DES.
+tenants, FIFO vs weighted-fair queueing, fused vs unfused, preemptive
+pull-capping on vs off, reporting p50/p99 latency, Jain fairness over
+per-tenant throughput, the time-sampled service fairness curve and
+dispatched package counts on the deterministic multi-launch DES (which
+drives the same `repro.core.exec.ExecutionLoop` as the real engine).
 """
 from __future__ import annotations
 
@@ -114,26 +116,51 @@ def run_coexec(spec=None, *, smoke: bool = False, structured=None):
     return rows
 
 
-def run_coexec_multi(spec=None):
-    """Admission-layer sweep: tenants x {fifo,wfq} x {unfused,fused}.
+def coexec_multi_structured_rows(spec=None, *, smoke: bool = False
+                                 ) -> list[dict]:
+    """The coexec-multi sweep as machine-readable dicts (JSON artifact).
 
-    Rows are `coexec-multi/<workload>/<N>t/<admission>[+fuse]` with the
-    p99 latency (ms) as the value and p50/fairness/packages derived.
-    Deterministic (DES virtual time): safe as a CI-tracked artifact.
+    One dict per (tenant count, intra-launch policy, admission policy,
+    fusion mode, preemption mode) on the deterministic multi-launch DES —
+    what `benchmarks.run` serializes into ``BENCH_coexec_multi.json``.
+    The preemption axis sweeps {off,on} under WFQ (the `hguided` policy
+    rows are where the fairness-curve tightening shows: large early
+    packages are exactly what pull-capping preempts); ``smoke`` shrinks
+    the tenant axis for CI.
     """
     from repro.launch.serve import coexec_multi_rows, default_serve_spec
 
     base = spec if spec is not None else default_serve_spec()
     base = base.replace(workload=base.workload.replace(name="taylor"))
+    tenants = (1, 8, 32) if smoke else (1, 2, 4, 8, 16, 32)
+    return coexec_multi_rows(base, tenants=tenants,
+                             policies=("dynamic", "hguided"),
+                             admissions=("fifo", "wfq"),
+                             fuse_modes=(False, True),
+                             preempt_modes=(False, True))
+
+
+def run_coexec_multi(spec=None, *, smoke: bool = False, structured=None):
+    """Admission sweep: tenants x {fifo,wfq} x {fuse} x {preempt}.
+
+    Rows are `coexec-multi/<workload>/<policy>/<N>t/<admission>[+fuse]
+    [+preempt]` with the p99 latency (ms) as the value and p50/fairness/
+    fairness-curve/packages derived. Deterministic (DES virtual time):
+    safe as a CI-tracked artifact (pass ``structured`` to format
+    pre-measured rows instead of re-running).
+    """
+    if structured is None:
+        structured = coexec_multi_structured_rows(spec, smoke=smoke)
     rows = []
-    for r in coexec_multi_rows(base, tenants=(1, 2, 4, 8, 16, 32),
-                               admissions=("fifo", "wfq"),
-                               fuse_modes=(False, True)):
-        tag = f"{r['admission']}{'+fuse' if r['fuse'] else ''}"
-        rows.append((f"coexec-multi/{r['workload']}/{r['tenants']}t/{tag}",
+    for r in structured:
+        tag = (f"{r['admission']}{'+fuse' if r['fuse'] else ''}"
+               f"{'+preempt' if r['preempt'] else ''}")
+        rows.append((f"coexec-multi/{r['workload']}/{r['policy']}"
+                     f"/{r['tenants']}t/{tag}",
                      round(r["p99_ms"], 2),
                      f"p50_ms={r['p50_ms']:.2f};"
                      f"fairness={r['fairness']:.3f};"
+                     f"curve={r['fairness_curve_mean']:.3f};"
                      f"packages={r['packages']};"
                      f"fused_batches={r['fused_batches']}"))
     return rows

@@ -10,11 +10,15 @@ benchmarks. Prints ``name,value,derived`` CSV rows.
 The co-execution suites (``coexec`` / ``coexec-multi``) take the same
 spec-derived flags as ``repro.launch.serve`` — both CLIs generate them
 from the ``repro.api.CoexecSpec`` fields, so a new spec field becomes a
-new flag in both tools with no edits here. When a coexec suite runs, the
-driver also writes the machine-readable ``BENCH_coexec.json`` (path via
-``--bench-json``): per-workload/policy/memory throughput plus the data
-plane's dispatch and staging-copy counters, the artifact CI uploads so
-the perf trajectory is tracked across PRs.
+new flag in both tools with no edits here (``--preempt`` arrived that
+way). When a coexec suite runs, the driver also writes machine-readable
+artifacts: ``BENCH_coexec.json`` (path via ``--bench-json``) with
+per-workload/policy/memory throughput plus the data plane's dispatch
+and staging-copy counters, and ``BENCH_coexec_multi.json`` (path via
+``--bench-multi-json``) with the multi-tenant admission sweep —
+fairness curves included, so the preemption win is a tracked quantity.
+Both documents carry ``schema_version``/``suite`` fields and are
+validated by ``scripts/check_bench_schema.py`` in CI's docs job.
 """
 from __future__ import annotations
 
@@ -42,13 +46,37 @@ def build_parser(suite_names) -> argparse.ArgumentParser:
                     help="print registered schedulers, workloads and "
                          "kernels (with their option fields) and exit")
     ap.add_argument("--smoke", action="store_true",
-                    help="shrink the coexec suite to CI-smoke sizes")
+                    help="shrink the coexec suites to CI-smoke sizes")
     ap.add_argument("--bench-json", default="BENCH_coexec.json",
                     metavar="PATH",
                     help="where to write the machine-readable coexec "
                          "results (default: %(default)s)")
+    ap.add_argument("--bench-multi-json", default="BENCH_coexec_multi.json",
+                    metavar="PATH",
+                    help="where to write the machine-readable coexec-multi "
+                         "results (default: %(default)s)")
     add_spec_args(ap)
     return ap
+
+
+BENCH_SCHEMA_VERSION = 2
+
+
+def write_bench_doc(path: str, suite: str, spec, rows: list) -> None:
+    """Serialize one suite's structured rows as a schema-tagged artifact.
+
+    Args:
+        path: output JSON path.
+        suite: suite key (``"coexec"`` / ``"coexec-multi"``) — recorded
+            in the document so the schema checker knows the row contract.
+        spec: the resolved ``CoexecSpec`` the run used.
+        rows: the structured measurement dicts.
+    """
+    doc = {"schema_version": BENCH_SCHEMA_VERSION, "suite": suite,
+           "spec": spec.to_dict(), "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
 
 
 def main() -> None:
@@ -69,19 +97,24 @@ def main() -> None:
     except (KeyError, ValueError) as e:
         ap.error(str(e))
 
-    bench_rows: list[dict] = []
-
     def coexec_suite():
         structured = hetero_bench.coexec_structured_rows(spec,
                                                          smoke=args.smoke)
-        bench_rows.extend(structured)
+        write_bench_doc(args.bench_json, "coexec", spec, structured)
         return hetero_bench.run_coexec(spec, structured=structured)
+
+    def coexec_multi_suite():
+        structured = hetero_bench.coexec_multi_structured_rows(
+            spec, smoke=args.smoke)
+        write_bench_doc(args.bench_multi_json, "coexec-multi", spec,
+                        structured)
+        return hetero_bench.run_coexec_multi(spec, structured=structured)
 
     suites = dict(paper_figs.ALL)
     suites["kernels"] = kernel_micro.run
     suites["hetero"] = hetero_bench.run
     suites["coexec"] = coexec_suite
-    suites["coexec-multi"] = lambda: hetero_bench.run_coexec_multi(spec)
+    suites["coexec-multi"] = coexec_multi_suite
     suites["roofline"] = roofline_table.run
 
     wanted = args.suites or list(suites)
@@ -93,13 +126,6 @@ def main() -> None:
             continue
         for name, value, derived in suites[key]():
             print(f"{name},{value},{derived}")
-
-    if bench_rows:
-        doc = {"version": 1, "spec": spec.to_dict(), "rows": bench_rows}
-        with open(args.bench_json, "w") as f:
-            json.dump(doc, f, indent=2, sort_keys=True)
-        print(f"# wrote {args.bench_json} ({len(bench_rows)} rows)",
-              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ MODULES = [
     f"{CORE}/dataplane.py",
     f"{CORE}/energy.py",
     f"{CORE}/engine.py",
+    f"{CORE}/exec.py",
     f"{CORE}/runtime.py",
     f"{CORE}/scheduler.py",
     f"{CORE}/sim.py",
@@ -53,11 +54,13 @@ STRICT: dict[str, tuple[str, ...]] = {
     "engine.py::CoexecEngine.submit": ("Args:", "Returns:", "Raises:"),
     "engine.py::LaunchHandle.exception": ("Args:", "Returns:", "Raises:"),
     "engine.py::LaunchHandle.result": ("Args:", "Returns:", "Raises:"),
-    "runtime.py::CoexecutorRuntime.config": ("Args:", "Returns:"),
+    "exec.py::Backend.dispatch": ("Args:",),
+    "exec.py::ExecutionLoop.complete": ("Args:",),
+    "exec.py::ExecutionLoop.pull": ("Args:", "Returns:"),
     "runtime.py::CoexecutorRuntime.launch_async": ("Args:", "Returns:",
                                                    "Raises:"),
     "scheduler.py::Scheduler.next_package": ("Args:", "Returns:"),
-    "scheduler.py::make_scheduler": ("Args:", "Returns:", "Raises:"),
+    "sim.py::SimBackend.run": ("Args:",),
     "sim.py::simulate_multi": ("Args:", "Returns:", "Raises:"),
     "cli.py::add_spec_args": ("Args:",),
     "cli.py::args_from_spec": ("Args:", "Returns:"),

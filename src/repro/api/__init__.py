@@ -21,7 +21,8 @@ resolve kernels; ``registry_listing`` powers the CLIs' ``--list``).
 
 See ``docs/api.md`` for the schema table, builder examples and the
 registry how-to. The legacy kwarg surfaces (``rt.config(...)``,
-``make_scheduler(...)``) still work but emit ``DeprecationWarning``.
+``make_scheduler(...)``, ``package_kernel(...)``, engine admission
+kwargs) were removed when their deprecation window closed.
 """
 from . import registry
 from .cli import (SPEC_SECTIONS, add_spec_args, args_from_spec,

@@ -314,6 +314,10 @@ class AdmissionSpec(_SubSpec):
         default=None, metadata=_cli(
             "quantum", "WFQ deficit-round-robin credit per round "
                        "(work-items; default derives from package hints)"))
+    preempt: bool = dataclasses.field(
+        default=False, metadata=_cli(
+            "preempt", "WFQ reclaims credit mid-launch by capping "
+                       "per-pull package sizes of over-served tenants"))
 
     def to_config(self) -> AdmissionConfig:
         """The equivalent :class:`~repro.core.admission.AdmissionConfig`.
@@ -328,7 +332,7 @@ class AdmissionSpec(_SubSpec):
             policy=self.policy, fuse=self.fuse,
             fuse_threshold=self.fuse_threshold, fuse_limit=self.fuse_limit,
             fuse_wait_s=self.fuse_wait_s, max_inflight=self.max_inflight,
-            quantum=self.quantum)
+            quantum=self.quantum, preempt=self.preempt)
 
     @classmethod
     def from_config(cls, config: AdmissionConfig) -> "AdmissionSpec":
@@ -345,7 +349,7 @@ class AdmissionSpec(_SubSpec):
                    fuse_limit=config.fuse_limit,
                    fuse_wait_s=config.fuse_wait_s,
                    max_inflight=config.max_inflight,
-                   quantum=config.quantum)
+                   quantum=config.quantum, preempt=config.preempt)
 
     def validate(self) -> None:
         """Check policy/limits by constructing the config once.
@@ -707,7 +711,8 @@ class CoexecSpecBuilder:
     def admission(self, policy: Optional[str] = None, *,
                   wfq: Optional[bool] = None,
                   max_inflight: Optional[int] = None,
-                  quantum: Optional[int] = None) -> "CoexecSpecBuilder":
+                  quantum: Optional[int] = None,
+                  preempt: Optional[bool] = None) -> "CoexecSpecBuilder":
         """Configure cross-launch admission.
 
         Args:
@@ -716,6 +721,9 @@ class CoexecSpecBuilder:
                 ``"fifo"`` (ignored when ``policy`` is given).
             max_inflight: backpressure cap (``None`` leaves it unchanged).
             quantum: WFQ credit per round (``None`` leaves it unchanged).
+            preempt: WFQ mid-launch credit reclamation — cap per-pull
+                package sizes of over-served tenants (``None`` leaves it
+                unchanged).
 
         Returns:
             The builder.
@@ -729,6 +737,8 @@ class CoexecSpecBuilder:
             adm = adm.replace(max_inflight=int(max_inflight))
         if quantum is not None:
             adm = adm.replace(quantum=int(quantum))
+        if preempt is not None:
+            adm = adm.replace(preempt=bool(preempt))
         return self._update(admission=adm)
 
     def fuse(self, on: bool = True, *,

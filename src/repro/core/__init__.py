@@ -2,22 +2,27 @@
 
 Configuration is declarative: build a ``repro.api.CoexecSpec`` and hand
 it to ``CoexecutorRuntime.from_spec`` / ``CoexecEngine.from_spec`` /
-``simulate(..., spec=...)``. The kwarg-era entry points below
-(``rt.config``, ``make_scheduler``, engine admission kwargs) remain as
-deprecation shims that emit ``DeprecationWarning``.
+``simulate(..., spec=...)``. The kwarg-era entry points (``rt.config``,
+``make_scheduler``, engine admission kwargs, ``package_kernel``) were
+removed when their deprecation window closed — see docs/api.md.
 
 Public surface:
     CoexecutorRuntime, counits_from_devices     — real co-execution (Listing 1)
     CoexecEngine, LaunchHandle, LaunchStats     — persistent engine (start/
                                                   submit/shutdown; concurrent
                                                   launches interleave)
+    ExecutionLoop, LaunchState                  — the shared control plane
+                                                  both backends drive
+                                                  (repro.core.exec)
     AdmissionConfig, AdmissionController,
         AdmissionFull, jain_index               — cross-launch admission:
-                                                  WFQ fairness, launch fusion,
-                                                  backpressure
+                                                  WFQ fairness (+ preemptive
+                                                  pull-capping), launch
+                                                  fusion, backpressure
     LaunchWaitTimeout                           — wait-timeout vs launch-failed
-    make_scheduler / Static / Dynamic /
-        HGuided / WorkStealing                  — load balancers (§3.2)
+    Static / Dynamic / HGuided / WorkStealing   — load balancers (§3.2),
+                                                  built via the registry
+                                                  (repro.api.build_scheduler)
     simulate, solo_run, Workload, SimUnit       — DES reproduction engine
     simulate_multi, LaunchSpec, MultiSimResult  — multi-tenant DES (admission
                                                   policies in virtual time)
@@ -28,20 +33,22 @@ Public surface:
     paper_workload, ALL_BENCHMARKS              — Table 1 profiles
 """
 from .admission import (ADMISSION_POLICIES, AdmissionConfig,
-                        AdmissionController, AdmissionFull, jain_index)
+                        AdmissionController, AdmissionFull, jain_index,
+                        service_fairness_curve)
 from .dataplane import (ArgRole, ArgSpec, CoexecKernel, DataPlaneCounters,
                         OutputSpec, as_coexec_kernel, make_plane)
 from .energy import (EnergyReport, PowerModel, PAPER_POWER, TPU_POWER,
                      edp_ratio, energy_report, geomean)
 from .engine import (CoexecEngine, LaunchHandle, LaunchStats,
                      LaunchWaitTimeout)
+from .exec import ExecutionLoop, LaunchState
 from .memory import MemoryCosts, MemoryModel, TPU_MEMORY_COSTS
 from .package import Package, Range, validate_cover
 from .profiler import EwmaThroughput, SpeedBoard
 from .runtime import CoexecutorRuntime, counits_from_devices
 from .scheduler import (SPEED_HINT_POLICIES, DynamicScheduler,
                         HGuidedScheduler, Scheduler, StaticScheduler,
-                        WorkStealingScheduler, make_scheduler, static_bounds)
+                        WorkStealingScheduler, static_bounds)
 from .sim import (LaunchSimResult, LaunchSpec, MultiSimResult, SimResult,
                   Workload, simulate, simulate_multi, solo_run)
 from .units import JaxUnit, SimUnit
@@ -53,15 +60,16 @@ __all__ = [
     "AdmissionController", "AdmissionFull", "ArgRole", "ArgSpec",
     "CoexecEngine", "CoexecKernel", "CoexecutorRuntime",
     "DataPlaneCounters", "DynamicScheduler", "EnergyReport",
-    "EwmaThroughput", "HGuidedScheduler", "IRREGULAR", "JaxUnit",
-    "LaunchHandle", "LaunchSimResult", "LaunchSpec", "LaunchStats",
-    "LaunchWaitTimeout", "MemoryCosts", "MemoryModel", "MultiSimResult",
-    "OutputSpec", "PAPER_POWER", "Package", "PowerModel", "REGULAR",
-    "Range", "SPECS", "SPEED_HINT_POLICIES", "Scheduler", "SimResult",
-    "SimUnit", "SpeedBoard", "StaticScheduler", "TPU_MEMORY_COSTS",
-    "TPU_POWER", "WorkStealingScheduler", "Workload", "as_coexec_kernel",
+    "EwmaThroughput", "ExecutionLoop", "HGuidedScheduler", "IRREGULAR",
+    "JaxUnit", "LaunchHandle", "LaunchSimResult", "LaunchSpec",
+    "LaunchState", "LaunchStats", "LaunchWaitTimeout", "MemoryCosts",
+    "MemoryModel", "MultiSimResult", "OutputSpec", "PAPER_POWER",
+    "Package", "PowerModel", "REGULAR", "Range", "SPECS",
+    "SPEED_HINT_POLICIES", "Scheduler", "SimResult", "SimUnit",
+    "SpeedBoard", "StaticScheduler", "TPU_MEMORY_COSTS", "TPU_POWER",
+    "WorkStealingScheduler", "Workload", "as_coexec_kernel",
     "counits_from_devices", "edp_ratio", "energy_report", "geomean",
-    "jain_index", "make_plane", "make_scheduler", "paper_workload",
-    "simulate", "simulate_multi", "solo_run", "static_bounds",
-    "validate_cover",
+    "jain_index", "make_plane", "paper_workload",
+    "service_fairness_curve", "simulate", "simulate_multi", "solo_run",
+    "static_bounds", "validate_cover",
 ]

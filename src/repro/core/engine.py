@@ -11,12 +11,15 @@ launch. This module provides that engine for the Coexecutor Runtime:
   :meth:`CoexecEngine.submit` co-executions concurrently; packages from all
   in-flight launches interleave on the same units under the engine's
   admission policy (FIFO by default — the Commander protocol of Fig. 2a —
-  or weighted-fair queueing across tenants);
-* a cross-launch :class:`~.admission.AdmissionController` between ``submit``
-  and the workers: deficit-round-robin fairness (``admission="wfq"``),
-  coalescing of small same-shaped concurrent launches into shared vmapped
-  dispatches (``fuse=True``), and backpressure (``max_inflight`` with a
-  blocking or :class:`~.admission.AdmissionFull`-raising submit path);
+  or weighted-fair queueing across tenants, optionally with preemptive
+  pull-capping);
+* the shared control plane of :class:`~repro.core.exec.ExecutionLoop`
+  between ``submit`` and the workers: the exact same loop object that
+  drives the discrete-event simulator decides admission pulls, launch
+  fusion + bitwise de-mux, finalization and counter attribution here —
+  this module contributes only the :class:`RealBackend` execution
+  substrate (threads, wall clock, data-plane dispatch on
+  :class:`~repro.core.units.JaxUnit`\\ s);
 * per-launch isolation — each launch owns its scheduler, output container,
   package log and :class:`LaunchStats`; completion is surfaced through a
   :class:`LaunchHandle` future, so independent callers never observe each
@@ -29,10 +32,15 @@ launch. This module provides that engine for the Coexecutor Runtime:
   unified-shared-memory movement or per-package staged buffers, with
   copy/dispatch counters surfaced in each launch's :class:`LaunchStats`.
 
+Configuration is declarative only: build a
+:class:`~repro.api.spec.CoexecSpec` (the kwarg-era ``memory=`` /
+``admission=`` / ``fuse=`` / ``max_inflight=`` constructor surface was
+removed when its deprecation window closed — see docs/api.md).
+
 Lifecycle::
 
-    engine = CoexecEngine(units, admission="wfq", fuse=True)
-    engine.start()
+    engine = CoexecEngine.from_spec(spec)       # or CoexecEngine(units,
+    engine.start()                              #        spec=spec)
     h1 = engine.submit(sched1, kernel_a, inputs_a, out_a, tenant="u1")
     h2 = engine.submit(sched2, kernel_b, inputs_b, out_b, tenant="u2")
     out_a = h1.result(); out_b = h2.result()
@@ -46,20 +54,18 @@ or, scoped::
 from __future__ import annotations
 
 import concurrent.futures
-import dataclasses
-import itertools
 import threading
 import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from .admission import (AdmissionConfig, AdmissionController, AdmissionFull,
-                        coerce_admission)
+from .admission import AdmissionConfig, AdmissionController, AdmissionFull
 from .dataplane import (CoexecKernel, DataPlaneCounters, as_coexec_kernel,
                         make_plane)
+from .exec import Backend, ExecutionLoop, LaunchState, LaunchStats
 from .memory import MemoryModel
-from .package import Package, Range, validate_cover
+from .package import Package
 from .profiler import SpeedBoard
 from .scheduler import DynamicScheduler, HGuidedScheduler, Scheduler
 from .units import JaxUnit
@@ -80,37 +86,6 @@ class LaunchWaitTimeout(*_TIMEOUT_BASES):
     :meth:`LaunchHandle.exception`, never this class. Subclasses
     ``TimeoutError`` (both flavors), so broad handlers keep working.
     """
-
-
-@dataclasses.dataclass
-class LaunchStats:
-    """Per-launch metrics mirroring the paper's measurements.
-
-    Isolated per submit: concurrent launches on the same engine each get
-    their own instance (busy seconds are derived from this launch's
-    packages only, never from cumulative unit counters). For a launch that
-    was served through a fused batch, ``packages`` holds one synthesized
-    package covering the launch's whole index space, timed by the shared
-    dispatch that computed it (and ``data`` is the member's even integer
-    share of the batch's counters, so summing member stats recovers the
-    batch's real copy/dispatch totals).
-
-    ``data`` carries the launch's data-plane accounting — dispatches and
-    explicit H2D/D2H staging copies/bytes — so the USM-vs-BUFFERS
-    distinction of the configured :class:`~.memory.MemoryModel` is
-    observable per launch (USM performs zero staging copies).
-    """
-
-    total_s: float
-    packages: list[Package]
-    unit_busy_s: dict[str, float]
-    data: DataPlaneCounters = dataclasses.field(
-        default_factory=DataPlaneCounters)
-
-    @property
-    def num_packages(self) -> int:
-        """Number of packages this launch was served as."""
-        return len(self.packages)
 
 
 class LaunchHandle:
@@ -194,124 +169,240 @@ class LaunchHandle:
         return self.stats.packages if self.stats is not None else []
 
 
-class _Launch:
-    """Engine-internal state of one in-flight co-execution."""
+class _Launch(LaunchState):
+    """Engine payload of one in-flight co-execution (real arrays, future).
 
-    __slots__ = ("id", "scheduler", "kernel", "inputs", "out", "adaptive",
-                 "handle", "outstanding", "done_pkgs", "failed", "finalized",
-                 "t_submit", "tenant", "weight", "fuse_key", "slots",
-                 "members", "wfq_cost_scale", "plan")
+    The control-plane fields live on :class:`~repro.core.exec.LaunchState`
+    (the shared loop reads/writes only those); this subclass adds what
+    the :class:`RealBackend` needs to actually run packages.
+    """
+
+    __slots__ = ("kernel", "inputs", "out", "adaptive", "handle", "plan")
 
     def __init__(self, launch_id: int, scheduler: Scheduler, kernel: Callable,
                  inputs: Sequence[np.ndarray], out: np.ndarray,
                  adaptive: bool):
-        self.id = launch_id
-        self.scheduler = scheduler
+        super().__init__(launch_id, scheduler,
+                         t_submit=time.perf_counter())
         self.kernel = kernel
         self.inputs = inputs
         self.out = out
         self.adaptive = adaptive
         self.handle = LaunchHandle(launch_id)
-        self.outstanding = 0          # issued but not yet collected
-        self.done_pkgs: list[Package] = []
-        self.failed = False
-        self.finalized = False
-        self.t_submit = time.perf_counter()
-        self.tenant = f"launch-{launch_id}"
-        self.weight = 1.0
-        self.fuse_key = None
-        self.slots = 1
-        self.members: Optional[list["_Launch"]] = None   # fused batches only
-        self.wfq_cost_scale = 1      # work-items each package unit is worth
         self.plan = None             # LaunchPlan, set by the engine
+
+
+def _fuse_key(config: AdmissionConfig, scheduler: Scheduler,
+              kernel: Callable, inputs: Sequence[np.ndarray],
+              out: np.ndarray):
+    """Coalescing key, or None when this launch is not fusion-eligible.
+
+    Eligible launches are small (≤ ``fuse_threshold`` items) with every
+    input and the output indexed by the full index space on axis 0 —
+    the shape contract that makes member stacking a pure reshape.
+    Typed kernels with broadcast args, halos or non-zero split axes
+    are ineligible (their operands do not stack along the member axis).
+    """
+    if not config.fuse:
+        return None
+    if isinstance(kernel, CoexecKernel) and not kernel.all_split:
+        return None
+    total = scheduler.total
+    if total > config.fuse_threshold:
+        return None
+    arrs = [np.asarray(a) for a in inputs]
+    if any(a.ndim < 1 or a.shape[0] != total for a in arrs):
+        return None
+    if out.shape[0] != total:
+        return None
+    return (kernel, total,
+            tuple((a.shape, str(a.dtype)) for a in arrs),
+            tuple(out.shape), str(out.dtype))
+
+
+class RealBackend(Backend):
+    """Wall-clock JAX execution substrate for the shared control plane.
+
+    Supplies what :class:`~repro.core.exec.ExecutionLoop` cannot decide —
+    real time, real dispatch through the configured data plane, member
+    stacking / vmapping for fused batches, and future resolution — while
+    every scheduling decision stays in the loop. The engine's worker
+    threads call :meth:`dispatch` outside the engine lock; everything
+    else runs caller-serialized like the loop itself.
+    """
+
+    def __init__(self, units: Sequence[JaxUnit], plane, *,
+                 board: Optional[SpeedBoard] = None,
+                 condition: Optional[threading.Condition] = None):
+        self.units = list(units)
+        self.plane = plane
+        self.board = board
+        self.condition = condition
+        self._fused_kernels: dict = {}
+
+    # -- substrate contract -------------------------------------------------
+    def now(self) -> float:
+        """Wall-clock seconds (``time.perf_counter``)."""
+        return time.perf_counter()
+
+    def dispatch(self, unit: int, launch: _Launch, pkg: Package) -> None:
+        """Run one package through the data plane on a real unit.
+
+        Args:
+            unit: index of the serving Coexecution Unit.
+            launch: the owning launch (its ``plan`` carries the bound
+                arrays and counters).
+            pkg: the package to execute; the plane stamps
+                ``t_complete``/``t_collected``.
+        """
+        self.plane.execute(self.units[unit], launch.plan, pkg)
+        if self.board is not None:
+            self.board.record(unit, pkg.size,
+                              max(pkg.t_complete - pkg.t_issue, 1e-9))
+
+    def wait_next_event(self, timeout: float = 0.1) -> None:
+        """Park the calling worker on the engine's condition variable.
+
+        Args:
+            timeout: max seconds to sleep — also the safety net against
+                lost wakeups. The caller must hold the condition.
+        """
+        if self.condition is not None:
+            self.condition.wait(timeout=timeout)
+
+    # -- payload hooks ------------------------------------------------------
+    def refresh_speeds(self, launch: _Launch) -> None:
+        """Feed SpeedBoard throughput into an adaptive launch's scheduler."""
+        if (self.board is not None and getattr(launch, "adaptive", False)
+                and isinstance(launch.scheduler, HGuidedScheduler)):
+            for i, s in enumerate(self.board.speeds()):
+                launch.scheduler.update_speed(i, s)
+
+    def _fused_kernel(self, fn: Callable) -> Callable:
+        """Vmapped wrapper computing whole members at member-local offset 0.
+
+        A fused package covers whole members, so each member's chunk spans
+        its entire index space and the correct kernel offset is 0 — the
+        wrapper maps the original kernel over the member axis, which keeps
+        index-dependent kernels (Mandelbrot coordinates etc.) bitwise
+        faithful to their unfused execution. Cached per kernel so repeated
+        fusion reuses one jit entry per batch shape.
+        """
+        got = self._fused_kernels.get(fn)
+        if got is None:
+            import jax
+            import jax.numpy as jnp
+
+            def fused(offset, *chunks, _fn=fn):
+                member = lambda *cs: _fn(jnp.int32(0), *cs)   # noqa: E731
+                return jax.vmap(member)(*chunks)
+
+            self._fused_kernels[fn] = got = fused
+        return got
+
+    def fuse_payload(self, members: list[_Launch],
+                     launch_id: int) -> _Launch:
+        """Stack member inputs along a new leading *member* axis.
+
+        The fused index space is the member count, split across units by
+        a Dynamic scheduler with one package per unit, so N small
+        requests cost ~one dispatch per unit. One scheduler unit is one
+        member, so ``wfq_cost_scale`` converts credit back to work-items.
+
+        Args:
+            members: the staged same-shaped launches to coalesce.
+            launch_id: id assigned by the loop.
+
+        Returns:
+            The fused engine launch (tenant/weight set by the loop).
+        """
+        first = members[0]
+        n_inputs = len(first.inputs)
+        inputs = [np.stack([np.asarray(m.inputs[j]) for m in members])
+                  for j in range(n_inputs)]
+        out = np.zeros((len(members), *first.out.shape), first.out.dtype)
+        n_units = len(self.units)
+        sched = DynamicScheduler(len(members), n_units,
+                                 num_packages=min(len(members), n_units))
+        fused = _Launch(launch_id, sched, self._fused_kernel(first.kernel),
+                        inputs, out, adaptive=False)
+        fused.plan = self.plane.plan(
+            as_coexec_kernel(fused.kernel, len(inputs)), inputs, out,
+            sched.total)
+        # the fused scheduler's index space is *members*; WFQ credit is
+        # accounted in work-items, so each member unit costs its whole
+        # index space (keeps engine fairness on the sim's scale)
+        fused.wfq_cost_scale = first.scheduler.total
+        fused.member_span = 1
+        return fused
+
+    def launch_counters(self, launch: _Launch) -> DataPlaneCounters:
+        """The launch's data-plane accounting (from its plan)."""
+        return launch.plan.counters.snapshot()
+
+    def commit_member(self, fused: _Launch, member: _Launch, index: int,
+                      cover: Package) -> None:
+        """Copy one member's output row out of the fused batch result."""
+        np.copyto(member.out, fused.out[index])
+
+    def deliver(self, launch: _Launch) -> None:
+        """Resolve the launch's future with its (now written) output."""
+        launch.handle.stats = launch.stats
+        launch.handle._future.set_result(launch.out)
+
+    def fail(self, launch: _Launch, err: BaseException) -> None:
+        """Resolve the launch's future with its failure."""
+        launch.handle._future.set_exception(err)
 
 
 class CoexecEngine:
     """Long-lived per-unit worker threads fed from a multi-tenant queue.
 
     The queueing discipline between ``submit`` and the workers is the
-    :class:`~.admission.AdmissionController` (``engine.admission``): FIFO
-    or weighted-fair, optional launch fusion, optional backpressure.
+    shared :class:`~repro.core.exec.ExecutionLoop` (``engine.loop``) and
+    its :class:`~.admission.AdmissionController` (``engine.admission``):
+    FIFO or weighted-fair (optionally preemptive), optional launch
+    fusion, optional backpressure — the exact same control plane the
+    discrete-event simulator drives.
     """
 
-    _UNSET = object()
-
-    def __init__(self, units: Sequence[JaxUnit], *, spec=None,
-                 memory: "MemoryModel" = _UNSET,
-                 admission: "str | AdmissionConfig" = _UNSET,
-                 fuse: Optional[bool] = None,
-                 max_inflight: Optional[int] = None):
+    def __init__(self, units: Sequence[JaxUnit], *, spec=None):
         """Build an engine over a fixed set of Coexecution Units.
 
-        The canonical configuration is a declarative
+        Configuration is a declarative
         :class:`~repro.api.spec.CoexecSpec` (``spec=`` here, or
-        :meth:`from_spec` to also build the units). The per-knob kwargs
-        are the pre-spec surface: they still work but emit a
-        :class:`DeprecationWarning`, and cannot be combined with ``spec``.
+        :meth:`from_spec` to also build the units); with no spec the
+        engine runs USM memory and plain FIFO admission.
 
         Args:
             units: the Coexecution Units; one worker thread each.
             spec: a ``CoexecSpec`` supplying memory + admission config.
-            memory: (deprecated) USM or BUFFERS collection semantics.
-            admission: (deprecated) policy name (``"fifo"`` / ``"wfq"``)
-                or a full :class:`~.admission.AdmissionConfig`.
-            fuse: (deprecated) overrides the config's ``fuse`` flag.
-            max_inflight: (deprecated) overrides the config's launch cap.
 
         Raises:
-            ValueError: empty unit list, bad admission options, or
-                ``spec`` combined with legacy kwargs.
+            ValueError: empty unit list or invalid spec sections.
         """
         if not units:
             raise ValueError("need at least one Coexecution Unit")
         self.units = list(units)
-        legacy = {k: v for k, v in
-                  (("memory", memory), ("admission", admission))
-                  if v is not self._UNSET}
-        if fuse is not None:
-            legacy["fuse"] = fuse
-        if max_inflight is not None:
-            legacy["max_inflight"] = max_inflight
-        if spec is not None and legacy:
-            raise ValueError(
-                f"pass either spec= or the legacy kwargs "
-                f"{sorted(legacy)}, not both")
-        if legacy:
-            import warnings
-
-            warnings.warn(
-                f"CoexecEngine({', '.join(sorted(legacy))}=...) kwargs are "
-                f"deprecated; build from a repro.api.CoexecSpec "
-                f"(CoexecEngine.from_spec or spec=)",
-                DeprecationWarning, stacklevel=2)
         if spec is not None:
             self.spec = spec
             self.memory = spec.memory_model()
             cfg = spec.admission_config()
         else:
             self.spec = None
-            self.memory = memory if memory is not self._UNSET \
-                else MemoryModel.USM
-            cfg = coerce_admission(
-                admission if admission is not self._UNSET else None)
-            if fuse is not None:
-                cfg = dataclasses.replace(cfg, fuse=bool(fuse))
-            if max_inflight is not None:
-                cfg = dataclasses.replace(
-                    cfg, max_inflight=int(max_inflight))
+            self.memory = MemoryModel.USM
+            cfg = AdmissionConfig()
         # the data plane implementing self.memory: USM = zero-copy shared
         # views + in-place collection, BUFFERS = per-package staging copies
         self.plane = make_plane(self.memory)
-        self.admission = AdmissionController(
-            len(self.units), cfg,
-            fuse_materialize=self._materialize_fused,
-            speed_refresh=self._refresh_speeds)
         self.board = SpeedBoard(len(self.units),
                                 hints=[u.speed_hint for u in self.units])
         self._cv = threading.Condition()
-        self._ids = itertools.count()
+        self.backend = RealBackend(self.units, self.plane, board=self.board,
+                                   condition=self._cv)
+        self.loop = ExecutionLoop(self.backend,
+                                  [u.name for u in self.units], cfg)
         self._threads: list[threading.Thread] = []
-        self._fused_kernels: dict = {}
         self._stop = False
         self._started = False
 
@@ -331,6 +422,11 @@ class CoexecEngine:
         """
         units = list(units) if units is not None else spec.build_units()
         return cls(units, spec=spec)
+
+    @property
+    def admission(self) -> AdmissionController:
+        """The shared loop's admission controller (policy + counters)."""
+        return self.loop.admission
 
     # -- lifecycle ---------------------------------------------------------
     @property
@@ -449,190 +545,31 @@ class CoexecEngine:
                 self._cv.wait(timeout=0.05)
                 if self._stop:
                     raise RuntimeError("engine is shut down")
-            launch = _Launch(next(self._ids), scheduler, kernel, inputs, out,
-                             adaptive)
+            launch = _Launch(self.loop.next_id(), scheduler, kernel, inputs,
+                             out, adaptive)
             launch.plan = plan
             if tenant is not None:
                 launch.tenant = str(tenant)
             launch.weight = float(weight)
-            launch.fuse_key = self._fuse_key(scheduler, kernel, inputs, out)
-            self.admission.admit(launch, time.perf_counter())
+            launch.fuse_key = _fuse_key(self.admission.config, scheduler,
+                                        kernel, inputs, out)
+            self.loop.admit(launch)
             self._cv.notify_all()
         return launch.handle
 
-    # -- fusion ------------------------------------------------------------
-    def _fuse_key(self, scheduler: Scheduler, kernel: Callable,
-                  inputs: Sequence[np.ndarray], out: np.ndarray):
-        """Coalescing key, or None when this launch is not fusion-eligible.
-
-        Eligible launches are small (≤ ``fuse_threshold`` items) with every
-        input and the output indexed by the full index space on axis 0 —
-        the shape contract that makes member stacking a pure reshape.
-        Typed kernels with broadcast args, halos or non-zero split axes
-        are ineligible (their operands do not stack along the member axis).
-        """
-        cfg = self.admission.config
-        if not cfg.fuse:
-            return None
-        if isinstance(kernel, CoexecKernel) and not kernel.all_split:
-            return None
-        total = scheduler.total
-        if total > cfg.fuse_threshold:
-            return None
-        arrs = [np.asarray(a) for a in inputs]
-        if any(a.ndim < 1 or a.shape[0] != total for a in arrs):
-            return None
-        if out.shape[0] != total:
-            return None
-        return (kernel, total,
-                tuple((a.shape, str(a.dtype)) for a in arrs),
-                tuple(out.shape), str(out.dtype))
-
-    def _fused_kernel(self, fn: Callable) -> Callable:
-        """Vmapped wrapper computing whole members at member-local offset 0.
-
-        A fused package covers whole members, so each member's chunk spans
-        its entire index space and the correct kernel offset is 0 — the
-        wrapper maps the original kernel over the member axis, which keeps
-        index-dependent kernels (Mandelbrot coordinates etc.) bitwise
-        faithful to their unfused execution. Cached per kernel so repeated
-        fusion reuses one jit entry per batch shape.
-        """
-        got = self._fused_kernels.get(fn)
-        if got is None:
-            import jax
-            import jax.numpy as jnp
-
-            def fused(offset, *chunks, _fn=fn):
-                member = lambda *cs: _fn(jnp.int32(0), *cs)   # noqa: E731
-                return jax.vmap(member)(*chunks)
-
-            self._fused_kernels[fn] = got = fused
-        return got
-
-    def _materialize_fused(self, members: list[_Launch]) -> _Launch:
-        """Coalesce staged member launches into one fused launch.
-
-        Member inputs are stacked along a new leading *member* axis; the
-        fused index space is the member count, split across units by a
-        Dynamic scheduler with one package per unit, so N small requests
-        cost ~one dispatch per unit.
-        """
-        first = members[0]
-        n_inputs = len(first.inputs)
-        inputs = [np.stack([np.asarray(m.inputs[j]) for m in members])
-                  for j in range(n_inputs)]
-        out = np.zeros((len(members), *first.out.shape), first.out.dtype)
-        sched = DynamicScheduler(len(members), len(self.units),
-                                 num_packages=min(len(members),
-                                                  len(self.units)))
-        fused = _Launch(next(self._ids), sched,
-                        self._fused_kernel(first.kernel), inputs, out,
-                        adaptive=False)
-        fused.plan = self.plane.plan(
-            as_coexec_kernel(fused.kernel, len(inputs)), inputs, out,
-            sched.total)
-        fused.tenant = f"fused-{fused.id}"
-        fused.weight = sum(m.weight for m in members)
-        fused.members = list(members)
-        # the fused scheduler's index space is *members*; WFQ credit is
-        # accounted in work-items, so each member unit costs its whole
-        # index space (keeps engine fairness on the sim's scale)
-        fused.wfq_cost_scale = first.scheduler.total
-        return fused
-
     # -- worker loop -------------------------------------------------------
-    def _refresh_speeds(self, launch: _Launch) -> None:
-        """Feed SpeedBoard throughput into an adaptive launch's scheduler."""
-        if launch.adaptive and isinstance(launch.scheduler, HGuidedScheduler):
-            for i, s in enumerate(self.board.speeds()):
-                launch.scheduler.update_speed(i, s)
-
-    def _next_work(self, unit_idx: int) -> Optional[tuple[_Launch, Package]]:
-        """Pull the next package for `unit_idx` (caller holds the cv)."""
-        self.admission.flush(time.perf_counter(), force=self._stop)
-        got = self.admission.next_work(unit_idx)
-        if got is not None:
-            got[0].outstanding += 1
-        return got
-
-    def _finalize_locked(self, launch: _Launch) -> None:
-        """Resolve a launch whose last package was collected (cv held)."""
-        if launch.finalized:
-            return
-        launch.finalized = True
-        self.admission.discard(launch)
-        try:
-            validate_cover(launch.done_pkgs, launch.scheduler.total)
-        except BaseException as e:
-            for h in self._handles_of(launch):
-                h._future.set_exception(e)
-            return
-        if launch.members is not None:
-            self._demux_fused_locked(launch)
-            return
-        busy: dict[str, float] = {u.name: 0.0 for u in self.units}
-        for p in launch.done_pkgs:
-            busy[self.units[p.unit].name] += max(p.t_complete - p.t_issue, 0.0)
-        launch.handle.stats = LaunchStats(
-            total_s=time.perf_counter() - launch.t_submit,
-            packages=list(launch.done_pkgs),
-            unit_busy_s=busy,
-            data=launch.plan.counters.snapshot())
-        launch.handle._future.set_result(launch.out)
-
-    def _demux_fused_locked(self, fused: _Launch) -> None:
-        """Scatter a completed fused batch back to its member launches.
-
-        Each member gets its output row copied into its own container and
-        a synthesized single-package stats record timed by the shared
-        dispatch that computed it.
-        """
-        now = time.perf_counter()
-        pkgs = sorted(fused.done_pkgs, key=lambda p: p.offset)
-        # the batch's data-plane accounting, attributed in even integer
-        # shares so per-member stats still *sum* to the real copy counts
-        data_shares = fused.plan.counters.snapshot().split(len(fused.members))
-        for i, m in enumerate(fused.members):
-            cover = next(p for p in pkgs
-                         if p.offset <= i < p.offset + p.size)
-            mp = Package(rng=Range(0, m.scheduler.total), seq=0,
-                         unit=cover.unit)
-            mp.t_issue, mp.t_launch = cover.t_issue, cover.t_launch
-            mp.t_complete, mp.t_collected = cover.t_complete, cover.t_collected
-            busy = {u.name: 0.0 for u in self.units}
-            busy[self.units[cover.unit].name] = max(
-                cover.t_complete - cover.t_issue, 0.0) / cover.size
-            np.copyto(m.out, fused.out[i])
-            m.handle.stats = LaunchStats(total_s=now - m.t_submit,
-                                         packages=[mp], unit_busy_s=busy,
-                                         data=data_shares[i])
-            m.handle._future.set_result(m.out)
-
-    def _handles_of(self, launch: _Launch) -> list[LaunchHandle]:
-        """Handles resolved by this entry (members for a fused batch)."""
-        if launch.members is not None:
-            return [m.handle for m in launch.members]
-        return [launch.handle]
-
-    def _fail_locked(self, launch: _Launch, err: BaseException) -> None:
-        """Abort a launch on its first package error (cv held)."""
-        if launch.failed or launch.finalized:
-            return
-        launch.failed = True
-        launch.finalized = True
-        self.admission.discard(launch)
-        for h in self._handles_of(launch):
-            h._future.set_exception(err)
-
     def _worker(self, unit_idx: int) -> None:
-        """One Coexecution Unit's management loop (runs on its own thread)."""
-        unit = self.units[unit_idx]
+        """One Coexecution Unit's management thread: pull, dispatch, complete.
+
+        All control-plane decisions happen inside the shared
+        :class:`~repro.core.exec.ExecutionLoop` under the engine lock;
+        only the (expensive) data-plane dispatch runs unlocked.
+        """
         while True:
             with self._cv:
-                work = self._next_work(unit_idx)
+                work = self.loop.pull(unit_idx, force_flush=self._stop)
                 while work is None:
-                    if self._stop and self.admission.drained():
+                    if self._stop and self.loop.drained():
                         return
                     # Park until a submit / completion / shutdown wakes us
                     # (or a staged fusion group ripens). The timeout is
@@ -640,28 +577,20 @@ class CoexecEngine:
                     ripen = self.admission.next_ripen_in(time.perf_counter())
                     wait = 0.1 if ripen is None else min(0.1,
                                                          max(ripen, 1e-4))
-                    self._cv.wait(timeout=wait)
-                    work = self._next_work(unit_idx)
+                    self.backend.wait_next_event(timeout=wait)
+                    work = self.loop.pull(unit_idx, force_flush=self._stop)
             launch, pkg = work
-            pkg.t_issue = time.perf_counter()
             try:
                 # the engine's data plane stages inputs per the memory
                 # model (USM: zero-copy shared views; BUFFERS: per-package
                 # device_put + copy-back), dispatches on the unit, and
                 # lands the chunk in the launch's output container.
-                self.plane.execute(unit, launch.plan, pkg)
+                self.backend.dispatch(unit_idx, launch, pkg)
             except BaseException as e:
                 with self._cv:
-                    launch.outstanding -= 1
-                    self._fail_locked(launch, e)
+                    self.loop.complete(launch, pkg, error=e)
                     self._cv.notify_all()
                 continue
-            self.board.record(unit_idx, pkg.size,
-                              max(pkg.t_complete - pkg.t_issue, 1e-9))
             with self._cv:
-                launch.outstanding -= 1
-                launch.done_pkgs.append(pkg)
-                if (not launch.failed and launch.scheduler.done()
-                        and launch.outstanding == 0):
-                    self._finalize_locked(launch)
+                self.loop.complete(launch, pkg)
                 self._cv.notify_all()

@@ -1,0 +1,434 @@
+"""Shared co-execution control plane: one loop, two backends.
+
+The paper's central claim is that one kernel and one load-balancing
+policy should run unchanged across heterogeneous devices. Before this
+module, the repo violated its own version of that principle: the real
+engine (:mod:`repro.core.engine`, worker threads + JAX dispatch) and the
+discrete-event simulator (:mod:`repro.core.sim`, virtual clock) each
+reimplemented the full Commander control loop — admission pulls,
+scheduler refresh, launch-fusion staging and de-mux, finalization, and
+dispatch/H2D/D2H counter attribution — so every policy had to be written
+twice and parity-tested by hand.
+
+:class:`ExecutionLoop` is the single implementation of that control
+plane. A :class:`Backend` supplies only the execution substrate:
+
+* **how time flows** — :meth:`Backend.now` is the wall clock for the
+  engine's ``RealBackend`` and the virtual clock for the simulator's
+  ``SimBackend``;
+* **how a package runs** — :meth:`Backend.dispatch` either executes it
+  through the data plane on a :class:`~repro.core.units.JaxUnit` or
+  models its cost on a :class:`~repro.core.units.SimUnit`;
+* **how the driver parks** — :meth:`Backend.wait_next_event` blocks a
+  worker thread (real) or advances the event queue (sim);
+* **how fused payloads materialize and results land** — the remaining
+  hooks (:meth:`Backend.fuse_payload`, :meth:`Backend.deliver`, ...).
+
+Everything policy-shaped — which launch an idle unit serves (FIFO/WFQ
+via the :class:`~repro.core.admission.AdmissionController`, including
+preemptive pull-capping), when staged fusion groups ripen, how a fused
+batch de-multiplexes to its members, when a launch finalizes, and how
+data-plane counters are attributed (remainder-distributed integer shares
+for fused members) — is decided *here, once*, so a new policy is a
+one-place change that both substrates inherit structurally.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+from .admission import AdmissionConfig, AdmissionController
+from .dataplane import DataPlaneCounters
+from .package import Package, Range, validate_cover
+from .scheduler import Scheduler
+
+__all__ = ["Backend", "ExecutionLoop", "LaunchState", "LaunchStats"]
+
+
+@dataclasses.dataclass
+class LaunchStats:
+    """Per-launch metrics mirroring the paper's measurements.
+
+    Produced by the shared :class:`ExecutionLoop` for *both* backends, so
+    real-vs-sim counter parity is structural rather than test-enforced.
+    Isolated per launch: concurrent launches on the same units each get
+    their own instance (busy seconds derive from this launch's packages
+    only, never from cumulative unit counters). For a launch served
+    through a fused batch, ``packages`` holds one synthesized package
+    covering the launch's whole index space, timed by the shared dispatch
+    that computed it, and ``data`` is the member's remainder-distributed
+    integer share of the batch's counters — summing member stats recovers
+    the batch's real copy/dispatch totals exactly.
+
+    ``data`` carries the launch's data-plane accounting — dispatches and
+    explicit H2D/D2H staging copies/bytes — so the USM-vs-BUFFERS
+    distinction of the configured :class:`~.memory.MemoryModel` is
+    observable per launch (USM performs zero staging copies).
+    """
+
+    total_s: float
+    packages: list[Package]
+    unit_busy_s: dict[str, float]
+    data: DataPlaneCounters = dataclasses.field(
+        default_factory=DataPlaneCounters)
+
+    @property
+    def num_packages(self) -> int:
+        """Number of packages this launch was served as."""
+        return len(self.packages)
+
+
+class LaunchState:
+    """Control-plane state of one in-flight co-execution (both backends).
+
+    Backends subclass this with their payload — the real engine adds the
+    kernel/arrays/handle, the simulator adds the modeled workload — but
+    every field the :class:`ExecutionLoop` reads or writes lives here,
+    which is what lets one loop implementation schedule both substrates.
+
+    ``wfq_cost_scale`` converts scheduler units to work-items for WFQ
+    credit (an engine-side fused batch schedules in members, each worth a
+    whole member index space); ``member_span`` is the inverse axis: how
+    many scheduler units one fused member occupies (1 for the engine's
+    member-unit schedulers, the per-member item count for the
+    simulator's item-unit schedulers).
+    """
+
+    __slots__ = ("id", "scheduler", "tenant", "weight", "t_submit",
+                 "fuse_key", "slots", "members", "member_span",
+                 "wfq_cost_scale", "done_pkgs", "outstanding", "failed",
+                 "finalized", "fused", "stats")
+
+    def __init__(self, launch_id: int, scheduler: Scheduler, *,
+                 tenant: Optional[str] = None, weight: float = 1.0,
+                 t_submit: float = 0.0):
+        self.id = launch_id
+        self.scheduler = scheduler
+        self.tenant = tenant if tenant is not None else f"launch-{launch_id}"
+        self.weight = float(weight)
+        self.t_submit = t_submit
+        self.fuse_key = None
+        self.slots = 1
+        self.members: Optional[list["LaunchState"]] = None
+        self.member_span = 1
+        self.wfq_cost_scale = 1
+        self.done_pkgs: list[Package] = []
+        self.outstanding = 0          # issued but not yet collected
+        self.failed = False
+        self.finalized = False
+        self.fused = False            # served through a coalesced batch
+        self.stats: Optional[LaunchStats] = None
+
+
+class Backend(abc.ABC):
+    """Execution substrate driven by the shared :class:`ExecutionLoop`.
+
+    The three abstract methods are the whole substrate contract —
+    wall-clock threads (``RealBackend``) and the virtual-clock DES
+    (``SimBackend``) differ *only* here plus the payload hooks below.
+    The loop sets :attr:`loop` to itself at construction so hooks can
+    reach shared helpers (e.g. :meth:`ExecutionLoop.member_spans`).
+    """
+
+    loop: "ExecutionLoop" = None
+
+    @abc.abstractmethod
+    def now(self) -> float:
+        """Current time: wall seconds (real) or virtual seconds (sim)."""
+
+    @abc.abstractmethod
+    def dispatch(self, unit: int, launch: LaunchState, pkg: Package) -> None:
+        """Run or model one package on ``unit``.
+
+        Args:
+            unit: index of the Coexecution Unit serving the package.
+            launch: the owning launch (payload fields are backend-typed).
+            pkg: the package to execute; the backend fills its
+                ``t_complete``/``t_collected`` timestamps (``t_issue`` is
+                stamped by :meth:`ExecutionLoop.pull`).
+        """
+
+    @abc.abstractmethod
+    def wait_next_event(self) -> None:
+        """Park until more work may exist (thread wait / event advance)."""
+
+    # -- payload hooks (overridden per substrate) ---------------------------
+    def fuse_payload(self, members: list[LaunchState],
+                     launch_id: int) -> LaunchState:
+        """Materialize the backend payload of a fused batch.
+
+        Args:
+            members: ≥2 staged fusion-eligible launches (same fuse key).
+            launch_id: id the loop assigned the fused entry.
+
+        Returns:
+            A fresh :class:`LaunchState` whose scheduler covers the
+            members' combined index space; tenant/weight/slots are
+            filled in by the loop afterwards.
+        """
+        raise NotImplementedError("this backend does not support fusion")
+
+    def launch_counters(self, launch: LaunchState) -> DataPlaneCounters:
+        """Snapshot one launch's data-plane accounting."""
+        return DataPlaneCounters()
+
+    def commit_member(self, fused: LaunchState, member: LaunchState,
+                      index: int, cover: Package) -> None:
+        """Land one fused member's output (engine: copy its row out)."""
+
+    def deliver(self, launch: LaunchState) -> None:
+        """Hand a finalized launch (stats populated) to the caller."""
+
+    def fail(self, launch: LaunchState, err: BaseException) -> None:
+        """Surface a launch failure (engine: resolve the handle future).
+
+        Args:
+            launch: the failing launch — for a fused batch the loop calls
+                this once per member, never for the synthetic batch entry.
+            err: the package error or cover-validation failure.
+        """
+        raise err
+
+    def refresh_speeds(self, launch: LaunchState) -> None:
+        """Feed measured throughput into an adaptive launch's scheduler."""
+
+    def on_package(self, launch: LaunchState, pkg: Package) -> None:
+        """Observe one collected package (sim: service-curve sampling)."""
+
+
+class ExecutionLoop:
+    """The one Commander loop both backends drive.
+
+    Owns the :class:`~repro.core.admission.AdmissionController` and every
+    control-plane decision between ``submit`` and launch completion. The
+    caller serializes all calls (the engine under its condition variable,
+    the simulator single-threaded) exactly as with the controller itself.
+    """
+
+    def __init__(self, backend: Backend, unit_names: Sequence[str],
+                 config: Optional[AdmissionConfig] = None, *,
+                 validate: bool = True):
+        """Build the loop over a backend and its named units.
+
+        Args:
+            backend: the execution substrate (real or simulated).
+            unit_names: one display name per Coexecution Unit — the keys
+                of every ``LaunchStats.unit_busy_s`` the loop produces.
+            config: admission configuration; default is plain FIFO.
+            validate: assert each launch's packages exactly tile its
+                index space at finalization.
+        """
+        self.backend = backend
+        backend.loop = self
+        self.unit_names = list(unit_names)
+        self.validate = validate
+        self._ids = itertools.count()
+        self.admission = AdmissionController(
+            len(self.unit_names), config,
+            fuse_materialize=self._materialize_fused,
+            speed_refresh=backend.refresh_speeds)
+
+    # -- identity / capacity -----------------------------------------------
+    def next_id(self) -> int:
+        """A fresh launch id (shared across plain and fused launches)."""
+        return next(self._ids)
+
+    def drained(self) -> bool:
+        """True when no admitted or staged work remains anywhere."""
+        return self.admission.drained()
+
+    # -- admission ---------------------------------------------------------
+    def admit(self, launch: LaunchState, now: Optional[float] = None) -> None:
+        """Admit one launch: activate it, or stage it for fusion.
+
+        Args:
+            launch: the launch to admit; capacity is the caller's concern
+                (the engine gates on ``max_inflight`` before admitting).
+            now: admission time; defaults to the backend clock.
+        """
+        self.admission.admit(launch, self.backend.now() if now is None
+                             else now)
+
+    # -- package flow ------------------------------------------------------
+    def pull(self, unit: int, *, now: Optional[float] = None,
+             force_flush: bool = False
+             ) -> Optional[tuple[LaunchState, Package]]:
+        """Pick the next package for an idle unit under the active policy.
+
+        Flushes ripened fusion groups first, then asks the admission
+        controller whose turn it is. The returned package is stamped with
+        ``t_issue`` and counted as outstanding on its launch.
+
+        Args:
+            unit: index of the idle Coexecution Unit.
+            now: current time; defaults to the backend clock.
+            force_flush: materialize staged fusion groups regardless of
+                window ripeness (engine shutdown; simulator once no
+                further submissions can arrive).
+
+        Returns:
+            ``(launch, package)``, or ``None`` when nothing can serve
+            this unit right now.
+        """
+        t = self.backend.now() if now is None else now
+        self.admission.flush(t, force=force_flush)
+        got = self.admission.next_work(unit)
+        if got is not None:
+            launch, pkg = got
+            launch.outstanding += 1
+            pkg.t_issue = t
+        return got
+
+    def complete(self, launch: LaunchState, pkg: Package,
+                 error: Optional[BaseException] = None) -> None:
+        """Record one served package; finalize the launch when drained.
+
+        Args:
+            launch: the package's launch.
+            pkg: the package the backend just executed/modeled.
+            error: the package's failure, if it had one — fails the whole
+                launch (first error wins).
+        """
+        launch.outstanding -= 1
+        if error is not None:
+            self.fail(launch, error)
+            return
+        if launch.failed:
+            return      # a sibling package already failed the launch
+        launch.done_pkgs.append(pkg)
+        self.backend.on_package(launch, pkg)
+        if launch.scheduler.done() and launch.outstanding == 0:
+            self._finalize(launch)
+
+    def fail(self, launch: LaunchState, err: BaseException) -> None:
+        """Abort a launch on its first error (idempotent).
+
+        Args:
+            launch: the launch (or fused batch) that failed.
+            err: the error to surface through the backend, once per
+                member for a fused batch.
+        """
+        if launch.failed or launch.finalized:
+            return
+        launch.failed = True
+        launch.finalized = True
+        self.admission.discard(launch)
+        for target in (launch.members if launch.members is not None
+                       else [launch]):
+            self.backend.fail(target, err)
+
+    # -- fusion ------------------------------------------------------------
+    def _materialize_fused(self, members: list[LaunchState]) -> LaunchState:
+        """Coalesce staged member launches into one schedulable entry.
+
+        The backend builds the payload (the engine stacks inputs and
+        vmaps the kernel; the simulator concatenates workloads); the
+        shared bookkeeping — id, tenant flow, combined weight, earliest
+        submit time — happens here so both substrates agree on how a
+        fused batch participates in admission.
+        """
+        fused = self.backend.fuse_payload(list(members), self.next_id())
+        fused.tenant = f"fused-{fused.id}"
+        fused.weight = sum(m.weight for m in members)
+        fused.t_submit = min(m.t_submit for m in members)
+        fused.members = list(members)
+        for m in members:
+            m.fused = True
+        return fused
+
+    @staticmethod
+    def member_spans(launch: LaunchState, pkg: Package):
+        """Attribute one fused package's work to the members it covers.
+
+        Args:
+            launch: a fused batch entry (``members`` is not ``None``).
+            pkg: one of its dispatched packages.
+
+        Yields:
+            ``(member, items)`` pairs — real work-items of each member
+            this package computed (used for tenant service curves).
+        """
+        span = launch.member_span
+        scale = launch.wfq_cost_scale
+        first = pkg.offset // span
+        last = -(-(pkg.offset + pkg.size) // span)
+        for mi in range(first, last):
+            lo = max(pkg.offset, mi * span)
+            hi = min(pkg.offset + pkg.size, (mi + 1) * span)
+            if hi > lo:
+                yield launch.members[mi], (hi - lo) * scale
+
+    # -- finalization ------------------------------------------------------
+    def _busy_of(self, pkgs: Sequence[Package]) -> dict[str, float]:
+        """Per-unit busy seconds derived from one launch's packages only."""
+        busy = {name: 0.0 for name in self.unit_names}
+        for p in pkgs:
+            busy[self.unit_names[p.unit]] += max(p.t_complete - p.t_issue,
+                                                 0.0)
+        return busy
+
+    def _finalize(self, launch: LaunchState) -> None:
+        """Resolve a launch whose last package was collected."""
+        if launch.finalized:
+            return
+        launch.finalized = True
+        self.admission.discard(launch)
+        # The launch ends when its last package is collected — taken from
+        # the package timeline, not the backend clock: on the sim backend
+        # the clock still reads the final package's *issue* time here
+        # (its modeled cost has not advanced the event queue yet), and
+        # the timeline is what both backends stamp identically.
+        end = max((p.t_collected for p in launch.done_pkgs),
+                  default=self.backend.now())
+        if self.validate:
+            try:
+                validate_cover(launch.done_pkgs, launch.scheduler.total)
+            except BaseException as e:
+                launch.failed = True
+                for target in (launch.members if launch.members is not None
+                               else [launch]):
+                    self.backend.fail(target, e)
+                return
+        if launch.members is not None:
+            self._demux_fused(launch, end)
+            return
+        launch.stats = LaunchStats(
+            total_s=end - launch.t_submit,
+            packages=list(launch.done_pkgs),
+            unit_busy_s=self._busy_of(launch.done_pkgs),
+            data=self.backend.launch_counters(launch))
+        self.backend.deliver(launch)
+
+    def _demux_fused(self, fused: LaunchState, end: float) -> None:
+        """Scatter a completed fused batch back to its member launches.
+
+        Each member gets its output committed through the backend and a
+        synthesized single-package stats record timed by the shared
+        dispatch that computed it. The batch's data-plane accounting is
+        attributed in remainder-distributed integer shares
+        (:meth:`~repro.core.dataplane.DataPlaneCounters.split`), so
+        summing member stats recovers the batch's real copy/dispatch
+        totals exactly even when ``counters % members != 0``.
+        """
+        pkgs = sorted(fused.done_pkgs, key=lambda p: p.offset)
+        shares = self.backend.launch_counters(fused).split(len(fused.members))
+        span = fused.member_span
+        for i, m in enumerate(fused.members):
+            start = i * span
+            cover = next(p for p in pkgs
+                         if p.offset <= start < p.offset + p.size)
+            mp = Package(rng=Range(0, m.scheduler.total), seq=0,
+                         unit=cover.unit)
+            mp.t_issue, mp.t_launch = cover.t_issue, cover.t_launch
+            mp.t_complete, mp.t_collected = cover.t_complete, cover.t_collected
+            busy = {name: 0.0 for name in self.unit_names}
+            members_in_cover = max(cover.size // span, 1)
+            busy[self.unit_names[cover.unit]] = max(
+                cover.t_complete - cover.t_issue, 0.0) / members_in_cover
+            self.backend.commit_member(fused, m, i, cover)
+            m.finalized = True
+            m.stats = LaunchStats(total_s=end - m.t_submit, packages=[mp],
+                                  unit_busy_s=busy, data=shares[i])
+            self.backend.deliver(m)

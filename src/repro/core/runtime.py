@@ -15,9 +15,8 @@ Python rendering of the paper's C++ API, configured by a declarative
     out_a, out_b = h1.result(), h2.result()
 
 The pre-spec kwarg surface — ``CoexecutorRuntime("hguided").config(
-units=..., dist=0.35, memory="usm")`` — still works but is a deprecation
-shim: it builds the equivalent spec internally and emits a
-:class:`DeprecationWarning`. New code should use
+units=..., dist=0.35, memory="usm")`` — was removed when its deprecation
+window closed (see docs/api.md); use
 :meth:`CoexecutorRuntime.configure` / :meth:`CoexecutorRuntime.from_spec`.
 
 `kernel(offset, *chunks) -> chunk_out` is a pure JAX function over a package
@@ -35,17 +34,14 @@ context manager) drains the engine and joins its worker threads.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 import jax
 
-from .admission import AdmissionConfig
 from .dataplane import CoexecKernel
 from .engine import CoexecEngine, LaunchHandle, LaunchStats
-from .memory import MemoryModel
 from .units import JaxUnit
 
 __all__ = ["CoexecutorRuntime", "LaunchStats", "counits_from_devices"]
@@ -148,70 +144,6 @@ class CoexecutorRuntime:
             self._units = list(units)
         self.shutdown()
         return self
-
-    # -- legacy configuration (paper: runtime.config(CounitSet, dist(0.35)))
-    def config(self, units: Optional[Sequence[JaxUnit]] = None,
-               *, dist: Optional[float | Sequence[float]] = None,
-               memory: str | MemoryModel = MemoryModel.USM,
-               admission: "str | AdmissionConfig" = "fifo",
-               fuse: Optional[bool] = None,
-               max_inflight: Optional[int] = None,
-               **scheduler_kw) -> "CoexecutorRuntime":
-        """Configure via kwargs (deprecated: build a ``CoexecSpec``).
-
-        Deprecated since the ``CoexecSpec`` API: this shim translates the
-        kwargs into the equivalent spec, emits a
-        :class:`DeprecationWarning`, and behaves exactly as before
-        (including resetting unspecified knobs to their defaults).
-
-        Args:
-            units: Coexecution Units (default: one per local jax device).
-            dist: computing-power hint — a scalar is the first unit's
-                share (the paper's ``dist(0.35)``), a sequence is per-unit.
-            memory: ``"usm"`` or ``"buffers"`` collection semantics.
-            admission: cross-launch policy name (``"fifo"`` / ``"wfq"``)
-                or a full :class:`~.admission.AdmissionConfig`.
-            fuse: coalesce small concurrent same-shaped launches.
-            max_inflight: backpressure cap on admitted launches.
-            **scheduler_kw: policy-specific scheduler options.
-
-        Returns:
-            The runtime itself, for chaining. Reconfiguring shuts down any
-            running engine (its units/memory/admission may have changed).
-        """
-        from repro.api.spec import (AdmissionSpec, CoexecSpec, MemorySpec,
-                                    SchedulerSpec, UnitsSpec)
-
-        warnings.warn(
-            "CoexecutorRuntime.config(...) is deprecated; build a "
-            "repro.api.CoexecSpec and use configure()/from_spec() instead",
-            DeprecationWarning, stacklevel=2)
-        if isinstance(dist, (int, float)):
-            dist_t: tuple[float, ...] = (float(dist),)
-        elif dist is not None:
-            dist_t = tuple(float(x) for x in dist)
-        else:
-            dist_t = ()
-        mem = memory.value if isinstance(memory, MemoryModel) \
-            else str(memory).lower()
-        if isinstance(admission, AdmissionConfig):
-            adm = AdmissionSpec.from_config(admission)
-        else:
-            adm = AdmissionSpec(policy=str(admission).lower())
-        if fuse is not None:
-            adm = adm.replace(fuse=bool(fuse))
-        if max_inflight is not None:
-            adm = adm.replace(max_inflight=int(max_inflight))
-        spec = CoexecSpec(
-            units=UnitsSpec(dist=dist_t),
-            scheduler=SchedulerSpec(policy=self.policy,
-                                    options=tuple(scheduler_kw.items())),
-            admission=adm,
-            memory=MemorySpec(model=mem),
-            workload=self._spec.workload,
-        )
-        self._units = list(units) if units is not None else None
-        return self.configure(spec)
 
     # -- engine lifecycle ---------------------------------------------------
     @property

@@ -107,17 +107,39 @@ class Scheduler(abc.ABC):
         """
         return max(self.granularity, self.total // max(1, 4 * self.num_units))
 
+    def _cap_size(self, size: int, max_items: Optional[int]) -> int:
+        """Apply a preemption cap: align *down* to granularity, floor g.
+
+        The cap comes from WFQ credit reclamation
+        (:class:`~.admission.AdmissionConfig` ``preempt``): a capped
+        package must not exceed the tenant's remaining credit by more
+        than one granularity-aligned chunk, so the cap rounds down
+        (whereas uncapped sizing rounds up to stay aligned).
+        """
+        if max_items is None:
+            return size
+        cap = max(int(max_items), 1)
+        if cap >= size:
+            return size
+        return max((cap // self.granularity) * self.granularity,
+                   self.granularity)
+
     # -- policy hook ------------------------------------------------------
     @abc.abstractmethod
     def _package_size(self, unit: int) -> int:
         """Size of the next package for `unit`, given current remaining."""
 
     # -- public API (called by the Commander loop) -------------------------
-    def next_package(self, unit: int) -> Optional[Package]:
+    def next_package(self, unit: int,
+                     max_items: Optional[int] = None) -> Optional[Package]:
         """Emit the next contiguous package for an idle unit.
 
         Args:
             unit: Coexecution Unit index requesting work.
+            max_items: optional preemption cap — the admission layer's
+                WFQ credit reclamation asks for at most this many items;
+                the emitted package may exceed it only up to granularity
+                alignment (never below one granularity chunk).
 
         Returns:
             A fresh :class:`~.package.Package`, or ``None`` when this
@@ -127,9 +149,11 @@ class Scheduler(abc.ABC):
             return None
         size = self._package_size(unit)
         size = max(1, min(size, self.remaining))
-        # align to granularity unless this is the tail
+        # align to granularity unless this is the tail; a preemption cap
+        # aligns down instead so the pull stays within credit
         if size < self.remaining:
             size = min(_align_up(size, self.granularity), self.remaining)
+        size = min(self._cap_size(size, max_items), self.remaining)
         pkg = Package(rng=Range(self._cursor, size), seq=self._seq, unit=unit)
         self._cursor += size
         self._seq += 1
@@ -158,7 +182,10 @@ class StaticScheduler(Scheduler):
         bounds = static_bounds(total, self.speeds, granularity)
         self._sizes = [bounds[i + 1] - bounds[i] for i in range(num_units)]
         self._bounds = bounds
-        self._served: set[int] = set()
+        # per-unit region cursor: uncapped serving emits the whole region
+        # as one package (the paper's semantics); a preemption cap may
+        # split it, in which case the remainder stays servable.
+        self._next = [bounds[i] for i in range(num_units)]
 
     def _package_size(self, unit: int) -> int:  # pragma: no cover - unused
         return self._sizes[unit]
@@ -167,27 +194,30 @@ class StaticScheduler(Scheduler):
         """Largest static share — one package is one unit's whole region."""
         return max(max(self._sizes), self.granularity)
 
-    def next_package(self, unit: int) -> Optional[Package]:
-        """Serve unit `unit` its precomputed region, exactly once.
+    def next_package(self, unit: int,
+                     max_items: Optional[int] = None) -> Optional[Package]:
+        """Serve unit `unit` (the rest of) its precomputed region.
 
         Args:
             unit: Coexecution Unit index requesting work.
+            max_items: optional preemption cap (splits the region; the
+                remainder is served by later pulls).
 
         Returns:
-            The unit's static share as one package, or ``None`` if the
-            unit was already served (or its share rounded to zero).
+            The unit's static share as one package (or the next capped
+            slice of it), or ``None`` once the unit's region is drained
+            (including shares that rounded to zero).
         """
-        # Each unit gets exactly its precomputed share, once. Unit i's
-        # region is [bounds[i], bounds[i+1]) — deterministic placement, as
-        # the paper's static split fixes regions at configure time.
-        if unit in self._served or self.done():
-            return None
-        self._served.add(unit)
-        size = self._sizes[unit]
-        if size == 0:
-            return None     # share rounded away (tiny problem, many units)
-        pkg = Package(rng=Range(self._bounds[unit], size), seq=self._seq,
-                      unit=unit)
+        # Unit i's region is [bounds[i], bounds[i+1]) — deterministic
+        # placement, as the paper's static split fixes regions at
+        # configure time.
+        lo, hi = self._next[unit], self._bounds[unit + 1]
+        if lo >= hi or self.done():
+            return None     # drained, or share rounded away
+        size = self._cap_size(hi - lo, max_items)
+        size = min(size, hi - lo)
+        pkg = Package(rng=Range(lo, size), seq=self._seq, unit=unit)
+        self._next[unit] = lo + size
         self._seq += 1
         self._cursor += size
         self.issued.append(pkg)
@@ -211,8 +241,15 @@ class DynamicScheduler(Scheduler):
         return self._pkg_size
 
     def quantum_hint(self) -> int:
-        """The fixed equal-package size."""
-        return max(self._pkg_size, self.granularity)
+        """The fixed equal-package size, granularity-aligned.
+
+        Aligned up exactly as :meth:`next_package` aligns the emitted
+        packages, so the WFQ credit quantum matches real package sizes —
+        which is also what keeps the engine's member-unit fused
+        schedulers and the DES's item-unit ones on the same credit scale.
+        """
+        return max(_align_up(self._pkg_size, self.granularity),
+                   self.granularity)
 
 
 class HGuidedScheduler(Scheduler):
@@ -338,11 +375,16 @@ class WorkStealingScheduler(Scheduler):
         self._deques[unit].extend(reversed(stolen))
         self.steals += 1
 
-    def next_package(self, unit: int) -> Optional[Package]:
+    def next_package(self, unit: int,
+                     max_items: Optional[int] = None) -> Optional[Package]:
         """Pop the unit's next chunk, stealing first if its deque is dry.
 
         Args:
             unit: Coexecution Unit index requesting work.
+            max_items: optional preemption cap — a larger front chunk is
+                split, its remainder staying at the front of this unit's
+                deque (locality preserved; only capped pulls ever split,
+                so the uncapped package count stays seed-deterministic).
 
         Returns:
             The next chunk as a package, or ``None`` only when every
@@ -354,6 +396,10 @@ class WorkStealingScheduler(Scheduler):
         if not dq:
             return None
         rng = dq.popleft()
+        take = self._cap_size(rng.size, max_items)
+        if take < rng.size:
+            dq.appendleft(Range(rng.offset + take, rng.size - take))
+            rng = Range(rng.offset, take)
         self._load[unit] -= rng.size
         pkg = Package(rng=rng, seq=self._seq, unit=unit)
         self._seq += 1
@@ -400,41 +446,3 @@ _register_builtin_policies()
 # Kept as a constant for backward compatibility; the registry is the source
 # of truth (repro.api.speed_hint_policies()).
 SPEED_HINT_POLICIES = ("static", "hguided", "work_stealing")
-
-
-def make_scheduler(policy: str, total: int, num_units: int, **kw) -> Scheduler:
-    """Build a load balancer by name (deprecated legacy entry point).
-
-    Deprecated since the ``CoexecSpec`` API: use
-    :func:`repro.api.build_scheduler` (same contract, registry-backed) or
-    ``SchedulerSpec.build`` / ``CoexecSpec.build_scheduler`` instead.
-    This shim delegates to the registry and emits a
-    :class:`DeprecationWarning`.
-
-    Example: ``make_scheduler("hguided", n, 2, speeds=[0.35, 0.65])``.
-
-    Args:
-        policy: registered policy name (case/hyphen-insensitive) or the
-            ``dynN`` shorthand (``dyn5`` → Dynamic with 5 packages).
-        total: size of the 1-D index space to split.
-        num_units: number of Coexecution Units the launch will run on.
-        **kw: policy-specific options (``speeds``, ``granularity``,
-            ``num_packages``, ``chunks_per_unit``, ...).
-
-    Returns:
-        A fresh one-shot :class:`Scheduler` for exactly one launch.
-
-    Raises:
-        KeyError: if ``policy`` names no registered scheduler.
-        ValueError: on an unknown option key (named, with the policy's
-            accepted fields) or invalid sizes/speeds.
-    """
-    import warnings
-
-    from repro.api.registry import build_scheduler
-
-    warnings.warn(
-        "make_scheduler() is deprecated; use repro.api.build_scheduler() "
-        "or a CoexecSpec (repro.api.CoexecSpec) instead",
-        DeprecationWarning, stacklevel=2)
-    return build_scheduler(policy, total, num_units, **kw)

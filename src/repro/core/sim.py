@@ -18,11 +18,16 @@ MatMul observation in §5.3).
 The output timeline feeds the paper's metrics: balance = T_gpu/T_cpu,
 speedup = T_fastest_alone / T_coexec, energy via core.energy.
 
-A multi-launch variant, :func:`simulate_multi`, replays *concurrent*
-co-executions through the same :class:`~.admission.AdmissionController`
-the real engine uses — FIFO vs weighted-fair queueing, launch fusion and
-per-launch latency are therefore testable deterministically in virtual
-time before they ever touch real threads.
+Control-plane decisions are NOT made here. Both :func:`simulate` (one
+launch) and :func:`simulate_multi` (concurrent launches) drive the exact
+:class:`~repro.core.exec.ExecutionLoop` the real engine's worker threads
+drive — admission pulls (FIFO, WFQ, preemptive pull-capping), launch
+fusion and its de-mux, finalization and counter attribution all run in
+that one shared implementation. This module contributes only the
+:class:`SimBackend` substrate: a virtual clock, the calibrated package
+cost model, and the event queue that advances time — so fairness, fusion
+and preemption behavior measured here is structurally the behavior of
+the real engine, in deterministic virtual time.
 """
 from __future__ import annotations
 
@@ -33,13 +38,13 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .admission import AdmissionController, coerce_admission
+from .admission import AdmissionConfig, coerce_admission
 from .dataplane import DataPlaneCounters
 from .energy import EnergyReport, PowerModel, energy_report
+from .exec import Backend, ExecutionLoop, LaunchState
 from .memory import MemoryCosts, MemoryModel
-from .package import Package, validate_cover
+from .package import Package
 from .scheduler import DynamicScheduler, Scheduler
-from .units import SimUnit
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,10 +81,12 @@ class SimResult:
     """Timeline + metrics of one simulated co-execution.
 
     ``data`` mirrors the real engine's per-launch
-    :class:`~.dataplane.DataPlaneCounters`: the modeled dispatch count
-    and the staging copies the memory model implies (one H2D and one D2H
-    per package under BUFFERS, none under USM), so spec-driven
-    real-vs-sim comparisons read the same counter surface.
+    :class:`~.dataplane.DataPlaneCounters`, and since both substrates now
+    share one control plane it is literally produced by the same
+    finalization code (the modeled dispatch count and the staging copies
+    the memory model implies: one H2D and one D2H per package under
+    BUFFERS, none under USM) — spec-driven real-vs-sim comparisons read
+    the same counter surface.
     """
 
     workload: str
@@ -123,7 +130,7 @@ def _count_package(counters: DataPlaneCounters, memory: MemoryModel,
         counters.d2h_bytes += int(out_bytes)
 
 
-def _item_costs(workload: Workload, unit: SimUnit) -> np.ndarray:
+def _item_costs(workload: Workload, unit: "SimUnit") -> np.ndarray:
     """Per-item seconds for `unit` (prefix-summed by the caller)."""
     if workload.weights is None:
         return None
@@ -138,7 +145,247 @@ def _item_costs(workload: Workload, unit: SimUnit) -> np.ndarray:
     return np.concatenate([[0.0], np.cumsum(w)])
 
 
-def simulate(scheduler: Optional[Scheduler], units: Sequence[SimUnit],
+class _SimLaunchState(LaunchState):
+    """Simulator payload of one launch: the modeled workload + counters."""
+
+    __slots__ = ("workload", "counters")
+
+    def __init__(self, launch_id: int, scheduler: Scheduler,
+                 workload: Workload, *, tenant: Optional[str] = None,
+                 weight: float = 1.0, t_submit: float = 0.0):
+        super().__init__(launch_id, scheduler, tenant=tenant, weight=weight,
+                         t_submit=t_submit)
+        self.workload = workload
+        self.counters = DataPlaneCounters()
+
+
+class SimBackend(Backend):
+    """Virtual-clock substrate: models package costs instead of running them.
+
+    Owns the event queue (`(time, tiebreak, unit)` heap), the calibrated
+    cost model (launch/collect/contention via :class:`MemoryCosts`), the
+    per-unit busy/finish timelines and the tenant service curve. It makes
+    no scheduling decisions — :meth:`run` asks the shared
+    :class:`~repro.core.exec.ExecutionLoop` for every package exactly as
+    an engine worker thread does, just in virtual time.
+    """
+
+    def __init__(self, units: Sequence["SimUnit"], memory: MemoryModel,
+                 costs: MemoryCosts):
+        self.units = list(units)
+        self.memory = memory
+        self.costs = costs
+        n = len(self.units)
+        self.t = 0.0
+        self.counters = DataPlaneCounters()      # run-wide aggregation
+        self.busy_until = [0.0] * n              # compute-busy horizon
+        self.collector_free = [0.0] * n          # per-unit collection thread
+        self.unit_finish = {u.name: 0.0 for u in self.units}
+        self.unit_busy = {u.name: 0.0 for u in self.units}
+        self.host_busy = 0.0
+        self.last_collect = 0.0
+        # (t_complete, tenant, items) per dispatched package
+        self.service: list[tuple[float, str, int]] = []
+        self.delivered: list[_SimLaunchState] = []
+        self._prefix: dict[tuple[int, str], Optional[np.ndarray]] = {}
+
+    # -- substrate contract -------------------------------------------------
+    def now(self) -> float:
+        """The virtual clock (seconds since simulation start)."""
+        return self.t
+
+    def dispatch(self, unit: int, launch: _SimLaunchState,
+                 pkg: Package) -> None:
+        """Model one package's launch, compute and collection in virtual time.
+
+        Args:
+            unit: index of the serving simulated unit.
+            launch: the owning launch (its ``workload`` prices the items).
+            pkg: the package; its full timeline
+                (``t_launch``/``t_complete``/``t_collected``) is filled.
+        """
+        wl = launch.workload
+        u = self.units[unit]
+        n = len(self.units)
+        in_bytes = pkg.size * wl.bytes_in_per_item
+        out_bytes = pkg.size * wl.bytes_out_per_item
+        _count_package(self.counters, self.memory, in_bytes, out_bytes)
+        _count_package(launch.counters, self.memory, in_bytes, out_bytes)
+
+        # package emission on this unit's manager thread
+        launch_cost = self.costs.launch_cost(self.memory, int(in_bytes))
+        self.host_busy += launch_cost
+        pkg.t_launch = pkg.t_issue + launch_cost
+
+        # compute; LLC contention applies while any *other* unit is busy
+        pfx = self._prefix_for(wl, u)
+        if pfx is None:
+            base = pkg.size / u.speed
+        else:
+            base = float(pfx[pkg.offset + pkg.size] - pfx[pkg.offset]) \
+                / u.speed
+        others_busy = any(self.busy_until[j] > pkg.t_launch
+                          for j in range(n) if j != unit)
+        factor = 1.0
+        if others_busy and wl.contention_scale > 0.0:
+            pen = self.costs.contention_penalty(wl.working_set_bytes)
+            factor = 1.0 + wl.contention_scale * (pen - 1.0)
+        compute_end = pkg.t_launch + base * factor
+        self.busy_until[unit] = compute_end
+        self.unit_busy[u.name] += compute_end - pkg.t_launch
+        self.unit_finish[u.name] = max(self.unit_finish[u.name], compute_end)
+        pkg.t_complete = compute_end
+
+        # collection on the unit's manager thread; overlaps the unit's next
+        # compute (paper: "overlapping computation and communication") but
+        # collections of one unit serialize among themselves.
+        collect_start = max(compute_end, self.collector_free[unit])
+        collect_cost = self.costs.collect_cost(self.memory, int(out_bytes))
+        self.collector_free[unit] = collect_start + collect_cost
+        self.host_busy += collect_cost
+        pkg.t_collected = self.collector_free[unit]
+        self.last_collect = max(self.last_collect, pkg.t_collected)
+
+    def wait_next_event(self) -> None:
+        """No-op: :meth:`run` advances virtual time through its heap."""
+
+    # -- payload hooks ------------------------------------------------------
+    def fuse_payload(self, members: list[_SimLaunchState],
+                     launch_id: int) -> _SimLaunchState:
+        """Lay member workloads end to end into one fused workload.
+
+        The fused index space is the members' item spaces concatenated
+        (weights tiled); its scheduler hands out member-aligned packages,
+        one per unit, so a batch of N tiny launches costs ~`num_units`
+        dispatches. One scheduler unit is one work-item, so
+        ``member_span`` (items per member) drives the shared de-mux.
+
+        Args:
+            members: the staged same-shaped launches to coalesce.
+            launch_id: id assigned by the loop.
+
+        Returns:
+            The fused sim launch (tenant/weight set by the loop).
+        """
+        base = members[0].workload
+        k, T = len(members), base.total
+        if any(m.workload.weights is not None for m in members):
+            weights = np.concatenate(
+                [m.workload.weights if m.workload.weights is not None
+                 else np.ones(T) for m in members])
+        else:
+            weights = None
+        wl = Workload(
+            name=f"fused:{base.name}x{k}", total=k * T,
+            bytes_in_per_item=base.bytes_in_per_item,
+            bytes_out_per_item=base.bytes_out_per_item,
+            working_set_bytes=max(m.workload.working_set_bytes
+                                  for m in members),
+            weights=weights, contention_scale=base.contention_scale)
+        n_units = len(self.units)
+        sched = DynamicScheduler(k * T, n_units,
+                                 num_packages=min(k, n_units), granularity=T)
+        fused = _SimLaunchState(launch_id, sched, wl)
+        fused.member_span = T
+        fused.wfq_cost_scale = 1
+        return fused
+
+    def launch_counters(self, launch: _SimLaunchState) -> DataPlaneCounters:
+        """The launch's modeled data-plane accounting."""
+        return launch.counters.snapshot()
+
+    def on_package(self, launch: _SimLaunchState, pkg: Package) -> None:
+        """Record the tenant service curve (fused work credits members)."""
+        if launch.members is None:
+            self.service.append((pkg.t_complete, launch.tenant, pkg.size))
+        else:
+            for m, items in ExecutionLoop.member_spans(launch, pkg):
+                self.service.append((pkg.t_complete, m.tenant, items))
+
+    def deliver(self, launch: _SimLaunchState) -> None:
+        """Collect a finalized launch (stats already populated)."""
+        self.delivered.append(launch)
+
+    # -- the event pump -----------------------------------------------------
+    def _prefix_for(self, wl: Workload, u: "SimUnit") -> Optional[np.ndarray]:
+        key = (id(wl), u.name)
+        if key not in self._prefix:
+            self._prefix[key] = _item_costs(wl, u)
+        return self._prefix[key]
+
+    def run(self, loop: ExecutionLoop,
+            entries: Sequence[_SimLaunchState]) -> None:
+        """Advance virtual time until every admitted launch finalizes.
+
+        Each Coexecution Unit has its own management thread (paper Fig.
+        2a): launch/collect costs are paid on the unit's own timeline,
+        not on a global serial host. Units couple only through the shared
+        loop (package order under the admission policy) and the
+        shared-LLC contention factor; host-side management seconds are
+        accumulated for the energy model (the CPU does double duty as
+        host — §5.1). Every scheduling decision — whose package an idle
+        unit serves, fusion staging/ripening, finalization — is a call
+        into ``loop``, identical to an engine worker thread.
+
+        Args:
+            loop: the shared control plane built over this backend.
+            entries: launches to admit, each at its ``t_submit``.
+        """
+        pending = collections.deque(sorted(entries,
+                                           key=lambda e: e.t_submit))
+        evq: list[tuple[float, int, int]] = []  # (t_idle, tiebreak, unit)
+        tie = 0
+        for i, u in enumerate(self.units):
+            heapq.heappush(evq, (u.setup_s, tie, i))
+            tie += 1
+
+        while evq:
+            t, _, i = heapq.heappop(evq)
+            self.t = t
+            while pending and pending[0].t_submit <= t + 1e-12:
+                entry = pending.popleft()
+                loop.admit(entry, now=entry.t_submit)
+            work = loop.pull(i, now=t, force_flush=not pending)
+            if work is None:
+                # nothing for this unit *now*: park until the next
+                # submission or fusion-window ripening, else retire.
+                wake = pending[0].t_submit if pending else None
+                ripen = loop.admission.next_ripen_in(t)
+                if ripen is not None:
+                    t_r = t + max(ripen, 1e-9)
+                    wake = t_r if wake is None else min(wake, t_r)
+                if wake is not None:
+                    heapq.heappush(evq, (max(wake, t + 1e-9), tie, i))
+                    tie += 1
+                continue
+            entry, pkg = work
+            self.dispatch(i, entry, pkg)
+            loop.complete(entry, pkg)
+            # the unit may request its next package as soon as compute ends
+            heapq.heappush(evq, (pkg.t_complete, tie, i))
+            tie += 1
+
+
+def _run_sim(entries: Sequence[_SimLaunchState], units: Sequence["SimUnit"],
+             cfg: AdmissionConfig, memory: MemoryModel, costs: MemoryCosts,
+             validate: bool) -> tuple[SimBackend, ExecutionLoop]:
+    """Drive the shared loop over a SimBackend until the entries finish."""
+    backend = SimBackend(units, memory, costs)
+    loop = ExecutionLoop(backend, [u.name for u in units], cfg,
+                         validate=validate)
+    backend.run(loop, entries)
+    if len(backend.delivered) != len(entries):
+        stuck = sorted(e.tenant for e in entries
+                       if e.stats is None and not e.failed)
+        raise RuntimeError(
+            f"simulation finished {len(backend.delivered)}/{len(entries)} "
+            f"launches; admission wedged (undrained tenants: "
+            f"{stuck or 'in-controller'}) — this is a scheduling bug, "
+            f"not a caller error")
+    return backend, loop
+
+
+def simulate(scheduler: Optional[Scheduler], units: Sequence["SimUnit"],
              workload: Workload, *,
              memory: Optional[MemoryModel] = None,
              costs: MemoryCosts = MemoryCosts(),
@@ -177,96 +424,26 @@ def simulate(scheduler: Optional[Scheduler], units: Sequence[SimUnit],
     if scheduler.num_units != n:
         raise ValueError("scheduler/unit count mismatch")
 
-    prefix = {u.name: _item_costs(workload, u) for u in units}
-
-    # Each Coexecution Unit has its own management thread (paper Fig. 2a):
-    # launch/collect costs are paid on the unit's own timeline, not on a
-    # global serial host. Units couple only through the scheduler (on-demand
-    # package order) and the shared-LLC contention factor. The host-side
-    # management seconds are accumulated for the energy model (the CPU does
-    # double duty as host — §5.1).
-    evq: list[tuple[float, int, int]] = []  # (t_idle, tiebreak, unit)
-    tie = 0
-    for i, u in enumerate(units):
-        heapq.heappush(evq, (u.setup_s, tie, i))
-        tie += 1
-
-    host_busy = 0.0
-    counters = DataPlaneCounters()
-    busy_until = [0.0] * n            # compute-busy horizon per unit
-    collector_free = [0.0] * n        # per-unit collection thread horizon
-    unit_finish = {u.name: 0.0 for u in units}
-    unit_busy = {u.name: 0.0 for u in units}
-    packages: list[Package] = []
-    last_collect = 0.0
-
-    while evq:
-        t, _, i = heapq.heappop(evq)
-        u = units[i]
-        pkg = scheduler.next_package(i)
-        if pkg is None:
-            continue  # unit retires from the Commander loop
-        pkg.t_issue = t
-        in_bytes = pkg.size * workload.bytes_in_per_item
-        out_bytes = pkg.size * workload.bytes_out_per_item
-        _count_package(counters, memory, in_bytes, out_bytes)
-
-        # package emission on this unit's manager thread
-        launch_cost = costs.launch_cost(memory, int(in_bytes))
-        host_busy += launch_cost
-        pkg.t_launch = t + launch_cost
-
-        # compute; LLC contention applies while any *other* unit is busy
-        pfx = prefix[u.name]
-        if pfx is None:
-            base = pkg.size / u.speed
-        else:
-            base = float(pfx[pkg.offset + pkg.size] - pfx[pkg.offset]) / u.speed
-        others_busy = any(busy_until[j] > pkg.t_launch
-                          for j in range(n) if j != i)
-        factor = 1.0
-        if others_busy and workload.contention_scale > 0.0:
-            pen = costs.contention_penalty(workload.working_set_bytes)
-            factor = 1.0 + workload.contention_scale * (pen - 1.0)
-        compute_end = pkg.t_launch + base * factor
-        busy_until[i] = compute_end
-        unit_busy[u.name] += compute_end - pkg.t_launch
-        unit_finish[u.name] = max(unit_finish[u.name], compute_end)
-        pkg.t_complete = compute_end
-
-        # collection on the unit's manager thread; overlaps the unit's next
-        # compute (paper: "overlapping computation and communication") but
-        # collections of one unit serialize among themselves.
-        collect_start = max(compute_end, collector_free[i])
-        collect_cost = costs.collect_cost(memory, int(out_bytes))
-        collector_free[i] = collect_start + collect_cost
-        host_busy += collect_cost
-        pkg.t_collected = collector_free[i]
-        last_collect = max(last_collect, pkg.t_collected)
-
-        packages.append(pkg)
-        # the unit may request its next package as soon as compute ends
-        heapq.heappush(evq, (compute_end, tie, i))
-        tie += 1
-
-    if validate:
-        validate_cover(packages, workload.total)
-
+    entry = _SimLaunchState(0, scheduler, workload,
+                            tenant=f"sim:{workload.name}")
+    backend, _ = _run_sim([entry], units, AdmissionConfig(), memory, costs,
+                          validate)
+    stats = entry.stats
     return SimResult(
         workload=workload.name,
         policy=scheduler.name,
         memory=memory.value,
-        total_s=last_collect,
-        unit_finish_s=unit_finish,
-        unit_busy_s=unit_busy,
-        host_busy_s=host_busy,
-        packages=packages,
-        num_packages=len(packages),
-        data=counters,
+        total_s=backend.last_collect,
+        unit_finish_s=backend.unit_finish,
+        unit_busy_s=backend.unit_busy,
+        host_busy_s=backend.host_busy,
+        packages=stats.packages,
+        num_packages=stats.num_packages,
+        data=stats.data,
     )
 
 
-def solo_run(unit: SimUnit, workload: Workload, *,
+def solo_run(unit: "SimUnit", workload: Workload, *,
              memory: MemoryModel = MemoryModel.USM,
              costs: MemoryCosts = MemoryCosts()) -> SimResult:
     """Baseline: the whole problem on one device, one package."""
@@ -310,6 +487,8 @@ class LaunchSimResult:
     items: int
     num_packages: int          # real dispatches that served this launch
     fused: bool = False        # served through a coalesced batch
+    data: DataPlaneCounters = dataclasses.field(
+        default_factory=DataPlaneCounters)
 
     @property
     def latency_s(self) -> float:
@@ -324,7 +503,10 @@ class MultiSimResult:
     ``data`` aggregates the modeled data-plane accounting across every
     dispatched package (same surface as the real engine's per-launch
     counters: staging copies are zero under USM, one H2D + one D2H per
-    package under BUFFERS).
+    package under BUFFERS); each :class:`LaunchSimResult` additionally
+    carries its own share, produced by the shared loop's finalization —
+    for fused batches the remainder-distributed integer split, so
+    per-launch ``data`` sums back to the batch totals exactly.
     """
 
     total_s: float
@@ -358,70 +540,35 @@ class MultiSimResult:
                 served[tenant] = served.get(tenant, 0) + items
         return served
 
+    def fairness_curve(self, *, samples: int = 9) -> list[float]:
+        """Time-sampled Jain fairness of per-tenant service.
 
-class _SimLaunch:
-    """Controller-facing entry for one simulated launch (or fused batch)."""
+        Args:
+            samples: evenly spaced horizons to sample across the run.
 
-    __slots__ = ("workload", "scheduler", "tenant", "weight", "t_submit",
-                 "fuse_key", "slots", "members", "done_pkgs", "failed")
+        Returns:
+            One Jain index per horizon (see
+            :func:`~repro.core.admission.service_fairness_curve`) — the
+            curve preemptive pull-capping tightens.
+        """
+        from .admission import service_fairness_curve
 
-    def __init__(self, workload: Workload, scheduler: Scheduler,
-                 tenant: str, weight: float, t_submit: float, fuse_key):
-        self.workload = workload
-        self.scheduler = scheduler
-        self.tenant = tenant
-        self.weight = weight
-        self.t_submit = t_submit
-        self.fuse_key = fuse_key
-        self.slots = 1
-        self.members: Optional[list["_SimLaunch"]] = None
-        self.done_pkgs: list[Package] = []
-        self.failed = False
+        tenants = sorted({r.tenant for r in self.launches})
+        return service_fairness_curve(self.service, tenants,
+                                      samples=samples)
 
 
-def _fuse_sim_launches(members: list[_SimLaunch],
-                       num_units: int) -> _SimLaunch:
-    """Coalesce member sim-launches into one batch entry.
-
-    The fused workload is the members' index spaces laid end to end
-    (weights tiled); its scheduler hands out member-aligned packages, one
-    per unit, so a batch of N tiny launches costs ~`num_units` dispatches.
-    """
-    base = members[0].workload
-    k, T = len(members), base.total
-    if any(m.workload.weights is not None for m in members):
-        weights = np.concatenate(
-            [m.workload.weights if m.workload.weights is not None
-             else np.ones(T) for m in members])
-    else:
-        weights = None
-    wl = Workload(
-        name=f"fused:{base.name}x{k}", total=k * T,
-        bytes_in_per_item=base.bytes_in_per_item,
-        bytes_out_per_item=base.bytes_out_per_item,
-        working_set_bytes=max(m.workload.working_set_bytes for m in members),
-        weights=weights, contention_scale=base.contention_scale)
-    sched = DynamicScheduler(k * T, num_units,
-                             num_packages=min(k, num_units), granularity=T)
-    fused = _SimLaunch(wl, sched, tenant=f"fused:{base.name}",
-                       weight=sum(m.weight for m in members),
-                       t_submit=min(m.t_submit for m in members),
-                       fuse_key=None)
-    fused.members = members
-    return fused
-
-
-def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
+def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence["SimUnit"], *,
                    admission=None,
                    memory: Optional[MemoryModel] = None,
                    costs: MemoryCosts = MemoryCosts(),
                    validate: bool = True, spec=None) -> MultiSimResult:
-    """Run concurrent co-executions through the admission layer.
+    """Run concurrent co-executions through the shared control plane.
 
-    The exact :class:`~.admission.AdmissionController` the real engine
+    The exact :class:`~repro.core.exec.ExecutionLoop` the real engine
     uses arbitrates which launch each idle unit serves — so FIFO vs WFQ
-    fairness, launch fusion and backpressure-free latency are measured
-    deterministically.
+    fairness (with or without preemptive pull-capping), launch fusion and
+    backpressure-free latency are measured deterministically.
 
     Args:
         specs: one :class:`LaunchSpec` per launch; schedulers must be
@@ -442,7 +589,8 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
         service curve, and dispatch/fusion counters.
 
     Raises:
-        ValueError: on a scheduler/unit-count mismatch.
+        ValueError: on a scheduler/unit-count mismatch or non-positive
+            tenant weight.
     """
     n = len(units)
     if memory is None:
@@ -462,150 +610,29 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence[SimUnit], *,
         return (wl.name, wl.total, wl.bytes_in_per_item,
                 wl.bytes_out_per_item)
 
-    controller = AdmissionController(
-        n, cfg, fuse_materialize=lambda ms: _fuse_sim_launches(ms, n))
-    pending = collections.deque(sorted(
-        (_SimLaunch(s.workload, s.scheduler,
-                    s.tenant or f"launch-{i}", s.weight, s.t_submit,
-                    fuse_key(s))
-         for i, s in enumerate(specs)),
-        key=lambda e: e.t_submit))
+    entries = []
+    for i, ls in enumerate(specs):
+        entry = _SimLaunchState(i, ls.scheduler, ls.workload,
+                                tenant=ls.tenant or f"launch-{i}",
+                                weight=ls.weight, t_submit=ls.t_submit)
+        entry.fuse_key = fuse_key(ls)
+        entries.append(entry)
 
-    prefix: dict[tuple[int, str], Optional[np.ndarray]] = {}
+    backend, loop = _run_sim(entries, units, cfg, memory, costs, validate)
 
-    def prefix_for(wl: Workload, u: SimUnit) -> Optional[np.ndarray]:
-        key = (id(wl), u.name)
-        if key not in prefix:
-            prefix[key] = _item_costs(wl, u)
-        return prefix[key]
-
-    evq: list[tuple[float, int, int]] = []
-    tie = 0
-    for i, u in enumerate(units):
-        heapq.heappush(evq, (u.setup_s, tie, i))
-        tie += 1
-
-    host_busy = 0.0
-    counters = DataPlaneCounters()
-    busy_until = [0.0] * n
-    collector_free = [0.0] * n
-    service: list[tuple[float, str, int]] = []
-    results: list[LaunchSimResult] = []
-    last_collect = 0.0
-
-    def finalize(entry: _SimLaunch) -> None:
-        controller.discard(entry)
-        if validate:
-            validate_cover(entry.done_pkgs, entry.scheduler.total)
-        if entry.members is None:
-            results.append(LaunchSimResult(
-                tenant=entry.tenant, workload=entry.workload.name,
-                t_submit=entry.t_submit,
-                t_finish=max(p.t_collected for p in entry.done_pkgs),
-                items=entry.scheduler.total,
-                num_packages=len(entry.done_pkgs)))
-            return
-        # de-multiplex a fused batch: member i occupies [i*T, (i+1)*T)
-        T = entry.members[0].workload.total
-        for i, m in enumerate(entry.members):
-            overl = [p for p in entry.done_pkgs
-                     if p.offset < (i + 1) * T and p.offset + p.size > i * T]
-            results.append(LaunchSimResult(
-                tenant=m.tenant, workload=m.workload.name,
-                t_submit=m.t_submit,
-                t_finish=max(p.t_collected for p in overl),
-                items=T, num_packages=len(overl), fused=True))
-
-    while evq:
-        t, _, i = heapq.heappop(evq)
-        while pending and pending[0].t_submit <= t + 1e-12:
-            entry = pending.popleft()
-            controller.admit(entry, now=entry.t_submit)
-        controller.flush(t, force=not pending)
-        got = controller.next_work(i)
-        if got is None:
-            # nothing for this unit *now*: park until the next submission
-            # or fusion-window ripening, else retire from the loop.
-            wake = pending[0].t_submit if pending else None
-            ripen = controller.next_ripen_in(t)
-            if ripen is not None:
-                t_r = t + max(ripen, 1e-9)
-                wake = t_r if wake is None else min(wake, t_r)
-            if wake is not None:
-                heapq.heappush(evq, (max(wake, t + 1e-9), tie, i))
-                tie += 1
-            continue
-        entry, pkg = got
-        wl = entry.workload
-        u = units[i]
-        pkg.t_issue = t
-        in_bytes = pkg.size * wl.bytes_in_per_item
-        out_bytes = pkg.size * wl.bytes_out_per_item
-        _count_package(counters, memory, in_bytes, out_bytes)
-
-        launch_cost = costs.launch_cost(memory, int(in_bytes))
-        host_busy += launch_cost
-        pkg.t_launch = t + launch_cost
-
-        pfx = prefix_for(wl, u)
-        if pfx is None:
-            base = pkg.size / u.speed
-        else:
-            base = float(pfx[pkg.offset + pkg.size] - pfx[pkg.offset]) / u.speed
-        others_busy = any(busy_until[j] > pkg.t_launch
-                          for j in range(n) if j != i)
-        factor = 1.0
-        if others_busy and wl.contention_scale > 0.0:
-            pen = costs.contention_penalty(wl.working_set_bytes)
-            factor = 1.0 + wl.contention_scale * (pen - 1.0)
-        compute_end = pkg.t_launch + base * factor
-        busy_until[i] = compute_end
-        pkg.t_complete = compute_end
-
-        collect_start = max(compute_end, collector_free[i])
-        collect_cost = costs.collect_cost(memory, int(out_bytes))
-        collector_free[i] = collect_start + collect_cost
-        host_busy += collect_cost
-        pkg.t_collected = collector_free[i]
-        last_collect = max(last_collect, pkg.t_collected)
-
-        entry.done_pkgs.append(pkg)
-        if entry.members is None:
-            service.append((pkg.t_complete, entry.tenant, pkg.size))
-        else:
-            # attribute a fused package's items to the member tenants it
-            # covers, so tenant_service_until keeps per-tenant meaning
-            mt = entry.members[0].workload.total
-            for mi in range(pkg.offset // mt,
-                            -(-(pkg.offset + pkg.size) // mt)):
-                lo = max(pkg.offset, mi * mt)
-                hi = min(pkg.offset + pkg.size, (mi + 1) * mt)
-                if hi > lo:
-                    service.append((pkg.t_complete,
-                                    entry.members[mi].tenant, hi - lo))
-        if entry.scheduler.done():
-            # every package of this entry has times assigned already (the
-            # DES schedules compute at issue), so it can finalize now.
-            finalize(entry)
-        heapq.heappush(evq, (compute_end, tie, i))
-        tie += 1
-
-    expected_launches = len(specs)
-    if len(results) != expected_launches:
-        stuck = [e.tenant for e in pending]
-        raise RuntimeError(
-            f"simulate_multi finished {len(results)}/{expected_launches} "
-            f"launches; admission wedged (undrained tenants: "
-            f"{stuck or 'in-controller'}) — this is a scheduling bug, "
-            f"not a caller error")
+    results = [LaunchSimResult(
+        tenant=e.tenant, workload=e.workload.name, t_submit=e.t_submit,
+        t_finish=max(p.t_collected for p in e.stats.packages),
+        items=e.scheduler.total, num_packages=e.stats.num_packages,
+        fused=e.fused, data=e.stats.data) for e in backend.delivered]
 
     return MultiSimResult(
-        total_s=last_collect,
+        total_s=backend.last_collect,
         launches=results,
-        dispatched_packages=controller.dispatched,
-        fused_batches=controller.fused_batches,
-        fused_members=controller.fused_members,
-        host_busy_s=host_busy,
-        service=service,
-        data=counters,
+        dispatched_packages=loop.admission.dispatched,
+        fused_batches=loop.admission.fused_batches,
+        fused_members=loop.admission.fused_members,
+        host_busy_s=backend.host_busy,
+        service=backend.service,
+        data=backend.counters,
     )

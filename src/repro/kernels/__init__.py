@@ -5,8 +5,8 @@ implementation, `ref.py` the pure-jnp oracle, `ops.py` the jit'd wrapper
 with impl dispatch plus the typed co-executable kernels
 (:class:`~repro.core.dataplane.CoexecKernel`) registered in the
 :mod:`repro.api.registry` kernel registry. Resolve them with
-``repro.api.build_kernel(name)``; ``package_kernel`` is a deprecation
-shim over the same registry.
+``repro.api.build_kernel(name)`` (the ``package_kernel`` shim was
+removed when its deprecation window closed).
 """
 from . import ref
 from .flash_attention import flash_attention
@@ -15,8 +15,7 @@ from .linear_attention import linear_attention
 from .mandelbrot import mandelbrot
 from .matmul import matmul
 from .ops import (flash_attention_op, gaussian_op, linear_attention_op,
-                  mandelbrot_op, matmul_op, package_kernel, rap_op,
-                  raytrace_op, taylor_op)
+                  mandelbrot_op, matmul_op, rap_op, raytrace_op, taylor_op)
 from .rap import rap
 from .raytrace import demo_spheres, raytrace
 from .taylor import taylor_sin
@@ -24,6 +23,6 @@ from .taylor import taylor_sin
 __all__ = [
     "demo_spheres", "flash_attention", "flash_attention_op", "gaussian_blur",
     "gaussian_op", "linear_attention", "linear_attention_op", "mandelbrot",
-    "mandelbrot_op", "matmul", "matmul_op", "package_kernel", "rap",
+    "mandelbrot_op", "matmul", "matmul_op", "rap",
     "rap_op", "raytrace", "raytrace_op", "ref", "taylor_op", "taylor_sin",
 ]

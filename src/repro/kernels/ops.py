@@ -19,8 +19,9 @@ Two surfaces live here:
 Each registration also carries a demo-input generator
 (``repro.api.kernel_demo_inputs``) so the serving benchmarks and the
 USM-vs-BUFFERS parity tests can drive every registered kernel without
-per-kernel glue. The pre-registry ``package_kernel(name)`` if-chain is
-gone; the name survives only as a deprecation shim over the registry.
+per-kernel glue. The pre-registry ``package_kernel(name)`` if-chain (and
+later its deprecation shim) is gone: the registry is the only entry
+point.
 """
 from __future__ import annotations
 
@@ -242,34 +243,3 @@ def _register_builtin_kernels() -> None:
 
 
 _register_builtin_kernels()
-
-
-def package_kernel(name: str) -> CoexecKernel:
-    """Resolve a kernel by name (deprecated legacy entry point).
-
-    Deprecated since the kernel registry: use
-    :func:`repro.api.build_kernel` (same contract, plus option
-    validation). This shim delegates to the registry and emits a
-    :class:`DeprecationWarning`. The returned typed kernel is callable
-    with the old package signature ``fn(offset, *chunks)``, so existing
-    call sites keep working; note the Gaussian kernel now takes the image
-    itself (haloed split) instead of five pre-shifted copies.
-
-    Args:
-        name: registered kernel name.
-
-    Returns:
-        The registered :class:`~repro.core.dataplane.CoexecKernel`.
-
-    Raises:
-        KeyError: unknown kernel name.
-    """
-    import warnings
-
-    from repro.api.registry import build_kernel
-
-    warnings.warn(
-        "package_kernel() is deprecated; resolve kernels through the "
-        "registry (repro.api.build_kernel) instead",
-        DeprecationWarning, stacklevel=2)
-    return build_kernel(name)

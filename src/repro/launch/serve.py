@@ -21,9 +21,13 @@ the workload's same-named kernel), and `--memory {usm,buffers}` selects
 the engine's real data plane — rows report its dispatch and
 staging-copy counters. `--policy all` sweeps every registered policy;
 with `--coexec sim` the same sweep runs on the DES instead of real
-threads; `--admission wfq` / `--fuse` / `--tenants N` switch the sim
-path to the multi-tenant DES sweep with p50/p99 latency and Jain
-fairness per row.
+threads; `--admission wfq` / `--fuse` / `--preempt` / `--tenants N`
+switch the sim path to the multi-tenant DES sweep with p50/p99 latency,
+Jain fairness and the time-sampled fairness curve per row. Both
+substrates drive the one shared control plane
+(`repro.core.exec.ExecutionLoop`), so `--preempt` — WFQ reclaiming
+credit mid-launch by capping per-pull package sizes — behaves
+identically on `--coexec real` and `--coexec sim`.
 
     PYTHONPATH=src python -m repro.launch.serve --coexec real \
         --policy all --requests 16 --concurrent 8 --n 65536 \
@@ -86,7 +90,7 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
     dispatch/copy counters are aggregated into each row.
     """
     from repro.api import kernel_demo_inputs
-    from ..core import CoexecutorRuntime
+    from ..core import CoexecutorRuntime, service_fairness_curve
 
     if spec is None:
         spec = default_serve_spec()
@@ -107,26 +111,41 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
             t0 = time.perf_counter()
             served, pkgs, lats, inflight = 0, 0, [], []
             h2d, d2h, dispatches = 0, 0, 0
+            service = []        # (t_complete, tenant, items) per package
 
-            def _reap(h, t_sub):
+            def _reap(h, t_sub, tenant):
                 nonlocal served, pkgs, h2d, d2h, dispatches
                 h.result()
                 served, pkgs = served + 1, pkgs + h.stats.num_packages
                 h2d += h.stats.data.h2d_copies
                 d2h += h.stats.data.d2h_copies
                 dispatches += h.stats.data.dispatches
+                service.extend((p.t_complete, tenant, p.size)
+                               for p in h.stats.packages)
                 lats.append(time.perf_counter() - t_sub)
 
             for i, d in enumerate(datas):
                 inflight.append((rt.launch_async(n, kernel, d,
                                                  tenant=f"t{i}"),
-                                 time.perf_counter()))
+                                 time.perf_counter(), f"t{i}"))
                 if len(inflight) >= concurrent:
                     _reap(*inflight.pop(0))
-            for h, t_sub in inflight:
-                _reap(h, t_sub)
+            for h, t_sub, tenant in inflight:
+                _reap(h, t_sub, tenant)
             dt = time.perf_counter() - t0
         lats.sort()
+        # fairness of throughput across requests + the time-sampled
+        # service fairness curve (the measure --preempt tightens), on a
+        # duration-weighted deterministic clock (items computed)
+        from ..core import jain_index
+
+        thru = [n / max(lat, 1e-9) for lat in lats]
+        clock, ticked = 0, []
+        for _, tenant, items in sorted(service):
+            clock += items
+            ticked.append((clock, tenant, items))
+        curve = service_fairness_curve(
+            ticked, [f"t{i}" for i in range(requests)])
         rows.append(dict(kernel=kname, memory=spec.memory.model,
                          policy=policy, requests=served, n=n,
                          concurrent=concurrent, seconds=dt, packages=pkgs,
@@ -134,6 +153,9 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
                          items_per_s=served * n / dt,
                          dispatches=dispatches,
                          h2d_copies=h2d, d2h_copies=d2h,
+                         fairness=jain_index(thru),
+                         fairness_curve_mean=float(sum(curve) / len(curve)),
+                         fairness_curve_min=float(min(curve)),
                          p50_ms=_percentile_ms(lats, 0.5),
                          p99_ms=_percentile_ms(lats, 0.99)))
     return rows
@@ -174,14 +196,17 @@ def coexec_multi_rows(spec=None, *, tenants=None, policies=None,
                       per_tenant_items: int = 2048,
                       num_packages: int = 16,
                       admissions=None,
-                      fuse_modes=None) -> list[dict]:
+                      fuse_modes=None,
+                      preempt_modes=None) -> list[dict]:
     """Multi-tenant admission sweep on the DES: one row per (tenant count,
-    policy, admission policy, fusion mode) with p50/p99 latency, Jain
-    fairness over per-tenant throughput, and total dispatched packages.
-    Sweep axes default to the single point the spec describes (its
-    admission policy/fuse flag and ``workload.tenants``); pass tuples to
-    sweep. Shared by ``serve --coexec sim --admission/--fuse/--tenants``
-    and ``benchmarks.run coexec-multi``.
+    policy, admission policy, fusion mode, preemption mode) with p50/p99
+    latency, Jain fairness over per-tenant throughput, the time-sampled
+    service fairness curve (the measure ``--preempt`` tightens), and
+    total dispatched packages. Sweep axes default to the single point the
+    spec describes (its admission policy/fuse/preempt flags and
+    ``workload.tenants``); pass tuples to sweep. Shared by
+    ``serve --coexec sim --admission/--fuse/--preempt/--tenants`` and
+    ``benchmarks.run coexec-multi``.
     """
     import numpy as np
 
@@ -197,6 +222,8 @@ def coexec_multi_rows(spec=None, *, tenants=None, policies=None,
         admissions = (spec.admission.policy,)
     if fuse_modes is None:
         fuse_modes = (spec.admission.fuse,)
+    if preempt_modes is None:
+        preempt_modes = (spec.admission.preempt,)
     base, cpu, gpu = paper_workload(workload)
     per_item_in = base.bytes_in_per_item
     per_item_out = base.bytes_out_per_item
@@ -236,24 +263,37 @@ def coexec_multi_rows(spec=None, *, tenants=None, policies=None,
         for nt in tenants:
             for adm in admissions:
                 for fuse in fuse_modes:
-                    cfg = spec.admission.replace(
-                        policy=adm, fuse=fuse,
-                        fuse_threshold=per_tenant_items,
-                        fuse_wait_s=0.0).to_config()
-                    res = simulate_multi(specs(nt, policy), [cpu, gpu],
-                                         admission=cfg)
-                    lats = sorted(res.latencies())
-                    thru = [r.items / max(r.latency_s, 1e-12)
-                            for r in res.launches]
-                    rows.append(dict(
-                        workload=workload, tenants=nt, admission=adm,
-                        fuse=fuse, policy=policy,
-                        p50_ms=_percentile_ms(lats, 0.5),
-                        p99_ms=_percentile_ms(lats, 0.99),
-                        fairness=jain_index(thru),
-                        packages=res.dispatched_packages,
-                        fused_batches=res.fused_batches,
-                        total_ms=1e3 * res.total_s))
+                    for preempt in preempt_modes:
+                        if preempt and adm != "wfq" \
+                                and False in preempt_modes:
+                            # sweeping both modes: fifo+preempt would
+                            # duplicate the fifo row (preemption only
+                            # reclaims WFQ credit). A single-point
+                            # request still produces its row, with the
+                            # flag inert.
+                            continue
+                        cfg = spec.admission.replace(
+                            policy=adm, fuse=fuse, preempt=preempt,
+                            fuse_threshold=per_tenant_items,
+                            fuse_wait_s=0.0).to_config()
+                        res = simulate_multi(specs(nt, policy), [cpu, gpu],
+                                             admission=cfg)
+                        lats = sorted(res.latencies())
+                        thru = [r.items / max(r.latency_s, 1e-12)
+                                for r in res.launches]
+                        curve = res.fairness_curve()
+                        rows.append(dict(
+                            workload=workload, tenants=nt, admission=adm,
+                            fuse=fuse, preempt=preempt, policy=policy,
+                            p50_ms=_percentile_ms(lats, 0.5),
+                            p99_ms=_percentile_ms(lats, 0.99),
+                            fairness=jain_index(thru),
+                            fairness_curve_mean=float(
+                                sum(curve) / len(curve)),
+                            fairness_curve_min=float(min(curve)),
+                            packages=res.dispatched_packages,
+                            fused_batches=res.fused_batches,
+                            total_ms=1e3 * res.total_s))
     return rows
 
 
@@ -262,12 +302,15 @@ def serve_coexec_real(spec) -> None:
         print(f"[serve/coexec] {row['kernel']}/{row['policy']:13s} "
               f"({spec.admission.policy}"
               f"{'+fuse' if spec.admission.fuse else ''}"
+              f"{'+preempt' if spec.admission.preempt else ''}"
               f"/{row['memory']}): {row['requests']} "
               f"requests ({row['concurrent']} in flight) in "
               f"{row['seconds']:.3f}s = {row['req_per_s']:6.1f} req/s, "
               f"{row['items_per_s'] / 1e6:7.2f} "
               f"Mitems/s, {row['packages']} packages, "
               f"copies h2d={row['h2d_copies']} d2h={row['d2h_copies']}, "
+              f"fairness={row['fairness']:.3f} "
+              f"curve={row['fairness_curve_mean']:.3f}, "
               f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms")
 
 
@@ -278,9 +321,11 @@ def serve_coexec_sim(spec) -> None:
         for row in coexec_multi_rows(spec, policies=_sweep_policies(spec)):
             print(f"[serve/coexec-multi] {row['workload']}"
                   f"/{row['policy']}/{row['tenants']}t/{row['admission']}"
-                  f"{'+fuse' if row['fuse'] else ''}: "
+                  f"{'+fuse' if row['fuse'] else ''}"
+                  f"{'+preempt' if row['preempt'] else ''}: "
                   f"p50={row['p50_ms']:.2f}ms p99={row['p99_ms']:.2f}ms "
                   f"fairness={row['fairness']:.3f} "
+                  f"curve={row['fairness_curve_mean']:.3f} "
                   f"packages={row['packages']} "
                   f"(fused_batches={row['fused_batches']})")
         return

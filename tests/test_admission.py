@@ -12,14 +12,25 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.api import AdmissionSpec, CoexecSpec, build_scheduler
 from repro.core import (AdmissionConfig, AdmissionController, AdmissionFull,
                         CoexecEngine, CoexecutorRuntime, LaunchSpec,
                         LaunchWaitTimeout, SimUnit, Workload,
-                        counits_from_devices, jain_index, make_scheduler,
+                        counits_from_devices, jain_index,
                         simulate_multi, validate_cover)
 
 T = 512
 
+
+
+def engine_with(units, admission=None):
+    """Engine configured from an AdmissionConfig/policy name via the spec."""
+    if admission is None:
+        admission = AdmissionConfig()
+    if isinstance(admission, str):
+        admission = AdmissionConfig(policy=admission)
+    spec = CoexecSpec(admission=AdmissionSpec.from_config(admission))
+    return CoexecEngine(units, spec=spec)
 
 def two_units():
     devs = jax.local_devices()[:1] * 2
@@ -75,7 +86,7 @@ def test_jain_index():
 
 def _two_tenant_specs(total=20000, num_packages=200):
     return [LaunchSpec(uniform_wl(total),
-                       make_scheduler("dynamic", total, 2,
+                       build_scheduler("dynamic", total, 2,
                                       num_packages=num_packages),
                        tenant=t, weight=w)
             for t, w in (("A", 2.0), ("B", 1.0))]
@@ -120,7 +131,7 @@ def test_wfq_fractional_weights_complete_and_stay_proportional():
     """Regression: weights < 1 (credit per round below one package) must
     neither drop launches nor distort the weight ratio."""
     specs = [LaunchSpec(uniform_wl(20000),
-                        make_scheduler("dynamic", 20000, 2,
+                        build_scheduler("dynamic", 20000, 2,
                                        num_packages=200),
                         tenant=t, weight=w)
              for t, w in (("A", 0.10), ("B", 0.05))]
@@ -133,7 +144,7 @@ def test_wfq_fractional_weights_complete_and_stay_proportional():
 
 def test_wfq_equal_weights_fair_across_many_tenants():
     specs = [LaunchSpec(uniform_wl(4096),
-                        make_scheduler("dynamic", 4096, 2, num_packages=32),
+                        build_scheduler("dynamic", 4096, 2, num_packages=32),
                         tenant=f"t{i}")
              for i in range(8)]
     res = simulate_multi(specs, sim_units(), admission="wfq")
@@ -147,7 +158,7 @@ def test_wfq_equal_weights_fair_across_many_tenants():
 
 def _tiny_specs(n=16, total=256):
     return [LaunchSpec(uniform_wl(total, "tiny"),
-                       make_scheduler("dyn8", total, 2), tenant=f"t{i}")
+                       build_scheduler("dyn8", total, 2), tenant=f"t{i}")
             for i in range(n)]
 
 
@@ -211,15 +222,15 @@ def test_engine_fusion_bitwise_identical_and_fewer_dispatches():
              for i in range(16)]
 
     with CoexecEngine(two_units()) as engine:
-        handles = [engine.submit(make_scheduler("dyn8", T, 2), affine_kernel,
+        handles = [engine.submit(build_scheduler("dyn8", T, 2), affine_kernel,
                                  [d], np.zeros(T, np.float32))
                    for d in datas]
         unfused = [h.result(timeout=120).copy() for h in handles]
         unfused_dispatches = engine.admission.dispatched
 
     cfg = AdmissionConfig(fuse=True, fuse_threshold=1024, fuse_wait_s=0.5)
-    with CoexecEngine(two_units(), admission=cfg) as engine:
-        handles = [engine.submit(make_scheduler("dyn8", T, 2), affine_kernel,
+    with engine_with(two_units(), cfg) as engine:
+        handles = [engine.submit(build_scheduler("dyn8", T, 2), affine_kernel,
                                  [d], np.zeros(T, np.float32))
                    for d in datas]
         fused = [h.result(timeout=120) for h in handles]
@@ -235,8 +246,8 @@ def test_engine_fusion_bitwise_identical_and_fewer_dispatches():
 def test_engine_fused_members_get_isolated_stats():
     datas = [np.arange(T, dtype=np.float32) for _ in range(6)]
     cfg = AdmissionConfig(fuse=True, fuse_threshold=1024, fuse_wait_s=0.5)
-    with CoexecEngine(two_units(), admission=cfg) as engine:
-        handles = [engine.submit(make_scheduler("dyn8", T, 2), affine_kernel,
+    with engine_with(two_units(), cfg) as engine:
+        handles = [engine.submit(build_scheduler("dyn8", T, 2), affine_kernel,
                                  [d], np.zeros(T, np.float32))
                    for d in datas]
         for h in handles:
@@ -253,8 +264,8 @@ def test_engine_fusion_index_dependent_kernel_offsets_stay_local():
     offset of 0, or index-dependent kernels silently corrupt."""
     datas = [np.full(T, float(i), np.float32) for i in range(8)]
     cfg = AdmissionConfig(fuse=True, fuse_threshold=1024, fuse_wait_s=0.5)
-    with CoexecEngine(two_units(), admission=cfg) as engine:
-        handles = [engine.submit(make_scheduler("dyn8", T, 2), affine_kernel,
+    with engine_with(two_units(), cfg) as engine:
+        handles = [engine.submit(build_scheduler("dyn8", T, 2), affine_kernel,
                                  [d], np.zeros(T, np.float32))
                    for d in datas]
         outs = [h.result(timeout=120) for h in handles]
@@ -268,8 +279,8 @@ def test_engine_fusion_failure_fails_all_members():
 
     datas = [np.arange(T, dtype=np.float32) for _ in range(4)]
     cfg = AdmissionConfig(fuse=True, fuse_threshold=1024, fuse_wait_s=0.5)
-    with CoexecEngine(two_units(), admission=cfg) as engine:
-        handles = [engine.submit(make_scheduler("dyn8", T, 2), bad_kernel,
+    with engine_with(two_units(), cfg) as engine:
+        handles = [engine.submit(build_scheduler("dyn8", T, 2), bad_kernel,
                                  [d], np.zeros(T, np.float32))
                    for d in datas]
         for h in handles:
@@ -284,8 +295,8 @@ def test_engine_fusion_failure_fails_all_members():
 def test_engine_wfq_completes_all_tenants_correctly():
     datas = [np.random.default_rng(i).normal(size=T).astype(np.float32)
              for i in range(8)]
-    with CoexecEngine(two_units(), admission="wfq") as engine:
-        handles = [engine.submit(make_scheduler("dyn8", T, 2), affine_kernel,
+    with engine_with(two_units(), "wfq") as engine:
+        handles = [engine.submit(build_scheduler("dyn8", T, 2), affine_kernel,
                                  [d], np.zeros(T, np.float32),
                                  tenant=f"t{i % 2}",
                                  weight=2.0 if i % 2 == 0 else 1.0)
@@ -297,8 +308,9 @@ def test_engine_wfq_completes_all_tenants_correctly():
 
 def test_runtime_passes_admission_through():
     data = np.random.default_rng(0).normal(size=T).astype(np.float32)
-    with CoexecutorRuntime("dyn8") as rt:
-        rt.config(units=two_units(), admission="wfq", fuse=True)
+    spec = (CoexecSpec.builder().policy("dyn8")
+            .admission(wfq=True).fuse(True).build())
+    with CoexecutorRuntime.from_spec(spec, units=two_units()) as rt:
         h = rt.launch_async(T, affine_kernel, [data], tenant="a", weight=2.0)
         np.testing.assert_allclose(h.result(timeout=120), expected(data))
         assert rt.engine.admission.config.policy == "wfq"
@@ -321,20 +333,20 @@ def test_engine_backpressure_nonblocking_raises_then_recovers():
 
     data = np.arange(T, dtype=np.float32)
     try:
-        with CoexecEngine(two_units(), max_inflight=2) as engine:
-            h1 = engine.submit(make_scheduler("dyn4", T, 2), gated_kernel,
+        with engine_with(two_units(), AdmissionConfig(max_inflight=2)) as engine:
+            h1 = engine.submit(build_scheduler("dyn4", T, 2), gated_kernel,
                                [data], np.zeros(T, np.float32))
-            h2 = engine.submit(make_scheduler("dyn4", T, 2), gated_kernel,
+            h2 = engine.submit(build_scheduler("dyn4", T, 2), gated_kernel,
                                [data], np.zeros(T, np.float32))
             with pytest.raises(AdmissionFull, match="max_inflight"):
-                engine.submit(make_scheduler("dyn4", T, 2), affine_kernel,
+                engine.submit(build_scheduler("dyn4", T, 2), affine_kernel,
                               [data], np.zeros(T, np.float32), block=False)
             assert engine.admission.in_flight == 2
             gate.set()
             h1.result(timeout=120)
             h2.result(timeout=120)
             # capacity freed: blocking submit (the default) goes through
-            h3 = engine.submit(make_scheduler("dyn4", T, 2), affine_kernel,
+            h3 = engine.submit(build_scheduler("dyn4", T, 2), affine_kernel,
                                [data], np.zeros(T, np.float32))
             np.testing.assert_allclose(h3.result(timeout=120), expected(data))
             assert engine.admission.in_flight == 0
@@ -345,7 +357,7 @@ def test_engine_backpressure_nonblocking_raises_then_recovers():
 def test_submit_rejects_nonpositive_weight():
     with CoexecEngine(two_units()) as engine:
         with pytest.raises(ValueError, match="weight"):
-            engine.submit(make_scheduler("dyn4", T, 2), affine_kernel,
+            engine.submit(build_scheduler("dyn4", T, 2), affine_kernel,
                           [np.zeros(T, np.float32)],
                           np.zeros(T, np.float32), weight=0.0)
 
@@ -367,7 +379,7 @@ def test_wait_timeout_raises_launch_wait_timeout():
     data = np.arange(T, dtype=np.float32)
     try:
         with CoexecEngine(two_units()) as engine:
-            h = engine.submit(make_scheduler("dyn4", T, 2), gated_kernel,
+            h = engine.submit(build_scheduler("dyn4", T, 2), gated_kernel,
                               [data], np.zeros(T, np.float32))
             with pytest.raises(LaunchWaitTimeout):
                 h.result(timeout=0.2)
@@ -389,7 +401,7 @@ def test_launch_failed_with_timeouterror_is_returned_not_raised():
 
     data = np.arange(T, dtype=np.float32)
     with CoexecEngine(two_units()) as engine:
-        h = engine.submit(make_scheduler("dyn4", T, 2), bad_kernel,
+        h = engine.submit(build_scheduler("dyn4", T, 2), bad_kernel,
                           [data], np.zeros(T, np.float32))
         exc = h.exception(timeout=120)       # returned, not raised
         assert isinstance(exc, TimeoutError)
@@ -418,8 +430,8 @@ class _FakeEntry:
 
 def test_controller_fifo_matches_submit_order():
     ctl = AdmissionController(2)
-    a = _FakeEntry(make_scheduler("dyn4", 256, 2), "a")
-    b = _FakeEntry(make_scheduler("dyn4", 256, 2), "b")
+    a = _FakeEntry(build_scheduler("dyn4", 256, 2), "a")
+    b = _FakeEntry(build_scheduler("dyn4", 256, 2), "b")
     ctl.admit(a)
     ctl.admit(b)
     entry, pkg = ctl.next_work(0)
@@ -430,7 +442,7 @@ def test_controller_fifo_matches_submit_order():
 
 def test_controller_capacity_accounting():
     ctl = AdmissionController(2, AdmissionConfig(max_inflight=1))
-    a = _FakeEntry(make_scheduler("dyn4", 256, 2))
+    a = _FakeEntry(build_scheduler("dyn4", 256, 2))
     assert ctl.has_capacity()
     ctl.admit(a)
     assert not ctl.has_capacity()
@@ -443,17 +455,17 @@ def test_sim_rejects_nonpositive_weight():
     does (weight=0 divided the WFQ fast-forward; negative hung it)."""
     for w in (0.0, -1.0):
         specs = [LaunchSpec(uniform_wl(1024),
-                            make_scheduler("dyn4", 1024, 2),
+                            build_scheduler("dyn4", 1024, 2),
                             tenant="A", weight=w)]
         with pytest.raises(ValueError, match="weight"):
             simulate_multi(specs, sim_units(), admission="wfq")
 
 
-def test_engine_accepts_admission_none_and_config():
-    """Regression: admission=None must coerce to the FIFO default."""
-    eng = CoexecEngine(two_units(), admission=None)
+def test_engine_accepts_default_and_wfq_specs():
+    """Regression: a spec-less engine defaults to FIFO admission."""
+    eng = CoexecEngine(two_units())
     assert eng.admission.config.policy == "fifo"
-    eng2 = CoexecEngine(two_units(), admission=AdmissionConfig(policy="wfq"))
+    eng2 = engine_with(two_units(), "wfq")
     assert eng2.admission.config.policy == "wfq"
 
 
@@ -462,8 +474,8 @@ def test_engine_wfq_plus_fuse_completes_correctly():
     datas = [np.arange(T, dtype=np.float32) for _ in range(6)]
     cfg = AdmissionConfig(policy="wfq", fuse=True, fuse_threshold=1024,
                           fuse_wait_s=0.5)
-    with CoexecEngine(two_units(), admission=cfg) as engine:
-        handles = [engine.submit(make_scheduler("dyn8", T, 2), affine_kernel,
+    with engine_with(two_units(), cfg) as engine:
+        handles = [engine.submit(build_scheduler("dyn8", T, 2), affine_kernel,
                                  [d], np.zeros(T, np.float32))
                    for d in datas]
         for h in handles:
@@ -476,7 +488,7 @@ def test_controller_wfq_charges_fused_entries_at_cost_scale():
     """Regression: fused batches schedule in member units; WFQ must debit
     work-items (size x wfq_cost_scale) or fused flows are nearly free."""
     ctl = AdmissionController(2, AdmissionConfig(policy="wfq", quantum=100))
-    entry = _FakeEntry(make_scheduler("dyn4", 8, 2), "fusedflow")
+    entry = _FakeEntry(build_scheduler("dyn4", 8, 2), "fusedflow")
     entry.wfq_cost_scale = 512           # one member = 512 work-items
     ctl.admit(entry)
     got = ctl.next_work(0)
@@ -489,9 +501,9 @@ def test_controller_wfq_charges_fused_entries_at_cost_scale():
 
 def test_controller_wfq_interleaves_backlogged_tenants():
     ctl = AdmissionController(2, AdmissionConfig(policy="wfq"))
-    a = _FakeEntry(make_scheduler("dynamic", 6400, 2, num_packages=100), "a",
+    a = _FakeEntry(build_scheduler("dynamic", 6400, 2, num_packages=100), "a",
                    weight=1.0)
-    b = _FakeEntry(make_scheduler("dynamic", 6400, 2, num_packages=100), "b",
+    b = _FakeEntry(build_scheduler("dynamic", 6400, 2, num_packages=100), "b",
                    weight=1.0)
     ctl.admit(a)
     ctl.admit(b)

@@ -5,9 +5,9 @@ Covers the PR's acceptance criteria:
 * strict option validation — unknown/misspelled scheduler kwargs raise
   ValueError naming the offending key and the accepted fields;
 * third-party plugin registration without core edits;
-* the legacy kwarg paths (rt.config, make_scheduler, engine kwargs)
-  still work but emit DeprecationWarning, while the spec paths are
-  warning-free;
+* the legacy kwarg paths (rt.config, make_scheduler, engine kwargs,
+  package_kernel) are gone — their deprecation window closed — and the
+  spec paths are warning-free;
 * one spec drives the real engine and simulate_multi identically.
 """
 import warnings
@@ -23,7 +23,7 @@ from repro.api import (AdmissionSpec, CoexecSpec, MemorySpec, SchedulerSpec,
                        scheduler_names, speed_hint_policies,
                        temporary_plugins, workload_names)
 from repro.core import (CoexecEngine, CoexecutorRuntime, LaunchSpec,
-                        Scheduler, make_scheduler, paper_workload,
+                        Scheduler, paper_workload,
                         simulate, simulate_multi)
 
 
@@ -130,11 +130,9 @@ def test_unknown_scheduler_kwarg_raises_value_error_naming_key():
     assert "chunk_pkgs" in msg           # the offending key, by name
     assert "static" in msg
     assert "speeds" in msg and "granularity" in msg    # accepted fields
-    # the deprecated shim inherits the same strictness
+    # misspelled options are caught for every policy, shorthand included
     with pytest.raises(ValueError, match="num_package"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            make_scheduler("dynamic", 100, 2, num_package=5)  # misspelled
+        build_scheduler("dynamic", 100, 2, num_package=5)  # misspelled
     # spec validation reports it too, before anything is built
     bad = CoexecSpec(scheduler=SchedulerSpec(
         policy="hguided", options=(("divisr", 3.0),)))
@@ -212,15 +210,24 @@ def test_third_party_workload_plugin():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims: old paths warn, new paths are silent
+# Closed deprecation window: the kwarg-era shims are gone for good
 # ---------------------------------------------------------------------------
 
-def test_legacy_paths_emit_deprecation_warning():
-    with pytest.warns(DeprecationWarning, match="make_scheduler"):
-        make_scheduler("dyn8", 100, 2)
-    with pytest.warns(DeprecationWarning, match="config"):
-        CoexecutorRuntime("dyn8").config(units=two_units(), dist=0.4)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
+def test_legacy_shims_are_removed():
+    """docs/api.md's removal timeline is enforced: the shims no longer
+    exist, and the replacement spec surface is the only path."""
+    import repro.core
+    import repro.core.scheduler
+    import repro.kernels
+
+    assert not hasattr(repro.core, "make_scheduler")
+    assert not hasattr(repro.core.scheduler, "make_scheduler")
+    assert not hasattr(CoexecutorRuntime, "config")
+    assert not hasattr(repro.kernels, "package_kernel")
+    with pytest.raises(ImportError):
+        from repro.kernels.ops import package_kernel  # noqa: F401
+    # the engine's kwarg-era constructor surface is gone too
+    with pytest.raises(TypeError):
         CoexecEngine(two_units(), admission="wfq", max_inflight=4)
 
 
@@ -238,25 +245,12 @@ def test_spec_paths_are_warning_free():
         simulate(None, [cpu, gpu], wl, spec=spec)
 
 
-def test_engine_rejects_spec_plus_legacy_kwargs():
-    spec = CoexecSpec()
-    with pytest.raises(ValueError, match="not both"):
-        CoexecEngine(two_units(), spec=spec, max_inflight=4)
-
-
-def test_legacy_config_behavior_is_preserved():
-    """config() resets unspecified knobs to defaults, exactly as before."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        rt = CoexecutorRuntime("hguided")
-        rt.config(units=two_units(), dist=0.3, admission="wfq", fuse=True)
-        assert rt.spec.admission.policy == "wfq"
-        assert rt.spec.admission.fuse is True
-        assert rt.spec.units.dist == (0.3,)
-        rt.config(units=two_units())          # wholesale reconfigure
-        assert rt.spec.admission.policy == "fifo"
-        assert rt.spec.admission.fuse is False
-        assert rt.spec.units.dist == ()
+def test_engine_takes_only_spec_configuration():
+    spec = (CoexecSpec.builder().admission(wfq=True, max_inflight=4)
+            .build())
+    engine = CoexecEngine(two_units(), spec=spec)
+    assert engine.admission.config.policy == "wfq"
+    assert engine.admission.config.max_inflight == 4
 
 
 # ---------------------------------------------------------------------------

@@ -8,8 +8,8 @@
   not sliced, halos reproduce the monolithic stencil exactly, outputs
   allocate from the declared slot);
 * the kernel registry behaves like the scheduler/workload registries:
-  introspection, strict option validation, third-party registration,
-  and a warning shim for the retired ``package_kernel`` if-chain.
+  introspection, strict option validation, third-party registration
+  (the retired ``package_kernel`` shim is gone — see tests/test_api.py).
 """
 import numpy as np
 import jax.numpy as jnp
@@ -232,19 +232,15 @@ def test_workload_spec_resolves_kernel():
     assert wl.build_kernel() is build_kernel("rap")
 
 
-def test_package_kernel_shim_warns_and_delegates():
-    from repro.kernels import package_kernel
-
-    with pytest.warns(DeprecationWarning, match="package_kernel"):
-        kernel = package_kernel("taylor")
-    assert kernel is build_kernel("taylor")
-    # still callable with the legacy package signature
+def test_registry_kernel_is_callable_with_package_signature():
+    kernel = build_kernel("taylor")
+    assert kernel is build_kernel("taylor")      # factories memoize
+    # callable with the package signature ``fn(offset, *chunks)``
     x = np.linspace(-1, 1, 64, dtype=np.float32)
     np.testing.assert_allclose(np.asarray(kernel(0, x)), np.sin(x),
                                rtol=1e-3, atol=1e-4)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(KeyError):
-            package_kernel("nope")
+    with pytest.raises(KeyError):
+        build_kernel("nope")
 
 
 def test_registry_listing_survives_option_requiring_factory():

@@ -91,6 +91,37 @@ def test_examples_use_only_non_deprecated_surface():
         f"deprecated kwarg API: {hits}")
 
 
+def test_bench_schema_checker_accepts_and_rejects():
+    """The artifact schema checker passes a well-formed document and
+    names the violation for a malformed one (stdlib import, no subprocess
+    needed — the same code CI's docs job runs)."""
+    sys.path.insert(0, str(REPO / "scripts"))
+    try:
+        import check_bench_schema as cbs
+    finally:
+        sys.path.pop(0)
+
+    good = {
+        "schema_version": cbs.SCHEMA_VERSION, "suite": "coexec-multi",
+        "spec": {}, "rows": [{
+            "workload": "taylor", "tenants": 8, "admission": "wfq",
+            "fuse": False, "preempt": True, "policy": "hguided",
+            "p50_ms": 1.0, "p99_ms": 2.0, "fairness": 0.99,
+            "fairness_curve_mean": 0.95, "fairness_curve_min": 0.9,
+            "packages": 100, "fused_batches": 0, "total_ms": 10.0}]}
+    assert cbs.check_doc("good.json", good) == []
+
+    bad = dict(good, schema_version=1)
+    assert any("schema_version" in e for e in cbs.check_doc("b.json", bad))
+    bad = dict(good, rows=[{k: v for k, v in good["rows"][0].items()
+                            if k != "preempt"}])
+    assert any("preempt" in e for e in cbs.check_doc("b.json", bad))
+    bad = dict(good, rows=[dict(good["rows"][0], p99_ms="fast")])
+    assert any("p99_ms" in e for e in cbs.check_doc("b.json", bad))
+    bad = dict(good, suite="nope")
+    assert any("suite" in e for e in cbs.check_doc("b.json", bad))
+
+
 def test_examples_import_the_spec_api():
     """The migrated examples actually demonstrate repro.api."""
     for name in ("quickstart.py", "concurrent_requests.py"):

@@ -6,8 +6,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.api import CoexecSpec, build_scheduler
 from repro.core import (CoexecEngine, CoexecutorRuntime, counits_from_devices,
-                        make_scheduler, validate_cover)
+                        validate_cover)
 
 N = 1 << 13
 POLICIES = ["static", "dyn16", "hguided", "work_stealing"]
@@ -23,7 +24,7 @@ def sched_for(policy, total, num_units=2, granularity=1):
     kw = {}
     if policy in ("static", "hguided", "work_stealing"):
         kw["speeds"] = [0.4, 0.6][:num_units]
-    return make_scheduler(policy, total, num_units,
+    return build_scheduler(policy, total, num_units,
                           granularity=granularity, **kw)
 
 
@@ -189,8 +190,8 @@ def test_failing_launch_does_not_poison_neighbors():
 
 def test_runtime_launch_async_and_blocking_agree():
     data = np.random.default_rng(0).normal(size=N).astype(np.float32)
-    with CoexecutorRuntime("work_stealing") as rt:
-        rt.config(units=two_units(), dist=0.4)
+    spec = CoexecSpec.builder().policy("work_stealing").dist(0.4).build()
+    with CoexecutorRuntime.from_spec(spec, units=two_units()) as rt:
         blocking = rt.launch(N, affine_kernel, [data]).copy()
         handles = [rt.launch_async(N, affine_kernel, [data])
                    for _ in range(4)]
@@ -202,13 +203,13 @@ def test_runtime_launch_async_and_blocking_agree():
 
 
 def test_runtime_reuses_engine_across_launches():
-    with CoexecutorRuntime("dyn8") as rt:
-        rt.config(units=two_units())
+    spec = CoexecSpec.builder().policy("dyn8").build()
+    with CoexecutorRuntime.from_spec(spec, units=two_units()) as rt:
         rt.launch(N, affine_kernel, [np.zeros(N, np.float32)])
         engine = rt.engine
         rt.launch(N, affine_kernel, [np.zeros(N, np.float32)])
         assert rt.engine is engine       # persistent, not per-launch
-        rt.config(units=two_units())     # reconfigure invalidates
+        rt.configure(spec, units=two_units())   # reconfigure invalidates
         assert rt.engine is None
         rt.launch(N, affine_kernel, [np.zeros(N, np.float32)])
         assert rt.engine is not engine

@@ -1,0 +1,389 @@
+"""One control plane, two backends: structural engine↔DES parity and
+preemptive pull-capping, both through `repro.core.exec.ExecutionLoop`.
+
+The parity tests drive a `RealBackend` (real JAX dispatch through the
+data plane) and a `SimBackend` (virtual clock) with an identical
+deterministic round-robin serve order, so every control-plane decision —
+admission pulls, WFQ credit, fusion staging/de-mux, finalization,
+counter attribution — is exercised through the one shared loop and must
+come out identical: per-unit package sequences and counter totals for
+all four policies × {fifo,wfq} × {fuse on/off}.
+
+The preemption tests pin the new `AdmissionSpec.preempt` semantics once
+for both substrates: WFQ reclaims credit mid-launch by capping per-pull
+package sizes of over-served tenants, which measurably tightens the
+time-sampled Jain fairness curve at 32 tenants.
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import CoexecSpec, build_scheduler
+from repro.core import (AdmissionConfig, CoexecEngine, ExecutionLoop,
+                        LaunchSpec, MemoryModel, SimUnit, Workload,
+                        counits_from_devices, jain_index,
+                        service_fairness_curve, simulate_multi)
+from repro.core.dataplane import as_coexec_kernel, make_plane
+from repro.core.engine import RealBackend, _Launch, _fuse_key
+from repro.core.memory import MemoryCosts
+from repro.core.sim import SimBackend, _SimLaunchState
+
+NUNITS = 2
+SPEEDS = [0.5, 0.5]
+POLICIES = ["static", "dyn8", "hguided", "work_stealing"]
+
+
+def real_units():
+    return counits_from_devices(jax.local_devices()[:1] * NUNITS,
+                                kinds=["cpu"] * NUNITS, speed_hints=SPEEDS)
+
+
+def sim_units():
+    return [SimUnit(f"u{i}", "cpu", speed=1000.0, setup_s=1e-3)
+            for i in range(NUNITS)]
+
+
+def sched_for(policy, total):
+    kw = {"speeds": SPEEDS} if policy in ("static", "hguided",
+                                          "work_stealing") else {}
+    return build_scheduler(policy, total, NUNITS, **kw)
+
+
+def double_kernel(offset, chunk):
+    return chunk * 2.0
+
+
+def drive(loop):
+    """Serve one package per unit per sweep, round-robin, until drained.
+
+    The same deterministic serve order is applied to both backends, so
+    any divergence in what the units are handed is a control-plane
+    divergence — exactly what the parity tests are after.
+    """
+    backend = loop.backend
+    for _ in range(100_000):
+        if loop.drained():
+            return
+        progressed = False
+        for u in range(NUNITS):
+            work = loop.pull(u, force_flush=True)
+            if work is None:
+                continue
+            launch, pkg = work
+            backend.dispatch(u, launch, pkg)
+            loop.complete(launch, pkg)
+            progressed = True
+        if not progressed and not loop.drained():
+            raise AssertionError("drive wedged with work outstanding")
+    raise AssertionError("drive did not converge")
+
+
+def run_real(policy, cfg, memory, datas, total):
+    units = real_units()
+    backend = RealBackend(units, make_plane(memory))
+    loop = ExecutionLoop(backend, [u.name for u in units], cfg)
+    launches = []
+    for i, d in enumerate(datas):
+        kernel = as_coexec_kernel(double_kernel, 1)
+        s = sched_for(policy, total)
+        out = np.zeros(total, np.float32)
+        launch = _Launch(loop.next_id(), s, kernel, [d], out,
+                         adaptive=False)
+        launch.plan = backend.plane.plan(kernel, [d], out, total)
+        launch.tenant = f"t{i}"
+        launch.fuse_key = _fuse_key(cfg, s, kernel, [d], out)
+        launches.append(launch)
+    for launch in launches:
+        loop.admit(launch, now=0.0)
+    drive(loop)
+    return launches, loop
+
+
+def run_sim(policy, cfg, memory, n_launches, total):
+    units = sim_units()
+    backend = SimBackend(units, memory, MemoryCosts())
+    loop = ExecutionLoop(backend, [u.name for u in units], cfg)
+    entries = []
+    for i in range(n_launches):
+        entry = _SimLaunchState(
+            loop.next_id(), sched_for(policy, total),
+            Workload("par", total, 4.0, 4.0, 1e4), tenant=f"t{i}")
+        if cfg.fuse and total <= cfg.fuse_threshold:
+            entry.fuse_key = ("par", total, 4.0, 4.0)
+        entries.append(entry)
+    for entry in entries:
+        loop.admit(entry, now=0.0)
+    drive(loop)
+    return entries, loop
+
+
+def signature(launch):
+    """Order-independent per-unit package placement of one launch."""
+    return sorted((p.seq, p.unit, p.offset, p.size)
+                  for p in launch.stats.packages)
+
+
+def counter_totals(launches):
+    agg = [0, 0, 0]
+    for launch in launches:
+        agg[0] += launch.stats.data.dispatches
+        agg[1] += launch.stats.data.h2d_copies
+        agg[2] += launch.stats.data.d2h_copies
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# Engine ↔ DES parity through the one shared loop (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("admission", ["fifo", "wfq"])
+@pytest.mark.parametrize("fuse", [False, True])
+def test_engine_vs_des_parity_all_policies(policy, admission, fuse):
+    """Seeded workload, identical serve order ⇒ identical per-unit
+    package sequences and identical counter totals on both backends,
+    for every policy × admission × fusion combination."""
+    total, n_launches = 512, 6
+    cfg = AdmissionConfig(policy=admission, fuse=fuse, fuse_threshold=1024)
+    memory = MemoryModel.BUFFERS      # exercises H2D/D2H counters too
+    datas = [np.random.default_rng(i).normal(size=total).astype(np.float32)
+             for i in range(n_launches)]
+
+    real, real_loop = run_real(policy, cfg, memory, datas, total)
+    sim, sim_loop = run_sim(policy, cfg, memory, n_launches, total)
+
+    # every launch computed correctly on the real backend
+    for launch, d in zip(real, datas):
+        np.testing.assert_allclose(launch.handle.result(timeout=1), d * 2.0)
+
+    # identical per-unit package sequences, launch by launch
+    for launch_r, launch_s in zip(real, sim):
+        assert signature(launch_r) == signature(launch_s), (
+            policy, admission, fuse)
+
+    # identical counter totals (dispatches, H2D, D2H) across the run
+    assert counter_totals(real) == counter_totals(sim)
+    assert real_loop.admission.dispatched == sim_loop.admission.dispatched
+    assert real_loop.admission.fused_batches == \
+        sim_loop.admission.fused_batches
+    assert real_loop.admission.fused_members == \
+        sim_loop.admission.fused_members
+    if fuse:
+        assert real_loop.admission.fused_members == n_launches
+        assert all(launch.fused for launch in real)
+
+
+def test_sim_module_has_no_control_loop_of_its_own():
+    """Acceptance: core/sim.py is grep-clean for the deleted duplicate
+    control plane and both backends drive repro.core.exec.ExecutionLoop."""
+    src = (pathlib.Path(__file__).resolve().parent.parent /
+           "src/repro/core/sim.py").read_text()
+    assert "_fuse_sim_launches" not in src
+    assert "ExecutionLoop" in src
+    engine_src = (pathlib.Path(__file__).resolve().parent.parent /
+                  "src/repro/core/engine.py").read_text()
+    assert "ExecutionLoop" in engine_src
+    # the engine exposes the shared loop object directly
+    engine = CoexecEngine(real_units())
+    assert isinstance(engine.loop, ExecutionLoop)
+
+
+# ---------------------------------------------------------------------------
+# Fused-batch counter attribution (satellite): exact remainder sums
+# ---------------------------------------------------------------------------
+
+def test_fused_counter_attribution_sums_exactly_sim():
+    """Member LaunchStats.data must sum back to the fused batch's totals
+    exactly — even when counters % members != 0 (here 2 packages over 6
+    members), where even integer shares would drop the remainder."""
+    cfg = AdmissionConfig(fuse=True, fuse_threshold=1024, fuse_wait_s=0.0)
+    specs = [LaunchSpec(Workload("tiny", 256, 8.0, 8.0, 1e4),
+                        build_scheduler("dyn8", 256, 2), tenant=f"t{i}")
+             for i in range(6)]
+    res = simulate_multi(specs, sim_units(), admission=cfg,
+                         memory=MemoryModel.BUFFERS)
+    assert res.fused_batches == 1 and res.fused_members == 6
+    # the batch really produced a non-divisible share
+    assert res.data.dispatches % 6 != 0
+    for field in ("dispatches", "h2d_copies", "h2d_bytes",
+                  "d2h_copies", "d2h_bytes"):
+        member_sum = sum(getattr(r.data, field) for r in res.launches)
+        assert member_sum == getattr(res.data, field), field
+
+
+def test_fused_counter_attribution_sums_exactly_engine():
+    """Same exact-sum property on the threaded engine (live threads,
+    BUFFERS data plane): summing member stats recovers every dispatch
+    and staging copy the batch actually paid."""
+    T = 256
+    spec = CoexecSpec(
+        admission=CoexecSpec().admission.replace(
+            fuse=True, fuse_threshold=1024, fuse_wait_s=0.5),
+        memory=CoexecSpec().memory.replace(model="buffers"))
+    datas = [np.arange(T, dtype=np.float32) + i for i in range(6)]
+    with CoexecEngine(real_units(), spec=spec) as engine:
+        handles = [engine.submit(build_scheduler("dyn8", T, 2),
+                                 double_kernel, [d],
+                                 np.zeros(T, np.float32))
+                   for d in datas]
+        for h, d in zip(handles, datas):
+            np.testing.assert_allclose(h.result(timeout=120), d * 2.0)
+        assert engine.admission.fused_batches == 1
+        assert engine.admission.fused_members == 6
+        dispatched = engine.admission.dispatched
+    member_dispatches = sum(h.stats.data.dispatches for h in handles)
+    member_h2d = sum(h.stats.data.h2d_copies for h in handles)
+    member_d2h = sum(h.stats.data.d2h_copies for h in handles)
+    assert member_dispatches == dispatched
+    # one input argument: the BUFFERS plane pays one H2D and one D2H per
+    # dispatched package — the member shares must sum to exactly that
+    assert member_h2d == dispatched and member_d2h == dispatched
+    assert dispatched % 6 != 0      # the remainder case is actually hit
+
+
+# ---------------------------------------------------------------------------
+# Preemptive pull-capping (tentpole proof): one implementation, two backends
+# ---------------------------------------------------------------------------
+
+def _multi_curve(preempt, *, tenants=32, total=2048, policy="hguided"):
+    specs = [LaunchSpec(Workload("uni", total, 8.0, 8.0, 1e4),
+                        sched_for(policy, total), tenant=f"t{i}")
+             for i in range(tenants)]
+    cfg = AdmissionConfig(policy="wfq", preempt=preempt)
+    res = simulate_multi(specs, sim_units(), admission=cfg)
+    return res, res.fairness_curve()
+
+
+def test_preempt_tightens_fairness_curve_at_32_tenants_sim():
+    """Acceptance: --preempt produces a measurably tighter Jain fairness
+    curve at 32 tenants on the DES backend."""
+    base_res, base = _multi_curve(False)
+    pre_res, pre = _multi_curve(True)
+    # every launch still completes its whole index space
+    assert len(base_res.launches) == len(pre_res.launches) == 32
+    assert float(np.mean(pre)) > float(np.mean(base)) + 0.03
+    assert min(pre) > min(base) + 0.2
+    # capping shows up as strictly smaller maximum pulls
+    assert max(i for _, _, i in pre_res.service) < \
+        max(i for _, _, i in base_res.service)
+
+
+def test_preempt_tightens_fairness_curve_at_32_tenants_real():
+    """Acceptance: the same preemption implementation (zero backend-
+    specific code) tightens the fairness curve on the real backend —
+    measured over real dispatches through the data plane, with the
+    dispatch sequence as the (deterministic) service clock."""
+    total, tenants = 1024, 32
+
+    def curve(preempt):
+        cfg = AdmissionConfig(policy="wfq", preempt=preempt)
+        datas = [np.zeros(total, np.float32) for _ in range(tenants)]
+        launches, _ = run_real("hguided", cfg, MemoryModel.USM, datas,
+                               total)
+        service = []
+        for launch in launches:
+            for p in launch.stats.packages:
+                service.append((p.t_complete, launch.tenant, p.size))
+        # deterministic duration-weighted clock: order dispatches by
+        # (wall) completion and advance time by the items each computed —
+        # the service curve a unit-speed device would produce, free of
+        # wall-clock jitter
+        clock, ticked = 0, []
+        for _, tenant, items in sorted(service):
+            clock += items
+            ticked.append((clock, tenant, items))
+        return service_fairness_curve(
+            ticked, [f"t{i}" for i in range(tenants)])
+
+    base = curve(False)
+    pre = curve(True)
+    assert float(np.mean(pre)) > float(np.mean(base)) + 0.03
+    assert min(pre) > min(base) + 0.2
+
+
+def test_preempt_caps_pull_sizes_at_credit():
+    """The mechanism itself: with a small explicit quantum, an
+    over-served tenant's pulls are capped near its per-round credit
+    instead of emitting the scheduler's natural (huge) package."""
+    base_res, _ = _multi_curve(False)
+    specs = [LaunchSpec(Workload("uni", 2048, 8.0, 8.0, 1e4),
+                        sched_for("hguided", 2048), tenant=f"t{i}")
+             for i in range(8)]
+    res = simulate_multi(
+        specs, sim_units(),
+        admission=AdmissionConfig(policy="wfq", quantum=64, preempt=True))
+    assert max(items for _, _, items in res.service) <= 64
+    # and without preempt the same quantum still emits giant packages
+    specs = [LaunchSpec(Workload("uni", 2048, 8.0, 8.0, 1e4),
+                        sched_for("hguided", 2048), tenant=f"t{i}")
+             for i in range(8)]
+    res2 = simulate_multi(
+        specs, sim_units(),
+        admission=AdmissionConfig(policy="wfq", quantum=64))
+    assert max(items for _, _, items in res2.service) > 64
+
+
+def test_preempt_on_threaded_engine_stays_exact():
+    """Live worker threads + preemptive WFQ: results stay bitwise exact
+    and every launch's (possibly capped) packages still tile its space."""
+    from repro.core import validate_cover
+
+    T = 4096
+    spec = (CoexecSpec.builder()
+            .admission("wfq", preempt=True, quantum=128).build())
+    datas = [np.random.default_rng(i).normal(size=T).astype(np.float32)
+             for i in range(8)]
+    with CoexecEngine(real_units(), spec=spec) as engine:
+        handles = [engine.submit(sched_for("hguided", T), double_kernel,
+                                 [d], np.zeros(T, np.float32),
+                                 tenant=f"t{i}", adaptive=False)
+                   for i, d in enumerate(datas)]
+        for h, d in zip(handles, datas):
+            np.testing.assert_allclose(h.result(timeout=120), d * 2.0)
+            validate_cover(h.stats.packages, T)
+
+
+def test_preempt_is_inert_under_fifo():
+    """preempt only reclaims WFQ credit; FIFO runs are byte-identical."""
+    def run(preempt):
+        specs = [LaunchSpec(Workload("uni", 1024, 8.0, 8.0, 1e4),
+                            sched_for("dyn8", 1024), tenant=f"t{i}")
+                 for i in range(4)]
+        return simulate_multi(specs, sim_units(),
+                              admission=AdmissionConfig(policy="fifo",
+                                                        preempt=preempt))
+    a, b = run(False), run(True)
+    assert a.dispatched_packages == b.dispatched_packages
+    assert a.latencies() == b.latencies()
+
+
+def test_preempt_spec_round_trip_and_cli_flag():
+    """AdmissionSpec.preempt rides the derived-flag machinery: both CLIs
+    grow --preempt with no per-tool edits, and the spec round-trips."""
+    import argparse
+
+    from repro.api import add_spec_args, args_from_spec, spec_from_args
+
+    spec = CoexecSpec.builder().admission("wfq", preempt=True).build()
+    assert CoexecSpec.from_json(spec.to_json()) == spec
+    assert spec.admission_config().preempt is True
+
+    ap = argparse.ArgumentParser()
+    add_spec_args(ap)
+    ns = ap.parse_args(["--admission", "wfq", "--preempt"])
+    parsed = spec_from_args(ns)
+    assert parsed.admission.preempt is True
+    assert "--preempt" in args_from_spec(spec)
+
+
+def test_fairness_curve_helper_validates():
+    with pytest.raises(ValueError):
+        service_fairness_curve([], [])
+    assert service_fairness_curve([], ["a"]) == [1.0] * 9
+    flat = service_fairness_curve(
+        [(t, f"t{t % 2}", 1) for t in range(100)], ["t0", "t1"])
+    assert all(f > 0.9 for f in flat)
+    assert jain_index([1.0, 1.0]) == pytest.approx(1.0)

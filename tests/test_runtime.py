@@ -1,8 +1,9 @@
 """Real (threaded, JAX-dispatch) co-execution: the Listing-1 path.
 
 Kernels resolve through the registry (`repro.api.build_kernel`) and the
-runtime is configured by `CoexecSpec` — the shim surfaces (`rt.config`,
-`package_kernel`) are covered separately with targeted warning checks.
+runtime is configured by `CoexecSpec` — the kwarg-era shim surfaces
+(`rt.config`, `package_kernel`) were removed when their deprecation
+window closed (pinned in tests/test_api.py).
 """
 import numpy as np
 import jax
@@ -123,21 +124,17 @@ def test_launch_stats_recorded():
     assert st.data.dispatches == st.num_packages
 
 
-def test_legacy_config_and_package_kernel_shims_still_work():
-    """The kwarg-era surface warns but behaves exactly as before."""
+def test_registry_kernel_with_explicit_units():
+    """The spec surface covers the old shim flow end to end: resolve a
+    registered kernel, configure dist, launch on explicit units."""
     from repro.core import counits_from_devices
-    from repro.kernels import package_kernel
 
     n = 4096
     x = np.random.default_rng(3).uniform(-2, 2, n).astype(np.float32)
     units = counits_from_devices(jax.local_devices() * 2,
                                  kinds=["cpu", "cpu"],
                                  speed_hints=[0.4, 0.6])
-    with pytest.warns(DeprecationWarning, match="package_kernel"):
-        kernel = package_kernel("taylor")
-    rt = CoexecutorRuntime("hguided")
-    with pytest.warns(DeprecationWarning, match="config"):
-        rt.config(units=units, dist=0.5)
-    with rt:
-        out = rt.launch(n, kernel, [x])
+    spec = CoexecSpec.builder().policy("hguided").dist(0.5).build()
+    with CoexecutorRuntime.from_spec(spec, units=units) as rt:
+        out = rt.launch(n, build_kernel("taylor"), [x])
     np.testing.assert_allclose(out, np.sin(x), rtol=1e-3, atol=1e-4)

@@ -3,8 +3,9 @@ import numpy as np
 import pytest
 from _propcheck import given, settings, st
 
+from repro.api import build_scheduler
 from repro.core import (DynamicScheduler, HGuidedScheduler, StaticScheduler,
-                        WorkStealingScheduler, make_scheduler, static_bounds,
+                        WorkStealingScheduler, static_bounds,
                         validate_cover)
 
 ALL_POLICIES = ["static", "dyn5", "dyn200", "hguided", "work_stealing"]
@@ -36,7 +37,7 @@ def test_exact_cover(total, units, gran, policy, seed):
     kw = {}
     if policy in ("static", "hguided", "work_stealing"):
         kw["speeds"] = [1.0 + 0.5 * i for i in range(units)]
-    sched = make_scheduler(policy, total, units, granularity=gran, **kw)
+    sched = build_scheduler(policy, total, units, granularity=gran, **kw)
     pkgs = drain(sched, units, seed)
     validate_cover(pkgs, total)
     assert sched.done() and sched.remaining == 0
@@ -53,7 +54,7 @@ def test_granularity_alignment(total, units, gran, policy):
     kw = {}
     if policy in ("static", "hguided", "work_stealing"):
         kw["speeds"] = [1.0 + i for i in range(units)]
-    sched = make_scheduler(policy, total, units, granularity=gran, **kw)
+    sched = build_scheduler(policy, total, units, granularity=gran, **kw)
     pkgs = sorted(drain(sched, units, 1), key=lambda p: p.offset)
     for p in pkgs:
         assert p.offset % gran == 0, (p.offset, gran)
@@ -72,7 +73,7 @@ def test_no_overlap_and_termination(total, units, policy, seed):
     kw = {}
     if policy in ("static", "hguided", "work_stealing"):
         kw["speeds"] = [0.5 + 0.25 * i for i in range(units)]
-    sched = make_scheduler(policy, total, units, **kw)
+    sched = build_scheduler(policy, total, units, **kw)
     pkgs = sorted(drain(sched, units, seed), key=lambda p: p.offset)
     for a, b in zip(pkgs, pkgs[1:]):
         assert not a.rng.overlaps(b.rng), (a.rng, b.rng)
@@ -195,13 +196,13 @@ def test_work_stealing_single_unit_degenerates():
 
 def test_registry_and_validation():
     with pytest.raises(KeyError):
-        make_scheduler("nope", 10, 1)
+        build_scheduler("nope", 10, 1)
     with pytest.raises(ValueError):
-        make_scheduler("static", 0, 1)
+        build_scheduler("static", 0, 1)
     with pytest.raises(ValueError):
-        make_scheduler("hguided", 10, 2, speeds=[1.0])
+        build_scheduler("hguided", 10, 2, speeds=[1.0])
     with pytest.raises(ValueError):
-        make_scheduler("work_stealing", 10, 2, speeds=[1.0, -1.0])
-    s = make_scheduler("dyn17", 1000, 2)
+        build_scheduler("work_stealing", 10, 2, speeds=[1.0, -1.0])
+    s = build_scheduler("dyn17", 1000, 2)
     assert s.num_packages == 17
-    assert make_scheduler("work-stealing", 100, 2).name == "work_stealing"
+    assert build_scheduler("work-stealing", 100, 2).name == "work_stealing"

@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
+from repro.api import build_scheduler
 from repro.core import (ALL_BENCHMARKS, IRREGULAR, REGULAR, MemoryModel,
-                        PAPER_POWER, edp_ratio, geomean, make_scheduler,
+                        PAPER_POWER, edp_ratio, geomean,
                         paper_workload, simulate, solo_run)
 from repro.core.workloads import effective_shares
 
@@ -14,7 +15,7 @@ def run(name, policy, mem=MemoryModel.USM, hint_error=0.25):
     wl, cpu, gpu = paper_workload(name)
     speeds = effective_shares(wl, cpu, gpu, hint_error=hint_error)
     kw = {"speeds": speeds} if policy in ("static", "hguided") else {}
-    sched = make_scheduler(policy, wl.total, 2, **kw)
+    sched = build_scheduler(policy, wl.total, 2, **kw)
     res = simulate(sched, [cpu, gpu], wl, memory=mem)
     solo = solo_run(gpu, wl, memory=mem)
     return res, solo
@@ -108,7 +109,7 @@ def test_scalability_turning_point():
     small = None, None
     wl_s, cpu, gpu = paper_workload(name, size_scale=0.001)
     sp_small = (solo_run(gpu, wl_s).total_s /
-                simulate(make_scheduler("hguided", wl_s.total, 2,
+                simulate(build_scheduler("hguided", wl_s.total, 2,
                                         speeds=effective_shares(
                                             wl_s, cpu, gpu)),
                          [cpu, gpu], wl_s).total_s)
@@ -120,7 +121,7 @@ def test_scalability_turning_point():
 def test_matmul_llc_contention_at_scale():
     """§5.3: very large MatMul degrades co-execution toward GPU-only."""
     wl, cpu, gpu = paper_workload("matmul", size_scale=8.0)
-    sched = make_scheduler("hguided", wl.total, 2,
+    sched = build_scheduler("hguided", wl.total, 2,
                            speeds=effective_shares(wl, cpu, gpu))
     res = simulate(sched, [cpu, gpu], wl)
     solo = solo_run(gpu, wl)

@@ -57,13 +57,17 @@ def test_e2e_serving_batched_decode():
 
 def test_listing1_api_shape():
     """The paper's Listing 1, in this framework's Python rendering."""
+    from repro.api import CoexecSpec
+
     n = 1 << 12
     data = np.arange(n, dtype=np.float32)
     datav = 2.5
 
-    runtime = CoexecutorRuntime(policy="hguided")          # line 1
-    runtime.config(units=counits_from_devices(),           # line 2
-                   dist=0.35, memory="usm")
+    spec = (CoexecSpec.builder()                           # line 1
+            .policy("hguided").dist(0.35).memory("usm")    # line 2
+            .build())
+    runtime = CoexecutorRuntime.from_spec(
+        spec, units=counits_from_devices())
 
     def kernel(offset, chunk):                             # lines 3-13
         return chunk * datav
