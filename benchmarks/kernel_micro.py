@@ -1,7 +1,15 @@
-"""Kernel microbenchmarks: real wall-time of the jitted production paths
-(XLA oracles on CPU; the Pallas kernels are TPU-target, validated in
-interpret mode — timing interpret mode would measure the interpreter).
-Prints name,us_per_call,derived rows.
+"""Kernel microbenchmarks across the implementation-variant axis.
+
+Times every ``<name>_op`` wrapper (see :mod:`repro.kernels.ops`) at each
+implementation variant — ``xla`` (the jit-compiled jnp oracle), ``ref``
+(the eager oracle) and, where it actually compiles, ``pallas``. Off-TPU
+the Pallas bodies only run in interpret mode, which times the
+interpreter rather than the kernel, so the full-size profile skips them
+there; the ``--smoke`` profile shrinks every case enough that the
+interpret-mode row is still measured (every wrapper × every impl stays
+exercised in CI). Prints ``name,us_per_call,derived`` rows; the
+``kernels`` suite in ``benchmarks.run`` also serializes the structured
+rows as the schema-tagged ``BENCH_kernels.json`` artifact.
 """
 from __future__ import annotations
 
@@ -11,7 +19,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import demo_spheres, ref
+from repro.kernels import (KERNEL_IMPLS, demo_spheres, flash_attention_op,
+                           gaussian_op, linear_attention_op, mandelbrot_op,
+                           matmul_op, rap_op, raytrace_op, taylor_op)
 
 
 def _time(fn, *args, warmup=2, iters=10):
@@ -24,63 +34,101 @@ def _time(fn, *args, warmup=2, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def timed_impls(smoke: bool = False) -> tuple[str, ...]:
+    """The impl variants worth timing on this backend.
+
+    On TPU all of :data:`~repro.kernels.KERNEL_IMPLS`; elsewhere the
+    Pallas bodies only run in interpret mode, so they are timed only at
+    smoke sizes (where the interpreter cost is bounded) and skipped from
+    the full-size profile.
+    """
+    if jax.default_backend() == "tpu" or smoke:
+        return KERNEL_IMPLS
+    return ("xla", "ref")
+
+
+def _cases(smoke: bool) -> list:
+    """(name, label, op, args, size) per wrapper, sized per profile."""
     rng = np.random.default_rng(0)
-    rows = []
+    f32 = jnp.float32
 
-    a = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
-    b = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
-    f = jax.jit(ref.matmul)
-    us = _time(f, a, b)
-    rows.append(("kernel/matmul_512", round(us, 1),
-                 f"gflops={2 * 512**3 / us / 1e3:.1f}"))
+    mm = 64 if smoke else 512
+    a = jnp.asarray(rng.normal(size=(mm, mm)), f32)
+    b = jnp.asarray(rng.normal(size=(mm, mm)), f32)
 
-    img = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
-    f = jax.jit(ref.gaussian_blur)
-    rows.append(("kernel/gaussian_1024", round(_time(f, img), 1),
-                 "5x5 separable"))
+    gh = 128 if smoke else 1024
+    img = jnp.asarray(rng.normal(size=(gh, gh)), f32)
 
-    x = jnp.asarray(rng.uniform(-3, 3, size=(1 << 20,)), jnp.float32)
-    f = jax.jit(ref.taylor_sin)
-    rows.append(("kernel/taylor_1M", round(_time(f, x), 1), "12 terms"))
+    tn = 1 << (12 if smoke else 20)
+    x = jnp.asarray(rng.uniform(-3, 3, size=(tn,)), f32)
 
-    side = 512
+    side = 64 if smoke else 512
     re_ = np.linspace(-2.2, 0.8, side, dtype=np.float32)
     im = np.linspace(-1.4, 1.4, side, dtype=np.float32)
     cre, cim = [jnp.asarray(g) for g in np.meshgrid(re_, im)]
-    f = jax.jit(lambda a, b: ref.mandelbrot(a, b, max_iter=64))
-    rows.append(("kernel/mandelbrot_512", round(_time(f, cre, cim), 1),
-                 "64 iters"))
 
-    n = 1 << 18
-    dx, dy = rng.uniform(-.4, .4, (2, n)).astype(np.float32)
+    rn = 1 << (12 if smoke else 18)
+    dx, dy = rng.uniform(-.4, .4, (2, rn)).astype(np.float32)
     dz = np.sqrt(np.maximum(1 - dx**2 - dy**2, .5)).astype(np.float32)
     sph = demo_spheres()
-    f = jax.jit(ref.raytrace)
-    rows.append(("kernel/ray_256k", round(
-        _time(f, jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz), sph),
-        1), "8 spheres"))
 
-    vals = jnp.asarray(rng.normal(size=(1 << 14, 128)), jnp.float32)
-    lens = jnp.asarray(rng.integers(0, 128, size=(1 << 14,)), jnp.int32)
-    f = jax.jit(ref.rap)
-    rows.append(("kernel/rap_16k", round(_time(f, vals, lens), 1),
-                 "L=128"))
+    rap_n, rap_l = (256, 64) if smoke else (1 << 14, 128)
+    vals = jnp.asarray(rng.normal(size=(rap_n, rap_l)), f32)
+    lens = jnp.asarray(rng.integers(0, rap_l, size=(rap_n,)), jnp.int32)
 
-    B, H, T, D = 1, 8, 1024, 64
-    q = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.bfloat16)
-    k = jnp.asarray(rng.normal(size=(B, 4, T, D)), jnp.bfloat16)
-    v = jnp.asarray(rng.normal(size=(B, 4, T, D)), jnp.bfloat16)
-    f = jax.jit(lambda q, k, v: ref.attention(q, k, v))
-    rows.append(("kernel/attention_1k", round(_time(f, q, k, v), 1),
-                 "causal GQA"))
+    B, H, Hkv, T, D = (1, 4, 2, 128, 32) if smoke else (1, 8, 4, 1024, 64)
+    fa_dt = jnp.float32 if smoke else jnp.bfloat16
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)), fa_dt)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), fa_dt)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), fa_dt)
 
-    BH, T2, Dk = 8, 2048, 64
-    q2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)), jnp.float32)
-    k2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)) * .2, jnp.float32)
-    v2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)), jnp.float32)
-    ld = jnp.asarray(-np.abs(rng.normal(size=(BH, T2)) * .1), jnp.float32)
-    f = jax.jit(lambda *a: ref.chunked_linear_attention(*a))
-    rows.append(("kernel/linattn_2k", round(_time(f, q2, k2, v2, ld), 1),
-                 "chunked SSD"))
+    BH, T2, Dk = (2, 128, 16) if smoke else (8, 2048, 64)
+    q2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)), f32)
+    k2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)) * .2, f32)
+    v2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)), f32)
+    ld = jnp.asarray(-np.abs(rng.normal(size=(BH, T2)) * .1), f32)
+
+    return [
+        ("matmul", f"{mm}", matmul_op, (a, b), mm * mm),
+        ("gaussian", f"{gh}", gaussian_op, (img,), gh * gh),
+        ("taylor", f"{tn >> 10}k", taylor_op, (x,), tn),
+        ("mandelbrot", f"{side}", mandelbrot_op, (cre, cim), side * side),
+        ("ray", f"{rn >> 10}k", raytrace_op,
+         (jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz), sph), rn),
+        ("rap", f"{rap_n}", rap_op, (vals, lens), rap_n),
+        ("flash_attention", f"T{T}", flash_attention_op, (q, k, v), T),
+        ("linear_attention", f"T{T2}", linear_attention_op,
+         (q2, k2, v2, ld), T2),
+    ]
+
+
+def structured_rows(*, smoke: bool = False) -> list[dict]:
+    """One measurement dict per (wrapper, impl) pair.
+
+    Row contract (checked by ``scripts/check_bench_schema.py``): kind,
+    kernel, impl, size (index-space items), iters, us_per_call.
+    """
+    rows = []
+    for name, label, op, args, size in _cases(smoke):
+        for impl in timed_impls(smoke):
+            # eager ref rows re-dispatch per op — cap their iteration
+            # budget so the oracle baseline doesn't dominate the suite
+            warmup, iters = (1, 3) if (smoke or impl == "ref") else (2, 10)
+
+            def fn(*a, _op=op, _impl=impl):
+                return _op(*a, impl=_impl)
+
+            us = _time(fn, *args, warmup=warmup, iters=iters)
+            rows.append(dict(kind="kernel", kernel=name, impl=impl,
+                             label=label, size=size, iters=iters,
+                             us_per_call=round(us, 2)))
     return rows
+
+
+def run(structured: list | None = None, *, smoke: bool = False):
+    """Human CSV rows for the driver; reuses prebuilt structured rows."""
+    if structured is None:
+        structured = structured_rows(smoke=smoke)
+    return [(f"kernel/{r['kernel']}_{r['label']}[{r['impl']}]",
+             round(r["us_per_call"], 1),
+             f"size={r['size']}") for r in structured]

@@ -17,8 +17,11 @@ per-workload/policy/memory throughput plus the data plane's dispatch
 and staging-copy counters, and ``BENCH_coexec_multi.json`` (path via
 ``--bench-multi-json``) with the multi-tenant admission sweep —
 fairness curves included, so the preemption win is a tracked quantity.
-Both documents carry ``schema_version``/``suite`` fields and are
-validated by ``scripts/check_bench_schema.py`` in CI's docs job.
+The ``kernels`` suite likewise writes ``BENCH_kernels.json`` (path via
+``--bench-kernels-json``) with one row per (wrapper, impl) pair along
+the ``pallas``/``xla``/``ref`` implementation axis. All three documents
+carry ``schema_version``/``suite`` fields and are validated by
+``scripts/check_bench_schema.py`` in CI's docs job.
 """
 from __future__ import annotations
 
@@ -55,6 +58,11 @@ def build_parser(suite_names) -> argparse.ArgumentParser:
                     metavar="PATH",
                     help="where to write the machine-readable coexec-multi "
                          "results (default: %(default)s)")
+    ap.add_argument("--bench-kernels-json", default="BENCH_kernels.json",
+                    metavar="PATH",
+                    help="where to write the machine-readable per-impl "
+                         "kernel microbenchmark results "
+                         "(default: %(default)s)")
     add_spec_args(ap)
     return ap
 
@@ -110,14 +118,21 @@ def main() -> None:
                         structured)
         return hetero_bench.run_coexec_multi(spec, structured=structured)
 
+    def kernels_suite():
+        structured = kernel_micro.structured_rows(smoke=args.smoke)
+        write_bench_doc(args.bench_kernels_json, "kernels", spec,
+                        structured)
+        return kernel_micro.run(structured=structured)
+
     suites = dict(paper_figs.ALL)
-    suites["kernels"] = kernel_micro.run
+    suites["kernels"] = kernels_suite
     suites["hetero"] = hetero_bench.run
     suites["coexec"] = coexec_suite
     suites["coexec-multi"] = coexec_multi_suite
     suites["roofline"] = roofline_table.run
 
     wanted = args.suites or list(suites)
+    unknown = [key for key in wanted if key not in suites]
     print("name,value,derived")
     for key in wanted:
         if key not in suites:
@@ -126,6 +141,10 @@ def main() -> None:
             continue
         for name, value, derived in suites[key]():
             print(f"{name},{value},{derived}")
+    if unknown:
+        # a typo'd suite name must fail the run (CI would otherwise pass
+        # silently while measuring nothing)
+        raise SystemExit(2)
 
 
 if __name__ == "__main__":

@@ -2,7 +2,8 @@
 """Schema check for the machine-readable benchmark artifacts.
 
 Validates the JSON documents ``benchmarks.run`` writes
-(``BENCH_coexec.json`` / ``BENCH_coexec_multi.json``) so CI fails fast
+(``BENCH_coexec.json`` / ``BENCH_coexec_multi.json`` /
+``BENCH_kernels.json``) so CI fails fast
 when a row key is renamed or dropped — downstream perf-trajectory
 tooling reads these artifacts across PRs, which makes their shape an
 API. Stdlib-only, enforced in CI's docs job and in tier-1 via
@@ -17,7 +18,7 @@ Checks per document:
   ``REQUIRED``), with numeric values where numbers are expected.
 
     python scripts/check_bench_schema.py BENCH_coexec.json \\
-        BENCH_coexec_multi.json
+        BENCH_coexec_multi.json BENCH_kernels.json
 """
 from __future__ import annotations
 
@@ -43,6 +44,11 @@ REQUIRED: dict[str, dict[str, set]] = {
         "numeric": {"tenants", "p50_ms", "p99_ms", "fairness",
                     "fairness_curve_mean", "fairness_curve_min",
                     "packages", "fused_batches", "total_ms"},
+    },
+    "kernels": {
+        "all": {"kind", "kernel", "impl", "label", "size", "iters",
+                "us_per_call"},
+        "numeric": {"size", "iters", "us_per_call"},
     },
 }
 
@@ -87,7 +93,8 @@ def check_doc(path: str, doc) -> list[str]:
 
 def main(argv: list[str]) -> int:
     """Validate every artifact path given; returns the exit code."""
-    paths = argv or ["BENCH_coexec.json", "BENCH_coexec_multi.json"]
+    paths = argv or ["BENCH_coexec.json", "BENCH_coexec_multi.json",
+                     "BENCH_kernels.json"]
     errors: list[str] = []
     for path in paths:
         try:

@@ -302,11 +302,17 @@ def kernel_plugin(name: str) -> KernelPlugin:
     return plugin
 
 
-def build_kernel(name: str, **options):
+def build_kernel(name: str, *, impl: Optional[str] = None, **options):
     """Build (resolve) a registered kernel by name.
 
     Args:
         name: registered kernel name.
+        impl: implementation variant to select (``"pallas"`` / ``"xla"``
+            / ``"ref"``). ``None`` or ``"auto"`` leaves the choice to the
+            kernel's backend-aware default. Anything else requires the
+            plugin to declare an ``impl`` field — kernels without
+            variants reject the request loudly instead of silently
+            serving their only body.
         **options: kernel options (validated against declared fields).
 
     Returns:
@@ -315,9 +321,16 @@ def build_kernel(name: str, **options):
 
     Raises:
         KeyError: unknown kernel.
-        ValueError: unknown option key (named, with accepted fields).
+        ValueError: unknown option key (named, with accepted fields), or
+            an impl request against a kernel with no ``impl`` field.
     """
     plugin = kernel_plugin(name)
+    if impl not in (None, "auto"):
+        if "impl" not in plugin.fields:
+            raise ValueError(
+                f"kernel {plugin.name!r} has no implementation variants "
+                f"(no 'impl' field); cannot select impl={impl!r}")
+        options["impl"] = impl
     unknown = sorted(set(options) - set(plugin.fields))
     if unknown:
         raise ValueError(

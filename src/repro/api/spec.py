@@ -403,6 +403,11 @@ class WorkloadSpec(_SubSpec):
             "kernel", "registered package kernel for the real engine "
                       "(default: the workload's same-named kernel, "
                       "falling back to taylor)"))
+    kernel_impl: str = dataclasses.field(
+        default="auto", metadata=_cli(
+            "kernel-impl", "kernel implementation variant to serve "
+                           "(auto = pallas on TPU, xla elsewhere)",
+            choices=("auto", "pallas", "xla", "ref")))
     size_scale: float = dataclasses.field(
         default=1.0, metadata=_cli(
             "size-scale", "problem-size multiplier for the profile "
@@ -434,6 +439,10 @@ class WorkloadSpec(_SubSpec):
         if self.kernel and self.kernel not in registry.kernel_names():
             raise KeyError(f"unknown kernel {self.kernel!r}; choose from "
                            f"{list(registry.kernel_names())}")
+        if self.kernel_impl not in ("auto", "pallas", "xla", "ref"):
+            raise ValueError(
+                f"unknown kernel_impl {self.kernel_impl!r}; choose from "
+                f"['auto', 'pallas', 'xla', 'ref']")
         if self.items <= 0 or self.requests <= 0 or self.concurrent <= 0:
             raise ValueError("items/requests/concurrent must be positive")
         if self.size_scale <= 0:
@@ -467,10 +476,15 @@ class WorkloadSpec(_SubSpec):
     def build_kernel(self):
         """Resolve the served kernel through the kernel registry.
 
+        The :attr:`kernel_impl` axis is passed through, so ``--kernel-impl
+        pallas`` serves the Pallas body of the selected kernel on both
+        backends (``auto`` defers to the kernel's backend-aware default).
+
         Returns:
             The registered :class:`~repro.core.dataplane.CoexecKernel`.
         """
-        return registry.build_kernel(self.resolve_kernel())
+        return registry.build_kernel(self.resolve_kernel(),
+                                     impl=self.kernel_impl)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -757,6 +771,7 @@ class CoexecSpecBuilder:
 
     def workload(self, name: Optional[str] = None, *,
                  kernel: Optional[str] = None,
+                 kernel_impl: Optional[str] = None,
                  items: Optional[int] = None,
                  requests: Optional[int] = None,
                  concurrent: Optional[int] = None,
@@ -768,6 +783,8 @@ class CoexecSpecBuilder:
             wl = wl.replace(name=str(name))
         if kernel is not None:
             wl = wl.replace(kernel=str(kernel))
+        if kernel_impl is not None:
+            wl = wl.replace(kernel_impl=str(kernel_impl))
         if items is not None:
             wl = wl.replace(items=int(items))
         if requests is not None:

@@ -86,6 +86,18 @@ class Director:
         # stop the (daemon) workers of a dropped Director so per-request
         # Director construction cannot accumulate parked threads
         try:
-            self.engine.shutdown(wait=False)
+            engine = self.engine
+        except AttributeError:
+            return               # __init__ never got to set the engine
+        try:
+            engine.shutdown(wait=False)
+        except RuntimeError:
+            pass                 # interpreter teardown: threading gone
         except Exception:
-            pass
+            # anything else is a real bug in the shutdown path — keep it
+            # visible instead of silently dropping it (raising from
+            # __del__ would only reach sys.unraisablehook)
+            import logging
+
+            logging.getLogger(__name__).exception(
+                "unexpected error shutting down a dropped Director")

@@ -10,19 +10,22 @@ removed when its deprecation window closed).
 """
 from . import ref
 from .flash_attention import flash_attention
-from .gaussian import gaussian_blur
+from .gaussian import gaussian_blur, gaussian_blur_halo
 from .linear_attention import linear_attention
 from .mandelbrot import mandelbrot
 from .matmul import matmul
-from .ops import (flash_attention_op, gaussian_op, linear_attention_op,
-                  mandelbrot_op, matmul_op, rap_op, raytrace_op, taylor_op)
+from .ops import (KERNEL_IMPLS, default_impl, flash_attention_op,
+                  gaussian_op, linear_attention_op, mandelbrot_op,
+                  matmul_op, rap_op, raytrace_op, resolve_impl, taylor_op)
 from .rap import rap
 from .raytrace import demo_spheres, raytrace
 from .taylor import taylor_sin
 
 __all__ = [
-    "demo_spheres", "flash_attention", "flash_attention_op", "gaussian_blur",
+    "KERNEL_IMPLS", "default_impl", "demo_spheres", "flash_attention",
+    "flash_attention_op", "gaussian_blur", "gaussian_blur_halo",
     "gaussian_op", "linear_attention", "linear_attention_op", "mandelbrot",
     "mandelbrot_op", "matmul", "matmul_op", "rap",
-    "rap_op", "raytrace", "raytrace_op", "ref", "taylor_op", "taylor_sin",
+    "rap_op", "raytrace", "raytrace_op", "ref", "resolve_impl",
+    "taylor_op", "taylor_sin",
 ]

@@ -30,24 +30,50 @@ def _blur_kernel(s0, s1, s2, s3, s4, o_ref):
                   t[4] * xp[:, 4:W + 4])
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def gaussian_blur(img: jax.Array, *, bm: int = 128,
-                  interpret: bool = True) -> jax.Array:
-    """5x5 separable Gaussian blur, zero padding. img: (H, W) float32."""
-    H, W = img.shape
-    bm = min(bm, H)
+def _blur_blocks(padded: jax.Array, H: int, W: int, bm: int,
+                 interpret: bool) -> jax.Array:
+    """Run the blur over `padded` (H+4 rows incl. the 2+2 vertical halo).
+
+    Returns the (H, W) interior result; rows past H in the last block are
+    computed on zero padding and sliced off.
+    """
     pm = (-H) % bm
-    padded = jnp.pad(img, ((2, 2 + pm), (0, 0)))
+    padded = jnp.pad(padded, ((0, pm), (0, 0)))
     Hp = H + pm
     shifts = [jax.lax.dynamic_slice_in_dim(padded, d, Hp, axis=0)
               for d in range(5)]
     spec = pl.BlockSpec((bm, W), lambda i: (i, 0))
     out = pl.pallas_call(
         _blur_kernel,
-        out_shape=jax.ShapeDtypeStruct((Hp, W), img.dtype),
+        out_shape=jax.ShapeDtypeStruct((Hp, W), padded.dtype),
         grid=(Hp // bm,),
         in_specs=[spec] * 5,
         out_specs=spec,
         interpret=interpret,
     )(*shifts)
     return out[:H]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def gaussian_blur(img: jax.Array, *, bm: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """5x5 separable Gaussian blur, zero padding. img: (H, W) float32."""
+    H, W = img.shape
+    return _blur_blocks(jnp.pad(img, ((2, 2), (0, 0))), H, W,
+                        min(bm, H), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def gaussian_blur_halo(img: jax.Array, *, bm: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """Blur the interior of an already 2+2-row-halo'd image.
+
+    The co-execution data plane hands each package its row range plus two
+    rows of vertical context on either side (zero-filled beyond the full
+    image), so this entry consumes the halo directly instead of re-padding:
+    ``img`` is (H + 4, W) and the result is the (H, W) interior — the
+    halo-aware twin of :func:`gaussian_blur` for split launches.
+    """
+    H = img.shape[0] - 4
+    W = img.shape[1]
+    return _blur_blocks(img, H, W, min(bm, H), interpret)

@@ -124,7 +124,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "multi" if multi_pod else "single"
     chips = mesh.devices.size
-    t0 = time.time()
+    # perf_counter: compile timing must be monotonic (wall clock jumps
+    # under NTP adjustment)
+    t0 = time.perf_counter()
 
     with jax.sharding.set_mesh(mesh):
         params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -261,7 +263,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         hbm_per_dev=hbm_footprint,
     )
     out = {"status": "ok", "n_params": n_params,
-           "compile_seconds": round(time.time() - t0, 1),
+           "compile_seconds": round(time.perf_counter() - t0, 1),
            "state_bytes_per_dev": state_bytes_dev,
            "memory_analysis": mem, **roof.to_dict()}
     if verbose:

@@ -17,7 +17,9 @@ drives the real engine and the DES identically, `--spec-json` dumps the
 resolved spec as a reproducible artifact, and `--list` prints every
 registered scheduler/workload/kernel with its declared option fields.
 The served kernel is any registered kernel (`--kernel`, defaulting to
-the workload's same-named kernel), and `--memory {usm,buffers}` selects
+the workload's same-named kernel), `--kernel-impl {auto,pallas,xla,ref}`
+picks its implementation variant (the Pallas fast path vs the compiled
+XLA oracle; auto is backend-aware), and `--memory {usm,buffers}` selects
 the engine's real data plane — rows report its dispatch and
 staging-copy counters. `--policy all` sweeps every registered policy;
 with `--coexec sim` the same sweep runs on the DES instead of real
@@ -90,6 +92,7 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
     dispatch/copy counters are aggregated into each row.
     """
     from repro.api import kernel_demo_inputs
+    from repro.kernels import resolve_impl
     from ..core import CoexecutorRuntime, service_fairness_curve
 
     if spec is None:
@@ -100,6 +103,7 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
     requests = spec.workload.requests
     concurrent = spec.workload.concurrent
     kname = spec.workload.resolve_kernel()
+    impl = resolve_impl(spec.workload.kernel_impl)
     kernel = spec.workload.build_kernel()
     datas = [kernel_demo_inputs(kname, n, seed=i) for i in range(requests)]
     rows = []
@@ -146,7 +150,8 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
             ticked.append((clock, tenant, items))
         curve = service_fairness_curve(
             ticked, [f"t{i}" for i in range(requests)])
-        rows.append(dict(kernel=kname, memory=spec.memory.model,
+        rows.append(dict(kernel=kname, impl=impl,
+                         memory=spec.memory.model,
                          policy=policy, requests=served, n=n,
                          concurrent=concurrent, seconds=dt, packages=pkgs,
                          req_per_s=served / dt,
@@ -299,7 +304,8 @@ def coexec_multi_rows(spec=None, *, tenants=None, policies=None,
 
 def serve_coexec_real(spec) -> None:
     for row in coexec_real_rows(spec):
-        print(f"[serve/coexec] {row['kernel']}/{row['policy']:13s} "
+        print(f"[serve/coexec] {row['kernel']}[{row['impl']}]"
+              f"/{row['policy']:13s} "
               f"({spec.admission.policy}"
               f"{'+fuse' if spec.admission.fuse else ''}"
               f"{'+preempt' if spec.admission.preempt else ''}"

@@ -47,6 +47,8 @@ SERVE_STYLE_ARGV = [
     ["--max-inflight", "8", "--fuse-threshold", "2048", "--fuse-limit",
      "16", "--fuse-wait-s", "0.0", "--quantum", "512"],
     ["--requests", "4", "--concurrent", "2"],
+    ["--kernel-impl", "pallas", "--kernel", "taylor"],
+    ["--kernel-impl", "ref", "--workload", "gaussian"],
 ]
 
 
@@ -114,6 +116,8 @@ def test_bad_flag_values_error_cleanly():
         parser.parse_args(["--admission", "lifo"])      # not a choice
     with pytest.raises(SystemExit):
         parser.parse_args(["--scheduler-opt", "no-equals-sign"])
+    with pytest.raises(SystemExit):
+        parser.parse_args(["--kernel-impl", "opencl"])  # not a choice
 
 
 def test_spec_json_flag_exists():

@@ -213,3 +213,54 @@ def test_runtime_reuses_engine_across_launches():
         assert rt.engine is None
         rt.launch(N, affine_kernel, [np.zeros(N, np.float32)])
         assert rt.engine is not engine
+
+
+# ---------------------------------------------------------------------------
+# Director facade: error surfacing and teardown hygiene
+# ---------------------------------------------------------------------------
+
+def test_director_surfaces_unexpected_kernel_exception():
+    """A kernel bug must raise out of `launch`, not vanish — and the
+    Director must stay serviceable for the next launch."""
+    from repro.core.director import Director
+
+    def exploding(offset, chunk):
+        raise RuntimeError("boom: kernel bug")
+
+    data = np.arange(1 << 10, dtype=np.float32)
+    with Director(two_units()) as d:
+        with pytest.raises(RuntimeError, match="boom"):
+            d.launch(sched_for("dyn16", len(data)), exploding, [data],
+                     np.zeros_like(data))
+        out = np.zeros_like(data)
+        pkgs = d.launch(sched_for("dyn16", len(data)), affine_kernel,
+                        [data], out)
+        np.testing.assert_allclose(out, expected(data))
+        assert pkgs
+
+
+def test_director_del_reports_unexpected_shutdown_error(monkeypatch, caplog):
+    """__del__ swallows only interpreter-teardown RuntimeError; anything
+    else is a real bug in the shutdown path and must stay visible."""
+    from repro.core.director import Director
+
+    d = Director(two_units())
+    monkeypatch.setattr(d.engine, "shutdown",
+                        lambda wait=True: (_ for _ in ()).throw(
+                            OSError("socket vanished")))
+    with caplog.at_level("ERROR", logger="repro.core.director"):
+        d.__del__()
+    assert "unexpected error shutting down" in caplog.text
+    assert "socket vanished" in caplog.text
+
+
+def test_director_del_tolerates_interpreter_teardown(monkeypatch, caplog):
+    from repro.core.director import Director
+
+    d = Director(two_units())
+    monkeypatch.setattr(d.engine, "shutdown",
+                        lambda wait=True: (_ for _ in ()).throw(
+                            RuntimeError("can't create new thread")))
+    with caplog.at_level("ERROR", logger="repro.core.director"):
+        d.__del__()                      # swallowed: teardown race
+    assert caplog.text == ""

@@ -1,0 +1,298 @@
+"""The kernel implementation-variant axis (pallas / xla / ref).
+
+Pins the contract added with the Pallas fast path:
+
+* every ``<name>_op`` wrapper agrees across ``pallas`` (interpret mode
+  off-TPU), ``xla`` and ``ref`` on randomized shapes;
+* the wrapper default is backend-aware (never interpret-mode Pallas by
+  accident off-TPU);
+* ``build_kernel(name, impl=...)`` round-trips through the registry —
+  memoized per canonical impl, "auto" aliased to the backend default,
+  and ``temporary_plugins`` overrides are not shadowed by the
+  ``lru_cache``'d builtin factories;
+* the gaussian + matmul Pallas ``CoexecKernel`` bodies run end-to-end
+  on the real engine across all four policies and both data planes,
+  pinned against the ``ref`` oracle (documented f32 tolerance — the
+  Pallas matmul accumulates through a VMEM f32 scratch, so it is not
+  bitwise against ``jnp.dot``), while USM vs BUFFERS stays bitwise
+  within each impl.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.api import (CoexecSpec, build_kernel, kernel_demo_inputs,
+                       register_kernel, scheduler_names, temporary_plugins)
+from repro.core import (ArgSpec, CoexecEngine, CoexecKernel, OutputSpec)
+from repro.kernels import (KERNEL_IMPLS, default_impl, demo_spheres,
+                           flash_attention_op, gaussian_op,
+                           linear_attention_op, mandelbrot_op, matmul_op,
+                           rap_op, raytrace_op, resolve_impl, taylor_op)
+from repro.kernels import ops, ref
+
+PAPER_KERNELS = ("gaussian", "mandelbrot", "matmul", "rap", "ray", "taylor")
+N = 220          # engine tests: not a power of two (uneven packages)
+
+rng = np.random.default_rng(7)
+
+
+def base_spec(memory: str = "usm", policy: str = "hguided") -> CoexecSpec:
+    return (CoexecSpec.builder()
+            .policy(policy)
+            .units(count=2, kinds=("cpu", "cpu"), speed_hints=(0.4, 0.6))
+            .dist(0.4)
+            .memory(memory)
+            .build())
+
+
+@pytest.fixture(scope="module")
+def shared_units():
+    """One unit set for the whole module (warm jit caches across tests)."""
+    return base_spec().build_units()
+
+
+def run_engine(memory, kernel, inputs, units, policy="hguided"):
+    spec = base_spec(memory, policy)
+    with CoexecEngine.from_spec(spec, units=units) as engine:
+        sched = spec.build_scheduler(N, len(units))
+        h = engine.submit(sched, kernel, inputs, kernel.alloc_out(N, inputs))
+        out = h.result(timeout=120)
+    return out.copy(), h.stats
+
+
+# ---------------------------------------------------------------------------
+# Wrapper parity: pallas (interpret) vs ref on randomized shapes
+# ---------------------------------------------------------------------------
+
+def _wrapper_cases():
+    """(name, op, args, kwargs, rtol, atol) per wrapper, random shapes."""
+    m, k, n = rng.integers(17, 90, size=3)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+
+    h, w = rng.integers(20, 150, size=2)
+    img = jnp.asarray(rng.normal(size=(h, w)), jnp.float32)
+
+    x = jnp.asarray(rng.uniform(-3, 3, size=(int(rng.integers(100, 3000)),)),
+                    jnp.float32)
+
+    side = int(rng.integers(16, 40))
+    re_ = np.linspace(-2.2, 0.8, side, dtype=np.float32)
+    im = np.linspace(-1.4, 1.4, side, dtype=np.float32)
+    cre, cim = [jnp.asarray(g) for g in np.meshgrid(re_, im)]
+
+    rn = int(rng.integers(200, 900))
+    dx, dy = rng.uniform(-.4, .4, (2, rn)).astype(np.float32)
+    dz = np.sqrt(np.maximum(1 - dx**2 - dy**2, .5)).astype(np.float32)
+
+    rap_n, rap_l = int(rng.integers(50, 300)), int(rng.integers(16, 70))
+    vals = jnp.asarray(rng.normal(size=(rap_n, rap_l)), jnp.float32)
+    lens = jnp.asarray(rng.integers(0, rap_l + 1, size=(rap_n,)), jnp.int32)
+
+    B, Hq, Hkv, T, D = 1, 2, 1, 64, 16
+    q = jnp.asarray(rng.normal(size=(B, Hq, T, D)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), jnp.float32)
+
+    BH, T2, Dk, Dv = 2, 96, 8, 12
+    q2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(size=(BH, T2, Dk)) * .2, jnp.float32)
+    v2 = jnp.asarray(rng.normal(size=(BH, T2, Dv)), jnp.float32)
+    ld = jnp.asarray(-np.abs(rng.normal(size=(BH, T2)) * .1), jnp.float32)
+
+    return {
+        "matmul": (matmul_op, (a, b), dict(bm=64, bn=64, bk=64),
+                   2e-5, 2e-5),
+        "gaussian": (gaussian_op, (img,), dict(bm=32), 1e-5, 1e-5),
+        "taylor": (taylor_op, (x,), dict(terms=12, bm=8), 1e-5, 1e-6),
+        "mandelbrot": (mandelbrot_op, (cre, cim),
+                       dict(max_iter=48, bm=8), 0.0, 0.0),
+        "raytrace": (raytrace_op,
+                     (jnp.asarray(dx), jnp.asarray(dy), jnp.asarray(dz),
+                      demo_spheres(5)), dict(bm=8), 1e-3, 1e-4),
+        "rap": (rap_op, (vals, lens), dict(bm=32), 1e-5, 1e-5),
+        "flash_attention": (flash_attention_op, (q, kk, v),
+                            dict(bq=32, bk=32), 2e-5, 2e-5),
+        "linear_attention": (linear_attention_op, (q2, k2, v2, ld),
+                             dict(chunk=32), 3e-4, 3e-4),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(_wrapper_cases()))
+def test_wrapper_pallas_matches_ref(name):
+    op, args, kw, rtol, atol = _wrapper_cases()[name]
+    got = op(*args, impl="pallas", **kw)
+    # the ref oracles take no block-size arguments
+    ref_kw = {k: v for k, v in kw.items() if k in ("terms", "max_iter")}
+    want = op(*args, impl="ref", **ref_kw)
+    assert got.dtype == want.dtype
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("name", sorted(_wrapper_cases()))
+def test_wrapper_xla_matches_ref_bitwise(name):
+    op, args, kw, _, _ = _wrapper_cases()[name]
+    ref_kw = {k: v for k, v in kw.items()
+              if k in ("terms", "max_iter")}
+    got = op(*args, impl="xla", **ref_kw)
+    want = op(*args, impl="ref", **ref_kw)
+    # same jnp program, jitted vs eager: XLA may fuse differently, so
+    # allow float round-off but nothing structural
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), rtol=1e-5, atol=1e-5)
+
+
+def test_wrapper_default_is_backend_aware(monkeypatch):
+    """The default impl never silently selects interpret-mode Pallas."""
+    assert resolve_impl(None) == default_impl()
+    assert resolve_impl("auto") == default_impl()
+    monkeypatch.setattr(ops, "_on_tpu", lambda: False)
+    assert default_impl() == "xla"
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    assert default_impl() == "pallas"
+    with pytest.raises(ValueError, match="impl"):
+        resolve_impl("opencl")
+
+
+def test_wrapper_default_matches_explicit_default_impl():
+    x = jnp.asarray(rng.uniform(-2, 2, 512), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(taylor_op(x)),
+                                  np.asarray(taylor_op(x,
+                                                       impl=default_impl())))
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trips for the impl axis
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", PAPER_KERNELS)
+def test_build_kernel_impl_round_trips(name):
+    auto = build_kernel(name)
+    assert auto is build_kernel(name, impl="auto")
+    assert auto is build_kernel(name, impl=default_impl())
+    for impl in KERNEL_IMPLS:
+        k = build_kernel(name, impl=impl)
+        assert k is build_kernel(name, impl=impl)       # memoized
+        assert k.name == auto.name                      # same protocol id
+        # identical declared semantics (defaults are fresh closures)
+        assert [(s.name, s.role, s.axis, s.halo) for s in k.args] \
+            == [(s.name, s.role, s.axis, s.halo) for s in auto.args]
+    assert build_kernel(name, impl="pallas") \
+        is not build_kernel(name, impl="ref")
+
+
+def test_build_kernel_rejects_unknown_impl():
+    with pytest.raises(ValueError, match="impl"):
+        build_kernel("taylor", impl="cuda")
+
+
+def test_impl_request_against_variantless_kernel_is_loud():
+    """A kernel with no 'impl' field rejects impl= instead of silently
+    serving its only body."""
+    def factory():
+        return CoexecKernel("single", lambda off, x: x * 2.0,
+                            (ArgSpec("x"),), OutputSpec())
+
+    with temporary_plugins():
+        register_kernel("single", factory)
+        assert build_kernel("single")(0, np.ones(4, np.float32))[0] == 2.0
+        with pytest.raises(ValueError, match="implementation variants"):
+            build_kernel("single", impl="pallas")
+
+
+def test_temporary_override_not_shadowed_by_factory_cache():
+    """An overwrite inside temporary_plugins wins over the lru_cache'd
+    builtin factory, and the builtin comes back intact afterwards."""
+    builtin = build_kernel("taylor")
+
+    def factory(**kw):
+        return CoexecKernel("taylor", lambda off, x: x + 1.0,
+                            (ArgSpec("x"),), OutputSpec())
+
+    with temporary_plugins():
+        register_kernel("taylor", factory, overwrite=True)
+        custom = build_kernel("taylor")
+        assert custom is not builtin
+        x = np.zeros(8, np.float32)
+        np.testing.assert_allclose(np.asarray(custom(0, x)), x + 1.0)
+        with pytest.raises(ValueError, match="implementation variants"):
+            build_kernel("taylor", impl="pallas")
+    assert build_kernel("taylor") is builtin            # cache not stale
+    assert build_kernel("taylor", impl="pallas") is not builtin
+
+
+def test_workload_spec_kernel_impl_flows_to_registry():
+    wl = (CoexecSpec.builder()
+          .workload("taylor", kernel_impl="pallas").build().workload)
+    assert wl.kernel_impl == "pallas"
+    assert wl.build_kernel() is build_kernel("taylor", impl="pallas")
+    # default stays the backend-aware auto
+    assert CoexecSpec().workload.build_kernel() is build_kernel("taylor")
+    with pytest.raises(ValueError, match="kernel_impl"):
+        (CoexecSpec.builder()
+         .workload("taylor", kernel_impl="opencl").build())
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end: pallas CoexecKernels across policies and planes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ("gaussian", "matmul"))
+def test_pallas_engine_parity_all_policies_both_planes(name, shared_units):
+    """The flagship halo (gaussian) and broadcast (matmul) kernels serve
+    their Pallas bodies under every policy on both data planes, pinned
+    against the ref oracle (f32 tolerance, see module docstring)."""
+    pallas_k = build_kernel(name, impl="pallas")
+    ref_k = build_kernel(name, impl="ref")
+    inputs = kernel_demo_inputs(name, N, seed=9)
+    want, _ = run_engine("usm", ref_k, inputs, shared_units, policy="dyn8")
+    for policy in scheduler_names():
+        for memory in ("usm", "buffers"):
+            out, _ = run_engine(memory, pallas_k, inputs, shared_units,
+                                policy=policy)
+            assert_allclose(out, want, rtol=2e-5, atol=2e-5,
+                            err_msg=f"{name}/{policy}/{memory}")
+
+
+@pytest.mark.parametrize("name", PAPER_KERNELS)
+def test_pallas_usm_buffers_bitwise_parity(name, shared_units):
+    """Within the pallas impl, USM and BUFFERS stay bitwise identical
+    (same executables, same padded chunks) — the data-plane guarantee
+    holds for every registered kernel's Pallas variant too."""
+    kernel = build_kernel(name, impl="pallas")
+    inputs = kernel_demo_inputs(name, N, seed=7)
+    usm_out, usm_stats = run_engine("usm", kernel, inputs, shared_units,
+                                    policy="dyn16")
+    buf_out, buf_stats = run_engine("buffers", kernel, inputs, shared_units,
+                                    policy="dyn16")
+    assert np.array_equal(usm_out, buf_out), (
+        f"{name}[pallas]: USM and BUFFERS results differ")
+    assert usm_stats.data.h2d_copies == 0
+    assert buf_stats.data.d2h_copies == buf_stats.num_packages
+
+
+def test_serve_rows_record_resolved_impl():
+    """coexec_real_rows reports which variant actually served."""
+    from repro.launch.serve import coexec_real_rows, default_serve_spec
+
+    spec = default_serve_spec()
+    spec = spec.replace(workload=spec.workload.replace(
+        name="taylor", kernel_impl="pallas", items=256, requests=2,
+        concurrent=2))
+    rows = coexec_real_rows(spec, policies=("dyn4",))
+    assert rows and all(r["impl"] == "pallas" for r in rows)
+    assert all(r["kernel"] == "taylor" for r in rows)
+
+
+def test_sim_backend_accepts_kernel_impl():
+    """--kernel-impl flows through the sim path too (the DES costs are
+    impl-agnostic; the flag must parse and run, not change the model)."""
+    from repro.launch.serve import coexec_sim_rows, default_serve_spec
+
+    spec = default_serve_spec()
+    spec = spec.replace(workload=spec.workload.replace(
+        name="mandelbrot", kernel_impl="pallas")).validate()
+    rows = coexec_sim_rows(spec, policies=("static",))
+    assert rows and rows[0]["workload"] == "mandelbrot"
