@@ -63,6 +63,10 @@ def build_parser(suite_names) -> argparse.ArgumentParser:
                     help="where to write the machine-readable per-impl "
                          "kernel microbenchmark results "
                          "(default: %(default)s)")
+    ap.add_argument("--bench-traffic-json", default="BENCH_traffic.json",
+                    metavar="PATH",
+                    help="where to write the machine-readable open-loop "
+                         "SLO traffic results (default: %(default)s)")
     add_spec_args(ap)
     return ap
 
@@ -90,12 +94,14 @@ def write_bench_doc(path: str, suite: str, spec, rows: list) -> None:
 def main() -> None:
     from repro.api import registry_listing, spec_from_args
 
-    from . import hetero_bench, kernel_micro, paper_figs, roofline_table
+    from . import (hetero_bench, kernel_micro, paper_figs, roofline_table,
+                   traffic_bench)
     from repro.launch.serve import default_serve_spec
 
     ap = build_parser(
         list(dict(paper_figs.ALL))
-        + ["kernels", "hetero", "coexec", "coexec-multi", "roofline"])
+        + ["kernels", "hetero", "coexec", "coexec-multi", "roofline",
+           "traffic"])
     args = ap.parse_args()
     if args.list:
         print(registry_listing())
@@ -124,12 +130,20 @@ def main() -> None:
                         structured)
         return kernel_micro.run(structured=structured)
 
+    def traffic_suite():
+        structured = traffic_bench.structured_rows(spec, smoke=args.smoke)
+        write_bench_doc(args.bench_traffic_json, "traffic",
+                        traffic_bench.base_spec(spec, smoke=args.smoke),
+                        structured)
+        return traffic_bench.run(spec, structured=structured)
+
     suites = dict(paper_figs.ALL)
     suites["kernels"] = kernels_suite
     suites["hetero"] = hetero_bench.run
     suites["coexec"] = coexec_suite
     suites["coexec-multi"] = coexec_multi_suite
     suites["roofline"] = roofline_table.run
+    suites["traffic"] = traffic_suite
 
     wanted = args.suites or list(suites)
     unknown = [key for key in wanted if key not in suites]

@@ -3,7 +3,7 @@
 
 Validates the JSON documents ``benchmarks.run`` writes
 (``BENCH_coexec.json`` / ``BENCH_coexec_multi.json`` /
-``BENCH_kernels.json``) so CI fails fast
+``BENCH_kernels.json`` / ``BENCH_traffic.json``) so CI fails fast
 when a row key is renamed or dropped — downstream perf-trajectory
 tooling reads these artifacts across PRs, which makes their shape an
 API. Stdlib-only, enforced in CI's docs job and in tier-1 via
@@ -18,7 +18,7 @@ Checks per document:
   ``REQUIRED``), with numeric values where numbers are expected.
 
     python scripts/check_bench_schema.py BENCH_coexec.json \\
-        BENCH_coexec_multi.json BENCH_kernels.json
+        BENCH_coexec_multi.json BENCH_kernels.json BENCH_traffic.json
 """
 from __future__ import annotations
 
@@ -49,6 +49,16 @@ REQUIRED: dict[str, dict[str, set]] = {
         "all": {"kind", "kernel", "impl", "label", "size", "iters",
                 "us_per_call"},
         "numeric": {"size", "iters", "us_per_call"},
+    },
+    "traffic": {
+        "all": {"workload", "arrival", "tenants", "load", "admission",
+                "preempt", "shed", "slo_ms", "arrivals", "admitted",
+                "shed_count", "p50_ms", "p99_ms", "miss_rate",
+                "shed_fraction", "packages", "fused_batches", "total_ms"},
+        "numeric": {"tenants", "load", "arrivals", "admitted",
+                    "shed_count", "p50_ms", "p99_ms", "miss_rate",
+                    "shed_fraction", "packages", "fused_batches",
+                    "total_ms"},
     },
 }
 
@@ -94,7 +104,7 @@ def check_doc(path: str, doc) -> list[str]:
 def main(argv: list[str]) -> int:
     """Validate every artifact path given; returns the exit code."""
     paths = argv or ["BENCH_coexec.json", "BENCH_coexec_multi.json",
-                     "BENCH_kernels.json"]
+                     "BENCH_kernels.json", "BENCH_traffic.json"]
     errors: list[str] = []
     for path in paths:
         try:

@@ -36,13 +36,14 @@ from .registry import (KernelPlugin, SchedulerPlugin, WorkloadPlugin,
                        validate_scheduler_options, workload_names,
                        workload_plugin)
 from .spec import (SPEC_VERSION, AdmissionSpec, CoexecSpec,
-                   CoexecSpecBuilder, MemorySpec, SchedulerSpec, UnitsSpec,
-                   WorkloadSpec)
+                   CoexecSpecBuilder, MemorySpec, SchedulerSpec,
+                   TrafficSpec, UnitsSpec, WorkloadSpec)
 
 __all__ = [
     "AdmissionSpec", "CoexecSpec", "CoexecSpecBuilder", "KernelPlugin",
     "MemorySpec", "SPEC_SECTIONS", "SPEC_VERSION", "SchedulerPlugin",
-    "SchedulerSpec", "UnitsSpec", "WorkloadPlugin", "WorkloadSpec",
+    "SchedulerSpec", "TrafficSpec", "UnitsSpec", "WorkloadPlugin",
+    "WorkloadSpec",
     "add_spec_args", "args_from_spec", "build_kernel", "build_scheduler",
     "build_workload", "kernel_demo_inputs", "kernel_names",
     "kernel_plugin", "register_kernel", "register_scheduler",

@@ -34,7 +34,8 @@ __all__ = ["SPEC_SECTIONS", "add_spec_args", "spec_from_args",
            "args_from_spec", "registry_listing"]
 
 # section order fixes flag ordering in --help and in args_from_spec output
-SPEC_SECTIONS = ("scheduler", "admission", "workload", "units", "memory")
+SPEC_SECTIONS = ("scheduler", "admission", "workload", "units", "memory",
+                 "traffic")
 
 
 def _section_class(section: str) -> type:

@@ -41,7 +41,8 @@ from . import registry
 
 __all__ = [
     "UnitsSpec", "SchedulerSpec", "AdmissionSpec", "MemorySpec",
-    "WorkloadSpec", "CoexecSpec", "CoexecSpecBuilder", "SPEC_VERSION",
+    "WorkloadSpec", "TrafficSpec", "CoexecSpec", "CoexecSpecBuilder",
+    "SPEC_VERSION",
 ]
 
 SPEC_VERSION = 1
@@ -318,6 +319,31 @@ class AdmissionSpec(_SubSpec):
         default=False, metadata=_cli(
             "preempt", "WFQ reclaims credit mid-launch by capping "
                        "per-pull package sizes of over-served tenants"))
+    fuse_buckets: bool = dataclasses.field(
+        default=False, metadata=_cli(
+            "fuse-buckets", "pad near-identical launch shapes up to "
+                            "power-of-2 buckets so mixed traffic still "
+                            "fuses"))
+    slo_ms: Optional[float] = dataclasses.field(
+        default=None, metadata=_cli(
+            "slo-ms", "default per-launch deadline in milliseconds "
+                      "(EDF urgency + shedding reference)"))
+    shed: bool = dataclasses.field(
+        default=False, metadata=_cli(
+            "shed", "reject launches whose estimated finish misses the "
+                    "deadline (bounded by --shed-budget)"))
+    shed_budget: float = dataclasses.field(
+        default=0.25, metadata=_cli(
+            "shed-budget", "maximum fraction of offered launches the "
+                           "shedder may reject"))
+    shed_rate: Optional[float] = dataclasses.field(
+        default=None, metadata=_cli(
+            "shed-rate", "service-rate estimate in items/s for the shed "
+                         "finish predictor (default: derived capacity)"))
+    edf_boost: float = dataclasses.field(
+        default=1.0, metadata=_cli(
+            "edf-boost", "EDF credit boost factor for deadline-ranked "
+                         "refills (0 disables the boost)"))
 
     def to_config(self) -> AdmissionConfig:
         """The equivalent :class:`~repro.core.admission.AdmissionConfig`.
@@ -332,7 +358,10 @@ class AdmissionSpec(_SubSpec):
             policy=self.policy, fuse=self.fuse,
             fuse_threshold=self.fuse_threshold, fuse_limit=self.fuse_limit,
             fuse_wait_s=self.fuse_wait_s, max_inflight=self.max_inflight,
-            quantum=self.quantum, preempt=self.preempt)
+            quantum=self.quantum, preempt=self.preempt,
+            fuse_buckets=self.fuse_buckets, slo_ms=self.slo_ms,
+            shed=self.shed, shed_budget=self.shed_budget,
+            shed_rate=self.shed_rate, edf_boost=self.edf_boost)
 
     @classmethod
     def from_config(cls, config: AdmissionConfig) -> "AdmissionSpec":
@@ -349,7 +378,10 @@ class AdmissionSpec(_SubSpec):
                    fuse_limit=config.fuse_limit,
                    fuse_wait_s=config.fuse_wait_s,
                    max_inflight=config.max_inflight,
-                   quantum=config.quantum, preempt=config.preempt)
+                   quantum=config.quantum, preempt=config.preempt,
+                   fuse_buckets=config.fuse_buckets, slo_ms=config.slo_ms,
+                   shed=config.shed, shed_budget=config.shed_budget,
+                   shed_rate=config.shed_rate, edf_boost=config.edf_boost)
 
     def validate(self) -> None:
         """Check policy/limits by constructing the config once.
@@ -488,6 +520,80 @@ class WorkloadSpec(_SubSpec):
 
 
 @dataclasses.dataclass(frozen=True)
+class TrafficSpec(_SubSpec):
+    """Open-loop arrival process feeding the serving loop.
+
+    ``arrival="closed"`` keeps today's closed-loop sweeps (submit a
+    fixed batch, drain). ``"poisson"`` and ``"burst"`` synthesize a
+    seeded open-loop trace via :func:`repro.core.traffic.synthesize_trace`
+    — the same trace replays identically on the real engine and the DES,
+    which is what the parity harness pins.
+    """
+
+    arrival: str = dataclasses.field(
+        default="closed", metadata=_cli(
+            "arrival", "arrival process: closed-loop batch, Poisson, or "
+                       "bursty on/off Poisson",
+            choices=("closed", "poisson", "burst")))
+    rate: float = dataclasses.field(
+        default=0.0, metadata=_cli(
+            "rate", "mean offered arrival rate in launches/s (0 derives "
+                    "from --load and measured capacity)"))
+    load: float = dataclasses.field(
+        default=1.2, metadata=_cli(
+            "load", "offered load as a multiple of serving capacity, "
+                    "used when --rate is 0"))
+    arrivals: int = dataclasses.field(
+        default=2048, metadata=_cli(
+            "arrivals", "number of arrivals to synthesize per replay"))
+    burst: float = dataclasses.field(
+        default=4.0, metadata=_cli(
+            "burst", "on-phase rate multiplier for --arrival burst"))
+    burst_duty: float = dataclasses.field(
+        default=0.2, metadata=_cli(
+            "burst-duty", "fraction of each burst cycle spent in the "
+                          "on phase (burst*duty must stay below 1)"))
+    item_jitter: float = dataclasses.field(
+        default=0.0, metadata=_cli(
+            "item-jitter", "log-uniform spread of per-arrival item "
+                           "counts (0 = uniform size)"))
+    seed: int = dataclasses.field(
+        default=0, metadata=_cli(
+            "traffic-seed", "PRNG seed for trace synthesis"))
+    trace: str = dataclasses.field(
+        default="", metadata=_cli(
+            "trace", "replay a saved JSON trace instead of synthesizing "
+                     "one (overrides the arrival/rate knobs)"))
+
+    def validate(self) -> None:
+        """Check the arrival process and its knobs.
+
+        Raises:
+            ValueError: unknown arrival name, non-positive counts, or a
+                burst shape whose off-phase rate would go negative.
+        """
+        if self.arrival not in ("closed", "poisson", "burst"):
+            raise ValueError(
+                f"unknown arrival {self.arrival!r}; choose from "
+                f"['closed', 'poisson', 'burst']")
+        if self.rate < 0:
+            raise ValueError("rate must be >= 0")
+        if self.load <= 0:
+            raise ValueError("load must be positive")
+        if self.arrivals < 1:
+            raise ValueError("arrivals must be a positive integer")
+        if self.burst < 1:
+            raise ValueError("burst must be >= 1")
+        if not 0 < self.burst_duty < 1:
+            raise ValueError("burst_duty must be in (0, 1)")
+        if self.burst * self.burst_duty >= 1:
+            raise ValueError("burst * burst_duty must be < 1 so the "
+                             "off-phase rate stays positive")
+        if self.item_jitter < 0:
+            raise ValueError("item_jitter must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class CoexecSpec(_SubSpec):
     """The single declarative description of one co-execution setup.
 
@@ -508,6 +614,7 @@ class CoexecSpec(_SubSpec):
         default_factory=AdmissionSpec)
     memory: MemorySpec = dataclasses.field(default_factory=MemorySpec)
     workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
+    traffic: TrafficSpec = dataclasses.field(default_factory=TrafficSpec)
 
     # -- round-trip serialization ------------------------------------------
     def to_dict(self) -> dict:
@@ -519,6 +626,7 @@ class CoexecSpec(_SubSpec):
             "admission": self.admission.to_dict(),
             "memory": self.memory.to_dict(),
             "workload": self.workload.to_dict(),
+            "traffic": self.traffic.to_dict(),
         }
 
     @classmethod
@@ -544,6 +652,7 @@ class CoexecSpec(_SubSpec):
             admission=AdmissionSpec.from_dict(data.get("admission", {})),
             memory=MemorySpec.from_dict(data.get("memory", {})),
             workload=WorkloadSpec.from_dict(data.get("workload", {})),
+            traffic=TrafficSpec.from_dict(data.get("traffic", {})),
         )
 
     def to_json(self, **dumps_kw) -> str:
@@ -579,6 +688,7 @@ class CoexecSpec(_SubSpec):
         self.admission.validate()
         self.memory.validate()
         self.workload.validate()
+        self.traffic.validate()
         if self.units.dist:
             n = self.units.count if self.units.count is not None \
                 else max(len(self.units.dist), 1)
@@ -754,6 +864,57 @@ class CoexecSpecBuilder:
         if preempt is not None:
             adm = adm.replace(preempt=bool(preempt))
         return self._update(admission=adm)
+
+    def slo(self, slo_ms: Optional[float], *,
+            shed: Optional[bool] = None,
+            shed_budget: Optional[float] = None,
+            shed_rate: Optional[float] = None,
+            edf_boost: Optional[float] = None) -> "CoexecSpecBuilder":
+        """Configure deadline-aware admission (SLO + load shedding).
+
+        Args:
+            slo_ms: default per-launch deadline in milliseconds
+                (``None`` clears it).
+            shed: reject predicted deadline misses (``None`` leaves it
+                unchanged).
+            shed_budget: maximum rejected fraction of offered launches.
+            shed_rate: service-rate estimate in items/s for the finish
+                predictor.
+            edf_boost: EDF credit-boost factor for deadline-ranked
+                refills.
+
+        Returns:
+            The builder.
+        """
+        adm = self._spec.admission.replace(slo_ms=slo_ms)
+        if shed is not None:
+            adm = adm.replace(shed=bool(shed))
+        if shed_budget is not None:
+            adm = adm.replace(shed_budget=float(shed_budget))
+        if shed_rate is not None:
+            adm = adm.replace(shed_rate=float(shed_rate))
+        if edf_boost is not None:
+            adm = adm.replace(edf_boost=float(edf_boost))
+        return self._update(admission=adm)
+
+    def traffic(self, arrival: Optional[str] = None,
+                **changes) -> "CoexecSpecBuilder":
+        """Configure the open-loop arrival process.
+
+        Args:
+            arrival: process name (``"closed"`` / ``"poisson"`` /
+                ``"burst"``).
+            **changes: any other :class:`TrafficSpec` field.
+
+        Returns:
+            The builder.
+        """
+        tr = self._spec.traffic
+        if arrival is not None:
+            tr = tr.replace(arrival=str(arrival))
+        if changes:
+            tr = tr.replace(**changes)
+        return self._update(traffic=tr)
 
     def fuse(self, on: bool = True, *,
              threshold: Optional[int] = None,

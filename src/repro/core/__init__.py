@@ -33,8 +33,8 @@ Public surface:
     paper_workload, ALL_BENCHMARKS              — Table 1 profiles
 """
 from .admission import (ADMISSION_POLICIES, AdmissionConfig,
-                        AdmissionController, AdmissionFull, jain_index,
-                        service_fairness_curve)
+                        AdmissionController, AdmissionFull, LaunchShed,
+                        fusion_bucket, jain_index, service_fairness_curve)
 from .dataplane import (ArgRole, ArgSpec, CoexecKernel, DataPlaneCounters,
                         OutputSpec, as_coexec_kernel, make_plane)
 from .energy import (EnergyReport, PowerModel, PAPER_POWER, TPU_POWER,
@@ -49,8 +49,11 @@ from .runtime import CoexecutorRuntime, counits_from_devices
 from .scheduler import (SPEED_HINT_POLICIES, DynamicScheduler,
                         HGuidedScheduler, Scheduler, StaticScheduler,
                         WorkStealingScheduler, static_bounds)
-from .sim import (LaunchSimResult, LaunchSpec, MultiSimResult, SimResult,
-                  Workload, simulate, simulate_multi, solo_run)
+from .sim import (LaunchSimResult, LaunchSpec, MultiSimResult, ShedRecord,
+                  SimResult, Workload, simulate, simulate_multi, solo_run)
+from .traffic import (Arrival, TenantRow, Trace, TrafficReplay,
+                      capacity_items_per_s, replay_trace_lockstep,
+                      replay_trace_sim, synthesize_trace, tenant_rows)
 from .units import JaxUnit, SimUnit
 from .workloads import (ALL_BENCHMARKS, IRREGULAR, REGULAR, SPECS,
                         paper_workload)
@@ -58,18 +61,21 @@ from .workloads import (ALL_BENCHMARKS, IRREGULAR, REGULAR, SPECS,
 __all__ = [
     "ADMISSION_POLICIES", "ALL_BENCHMARKS", "AdmissionConfig",
     "AdmissionController", "AdmissionFull", "ArgRole", "ArgSpec",
-    "CoexecEngine", "CoexecKernel", "CoexecutorRuntime",
+    "Arrival", "CoexecEngine", "CoexecKernel", "CoexecutorRuntime",
     "DataPlaneCounters", "DynamicScheduler", "EnergyReport",
     "EwmaThroughput", "ExecutionLoop", "HGuidedScheduler", "IRREGULAR",
-    "JaxUnit", "LaunchHandle", "LaunchSimResult", "LaunchSpec",
-    "LaunchState", "LaunchStats", "LaunchWaitTimeout", "MemoryCosts",
-    "MemoryModel", "MultiSimResult", "OutputSpec", "PAPER_POWER",
-    "Package", "PowerModel", "REGULAR", "Range", "SPECS",
-    "SPEED_HINT_POLICIES", "Scheduler", "SimResult", "SimUnit",
-    "SpeedBoard", "StaticScheduler", "TPU_MEMORY_COSTS", "TPU_POWER",
+    "JaxUnit", "LaunchHandle", "LaunchShed", "LaunchSimResult",
+    "LaunchSpec", "LaunchState", "LaunchStats", "LaunchWaitTimeout",
+    "MemoryCosts", "MemoryModel", "MultiSimResult", "OutputSpec",
+    "PAPER_POWER", "Package", "PowerModel", "REGULAR", "Range", "SPECS",
+    "SPEED_HINT_POLICIES", "Scheduler", "ShedRecord", "SimResult",
+    "SimUnit", "SpeedBoard", "StaticScheduler", "TPU_MEMORY_COSTS",
+    "TPU_POWER", "TenantRow", "Trace", "TrafficReplay",
     "WorkStealingScheduler", "Workload", "as_coexec_kernel",
-    "counits_from_devices", "edp_ratio", "energy_report", "geomean",
-    "jain_index", "make_plane", "paper_workload",
-    "service_fairness_curve", "simulate", "simulate_multi", "solo_run",
-    "static_bounds", "validate_cover",
+    "capacity_items_per_s", "counits_from_devices", "edp_ratio",
+    "energy_report", "fusion_bucket", "geomean", "jain_index",
+    "make_plane", "paper_workload", "replay_trace_lockstep",
+    "replay_trace_sim", "service_fairness_curve", "simulate",
+    "simulate_multi", "solo_run", "static_bounds", "synthesize_trace",
+    "tenant_rows", "validate_cover",
 ]

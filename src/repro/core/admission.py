@@ -22,6 +22,19 @@ discrete-event simulator:
   drains. The caller supplies the materializer (the engine stacks inputs
   and vmaps the kernel; the simulator concatenates workloads) and
   de-multiplexes on completion.
+* **Deadline-aware admission** (``policy="edf"``) — WFQ's deficit
+  machinery with the scan ordered earliest-absolute-deadline-first and
+  rank-based credit boosts for the flows nearest their deadline
+  (``edf_boost``), the time-constrained setting of arXiv:2010.12607.
+* **Load shedding** (``shed=True``) — :meth:`AdmissionController.offer`
+  runs a virtual single-server finish-time estimator over the offered
+  arrivals (capacity ``shed_rate`` items/s); a launch whose estimated
+  finish misses its deadline is rejected up to a bounded fraction of the
+  offered load (``shed_budget``), so overload degrades gracefully
+  instead of collapsing every tenant's p99. Decisions depend only on
+  the arrival sequence and the config, never on the execution substrate,
+  which is what makes the accept/shed sequence reproducible bit-for-bit
+  between the real engine and the DES.
 * **Backpressure** (``max_inflight``) — a cap on admitted-but-unfinished
   launches; :meth:`AdmissionController.has_capacity` lets the engine's
   ``submit(..., block=True)`` path wait instead of queueing unboundedly.
@@ -29,7 +42,8 @@ discrete-event simulator:
 The controller is deliberately *not* thread-safe: the engine calls it
 under its condition variable, the simulator single-threaded. Entries are
 duck-typed — anything with ``scheduler``, ``tenant``, ``weight`` and
-optionally ``fuse_key`` / ``slots`` / ``failed`` attributes schedules.
+optionally ``fuse_key`` / ``slots`` / ``failed`` / ``deadline``
+attributes schedules.
 """
 from __future__ import annotations
 
@@ -39,7 +53,7 @@ from typing import Callable, Optional, Sequence
 
 from .package import Package
 
-ADMISSION_POLICIES = ("fifo", "wfq")
+ADMISSION_POLICIES = ("fifo", "wfq", "edf")
 
 
 class AdmissionFull(RuntimeError):
@@ -51,13 +65,40 @@ class AdmissionFull(RuntimeError):
     """
 
 
+class LaunchShed(AdmissionFull):
+    """The admission layer rejected a launch to protect its SLO budget.
+
+    Raised from :meth:`~repro.core.engine.LaunchHandle.result` /
+    returned from :meth:`~repro.core.engine.LaunchHandle.exception`
+    *immediately* — a shed launch's handle is resolved at submit time,
+    never left to dangle until a wait timeout. Subclasses
+    :class:`AdmissionFull` so existing at-capacity handlers keep working.
+    """
+
+
+def fusion_bucket(total: int) -> int:
+    """Smallest power of two ≥ ``total`` (the bucketed-fusion pad size).
+
+    Args:
+        total: a launch's index-space size in work-items.
+
+    Returns:
+        The power-of-2 bucket the launch pads up to under
+        ``fuse_buckets=True`` (1 for non-positive totals).
+    """
+    return 1 << max(int(total) - 1, 0).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class AdmissionConfig:
     """Tuning knobs of the admission layer.
 
     Args:
-        policy: ``"fifo"`` (PR 1 behavior: strict submit order) or
-            ``"wfq"`` (deficit-round-robin weighted fairness per tenant).
+        policy: ``"fifo"`` (PR 1 behavior: strict submit order),
+            ``"wfq"`` (deficit-round-robin weighted fairness per tenant),
+            or ``"edf"`` (WFQ credit with the scan ordered
+            earliest-deadline-first and starved flows refilled with
+            deadline-rank boosts).
         fuse: stage fusion-eligible launches and coalesce concurrent ones
             into shared dispatches.
         fuse_threshold: largest launch (work-items) eligible for fusion;
@@ -80,6 +121,28 @@ class AdmissionConfig:
             round robin — which is fair in the long run but bursty at
             short horizons. Inert under ``policy="fifo"`` (there is no
             credit to reclaim).
+        fuse_buckets: widen fusion eligibility to near-identical shapes:
+            launches whose index spaces fall in the same power-of-2 size
+            bucket (:func:`fusion_bucket`) share a fuse key and pad up
+            to the bucket size, so mixed real-world traffic still fuses
+            instead of degenerating to singleton dispatches.
+        slo_ms: default per-launch SLO in milliseconds — a launch
+            submitted without an explicit deadline gets
+            ``t_submit + slo_ms/1e3``; ``None`` leaves deadlines unset.
+        shed: reject launches whose estimated finish time misses their
+            deadline (see :meth:`AdmissionController.offer`), up to the
+            rejection budget. Requires ``shed_rate`` to have any effect.
+        shed_budget: bounded rejection fraction — at most this share of
+            the offered launches is ever shed; past the budget overload
+            degrades gracefully (launches are admitted late rather than
+            rejected).
+        shed_rate: the admission estimator's capacity in work-items per
+            second (a virtual single server); ``None`` disables the
+            estimator (nothing is ever shed).
+        edf_boost: credit-boost strength for the EDF refill — a starved
+            flow at deadline rank ``r`` (0 = most urgent) earns credit
+            at ``weight * (1 + edf_boost / (r + 1))``, so the launches
+            nearest their deadline pull ahead deterministically.
 
     Raises:
         ValueError: on an unknown policy or non-positive limits.
@@ -93,6 +156,12 @@ class AdmissionConfig:
     max_inflight: Optional[int] = None
     quantum: Optional[int] = None
     preempt: bool = False
+    fuse_buckets: bool = False
+    slo_ms: Optional[float] = None
+    shed: bool = False
+    shed_budget: float = 0.25
+    shed_rate: Optional[float] = None
+    edf_boost: float = 1.0
 
     def __post_init__(self) -> None:
         if self.policy not in ADMISSION_POLICIES:
@@ -106,6 +175,14 @@ class AdmissionConfig:
             raise ValueError("max_inflight must be positive (or None)")
         if self.quantum is not None and self.quantum <= 0:
             raise ValueError("quantum must be positive (or None)")
+        if self.slo_ms is not None and not self.slo_ms > 0:
+            raise ValueError("slo_ms must be positive (or None)")
+        if not 0.0 <= self.shed_budget <= 1.0:
+            raise ValueError("shed_budget must be within [0, 1]")
+        if self.shed_rate is not None and not self.shed_rate > 0:
+            raise ValueError("shed_rate must be positive (or None)")
+        if self.edf_boost < 0:
+            raise ValueError("edf_boost must be non-negative")
 
 
 def coerce_admission(admission) -> AdmissionConfig:
@@ -165,6 +242,13 @@ class AdmissionController:
         dispatched: packages handed out over the controller's lifetime.
         fused_batches: fused launches materialized so far.
         fused_members: total members coalesced into those batches.
+        offered: launches offered through :meth:`offer` so far.
+        shed_count: offered launches rejected by the shed estimator.
+        decision_log: ``("accept" | "shed", tenant)`` per offered launch,
+            in offer order — the structural surface the real-vs-sim
+            trace-replay parity tests compare.
+        fusion_log: one tuple of member tenants per materialized fused
+            batch, in materialization order.
     """
 
     def __init__(self, num_units: int,
@@ -196,6 +280,11 @@ class AdmissionController:
         self.dispatched = 0
         self.fused_batches = 0
         self.fused_members = 0
+        self.offered = 0
+        self.shed_count = 0
+        self._vfinish = 0.0         # shed estimator's virtual finish time
+        self.decision_log: list[tuple[str, str]] = []
+        self.fusion_log: list[tuple[str, ...]] = []
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -213,6 +302,50 @@ class AdmissionController:
         return not self._active and not self._staged
 
     # -- admission ---------------------------------------------------------
+    def offer(self, entry, now: float = 0.0) -> bool:
+        """Accept-or-shed decision for one arriving launch (logged).
+
+        Runs the deadline shed estimator: a virtual single server of
+        capacity ``shed_rate`` items/s serves accepted launches in offer
+        order; a launch whose estimated finish misses its ``deadline``
+        is shed, as long as doing so keeps the shed fraction within
+        ``shed_budget`` of everything offered so far (past the budget
+        the launch is admitted late instead — graceful degradation).
+        The verdict depends only on the arrival sequence, each entry's
+        ``scheduler.total``/``deadline`` and the config — never on the
+        execution substrate — so a trace replayed through the real
+        engine and the DES produces the *same* accept/shed sequence.
+
+        The caller still calls :meth:`admit` for accepted entries (or
+        :meth:`~repro.core.exec.ExecutionLoop.offer`, which does both).
+
+        Args:
+            entry: launch-like object (``scheduler``/``tenant``; an
+                optional ``deadline`` attribute holds its absolute
+                deadline in the caller's clock).
+            now: the entry's arrival time on that same clock.
+
+        Returns:
+            ``True`` to admit, ``False`` when the launch was shed.
+        """
+        self.offered += 1
+        cfg = self.config
+        deadline = getattr(entry, "deadline", None)
+        finish = None
+        if cfg.shed_rate is not None:
+            start = max(self._vfinish, float(now))
+            finish = start + entry.scheduler.total / cfg.shed_rate
+        if (cfg.shed and finish is not None and deadline is not None
+                and finish > deadline
+                and self.shed_count + 1 <= cfg.shed_budget * self.offered):
+            self.shed_count += 1
+            self.decision_log.append(("shed", entry.tenant))
+            return False
+        if finish is not None:
+            self._vfinish = finish
+        self.decision_log.append(("accept", entry.tenant))
+        return True
+
     def admit(self, entry, now: float = 0.0) -> None:
         """Admit one launch: activate it, or stage it for fusion.
 
@@ -315,6 +448,7 @@ class AdmissionController:
         fused.slots = sum(getattr(m, "slots", 1) for m in group.members)
         self.fused_batches += 1
         self.fused_members += len(group.members)
+        self.fusion_log.append(tuple(m.tenant for m in group.members))
         self._activate(fused)
 
     # -- package selection -------------------------------------------------
@@ -332,6 +466,8 @@ class AdmissionController:
         """
         if self.config.policy == "wfq":
             return self._next_wfq(unit)
+        if self.config.policy == "edf":
+            return self._next_edf(unit)
         return self._next_fifo(unit)
 
     def _pull(self, entry, unit: int,
@@ -425,6 +561,85 @@ class AdmissionController:
                     for tq in starved)
             for tq in starved:
                 tq.deficit += k * tq.weight * q
+
+    def _flow_deadline(self, tq: _TenantQueue) -> float:
+        """A flow's urgency: earliest member deadline (inf when unset)."""
+        return min((e.deadline for e in tq.entries
+                    if getattr(e, "deadline", None) is not None),
+                   default=math.inf)
+
+    def _next_edf(self, unit: int) -> Optional[tuple[object, Package]]:
+        """Earliest-deadline-first DRR scan with deadline-rank boosts.
+
+        WFQ's credit machinery (including preemptive pull-capping) with
+        two deadline-aware twists, both deterministic functions of the
+        admitted set — no clock reads, so both substrates decide alike:
+
+        * the serve scan visits flows earliest-absolute-deadline-first
+          (deadline-free flows last, in stable ring order) instead of
+          round-robin, so an urgent tenant with credit is always served
+          before a relaxed one;
+        * the starved-flow fast-forward refill grants credit at an
+          *effective* weight ``weight * (1 + edf_boost / (rank + 1))``
+          where rank orders starved flows by deadline — the flows
+          nearest their deadline come back into credit sooner and
+          therefore accumulate service faster while the pressure lasts.
+
+        Boosted credit is quantized to whole quanta (``round`` of the
+        effective weight, floored at one) so deficits stay multiples of
+        the package-sized quantum: fractional credit would make the
+        preemptive pull cap shave remainder-sized slivers off packages,
+        multiplying per-package host overhead under load.
+        """
+        if not self._ring:
+            return None
+        while True:
+            ranked = sorted(
+                (tq for tq in (self._tenants[key] for key in self._ring)
+                 if tq.entries),
+                key=lambda tq: (self._flow_deadline(tq),
+                                self._ring.index(tq.key)))
+            if not ranked:
+                return None
+            starved: list[_TenantQueue] = []
+            for tq in ranked:
+                if tq.deficit <= 0.0:
+                    starved.append(tq)
+                    continue
+                got = None
+                for entry in tq.entries:
+                    cap = None
+                    if self.config.preempt:
+                        scale = max(getattr(entry, "wfq_cost_scale", 1), 1)
+                        cap = max(1, int(tq.deficit // scale))
+                    pkg = self._pull(entry, unit, cap)
+                    if pkg is not None:
+                        got = (entry, pkg)
+                        break
+                if got is None:     # nothing for *this* unit in this flow
+                    continue
+                tq.deficit -= got[1].size * getattr(got[0], "wfq_cost_scale",
+                                                    1)
+                self.dispatched += 1
+                return got
+            if not starved:
+                return None
+            # deadline-rank boosted fast-forward: starved flows earn whole
+            # rounds of credit at their boosted effective weight until the
+            # closest one goes positive (same termination argument as the
+            # WFQ refill — each pass retires at least one flow).
+            q = self._quantum()
+            boost = self.config.edf_boost
+            by_deadline = sorted(starved,
+                                 key=lambda tq: (self._flow_deadline(tq),
+                                                 self._ring.index(tq.key)))
+            eff = {id(tq): max(1.0, round(tq.weight *
+                                          (1.0 + boost / (rank + 1))))
+                   for rank, tq in enumerate(by_deadline)}
+            k = min(math.floor(-tq.deficit / (eff[id(tq)] * q)) + 1
+                    for tq in starved)
+            for tq in starved:
+                tq.deficit += k * eff[id(tq)] * q
 
 
 def service_fairness_curve(service: Sequence[tuple[float, str, int]],

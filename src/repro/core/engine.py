@@ -60,7 +60,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from .admission import AdmissionConfig, AdmissionController, AdmissionFull
+from .admission import (AdmissionConfig, AdmissionController, AdmissionFull,
+                        LaunchShed, fusion_bucket)
 from .dataplane import (CoexecKernel, DataPlaneCounters, as_coexec_kernel,
                         make_plane)
 from .exec import Backend, ExecutionLoop, LaunchState, LaunchStats
@@ -202,6 +203,12 @@ def _fuse_key(config: AdmissionConfig, scheduler: Scheduler,
     the shape contract that makes member stacking a pure reshape.
     Typed kernels with broadcast args, halos or non-zero split axes
     are ineligible (their operands do not stack along the member axis).
+
+    With ``config.fuse_buckets`` the key holds the power-of-2 size
+    bucket plus the per-array *trailing* shapes instead of the exact
+    shapes, so near-identical launches coalesce: members pad up to the
+    bucket along axis 0 in :meth:`RealBackend.fuse_payload` and de-mux
+    back to their exact extents in :meth:`RealBackend.commit_member`.
     """
     if not config.fuse:
         return None
@@ -215,6 +222,10 @@ def _fuse_key(config: AdmissionConfig, scheduler: Scheduler,
         return None
     if out.shape[0] != total:
         return None
+    if config.fuse_buckets:
+        return (kernel, "bucket", fusion_bucket(total),
+                tuple((a.shape[1:], str(a.dtype)) for a in arrs),
+                tuple(out.shape[1:]), str(out.dtype))
     return (kernel, total,
             tuple((a.shape, str(a.dtype)) for a in arrs),
             tuple(out.shape), str(out.dtype))
@@ -318,9 +329,21 @@ class RealBackend(Backend):
         """
         first = members[0]
         n_inputs = len(first.inputs)
-        inputs = [np.stack([np.asarray(m.inputs[j]) for m in members])
+        # bucketed members pad along axis 0 up to the shared power-of-2
+        # bucket; exact-shape fusion has bucket == total (no padding)
+        bucket = first.fuse_bucket or max(m.scheduler.total for m in members)
+
+        def padded(a: np.ndarray) -> np.ndarray:
+            a = np.asarray(a)
+            if a.shape[0] == bucket:
+                return a
+            pad = [(0, bucket - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+            return np.pad(a, pad)
+
+        inputs = [np.stack([padded(m.inputs[j]) for m in members])
                   for j in range(n_inputs)]
-        out = np.zeros((len(members), *first.out.shape), first.out.dtype)
+        out = np.zeros((len(members), bucket, *first.out.shape[1:]),
+                       first.out.dtype)
         n_units = len(self.units)
         sched = DynamicScheduler(len(members), n_units,
                                  num_packages=min(len(members), n_units))
@@ -331,8 +354,10 @@ class RealBackend(Backend):
             sched.total)
         # the fused scheduler's index space is *members*; WFQ credit is
         # accounted in work-items, so each member unit costs its whole
-        # index space (keeps engine fairness on the sim's scale)
-        fused.wfq_cost_scale = first.scheduler.total
+        # (bucket-padded) index space — keeps engine fairness on the
+        # sim's scale, identically for exact and bucketed fusion
+        fused.wfq_cost_scale = bucket
+        fused.fuse_bucket = bucket
         fused.member_span = 1
         return fused
 
@@ -342,8 +367,12 @@ class RealBackend(Backend):
 
     def commit_member(self, fused: _Launch, member: _Launch, index: int,
                       cover: Package) -> None:
-        """Copy one member's output row out of the fused batch result."""
-        np.copyto(member.out, fused.out[index])
+        """Copy one member's output row out of the fused batch result.
+
+        Bucketed members copy only their own extent — the bucket's pad
+        rows are computed (on padded zero inputs) but never land.
+        """
+        np.copyto(member.out, fused.out[index][:member.out.shape[0]])
 
     def deliver(self, launch: _Launch) -> None:
         """Resolve the launch's future with its (now written) output."""
@@ -482,7 +511,8 @@ class CoexecEngine:
     def submit(self, scheduler: Scheduler, kernel: Callable,
                inputs: Sequence[np.ndarray], out: np.ndarray,
                *, adaptive: bool = True, tenant: Optional[str] = None,
-               weight: float = 1.0, block: bool = True) -> LaunchHandle:
+               weight: float = 1.0, block: bool = True,
+               deadline_s: Optional[float] = None) -> LaunchHandle:
         """Enqueue one co-execution; returns immediately with its handle.
 
         The scheduler must be built for this engine's unit count. Packages
@@ -505,6 +535,13 @@ class CoexecEngine:
             weight: relative WFQ share of the tenant (latest submit wins).
             block: when the engine is at ``max_inflight`` capacity, wait
                 for a slot (True) or raise immediately (False).
+            deadline_s: relative SLO deadline in seconds from submission;
+                ``None`` falls back to the admission config's ``slo_ms``
+                default (when set). Under ``shed=True`` a launch whose
+                estimated finish misses this deadline is rejected — its
+                handle resolves *immediately* with
+                :class:`~repro.core.admission.LaunchShed`, on both the
+                blocking and non-blocking submit paths.
 
         Returns:
             The launch's :class:`LaunchHandle`.
@@ -551,9 +588,21 @@ class CoexecEngine:
             if tenant is not None:
                 launch.tenant = str(tenant)
             launch.weight = float(weight)
+            if deadline_s is not None:
+                launch.deadline = launch.t_submit + float(deadline_s)
             launch.fuse_key = _fuse_key(self.admission.config, scheduler,
                                         kernel, inputs, out)
-            self.loop.admit(launch)
+            if launch.fuse_key is not None \
+                    and self.admission.config.fuse_buckets:
+                launch.fuse_bucket = fusion_bucket(scheduler.total)
+            if not self.loop.offer(launch, now=launch.t_submit):
+                # shed: resolve the handle before returning so result()
+                # raises LaunchShed immediately instead of blocking until
+                # a wait timeout (the future carries a pre-set exception)
+                self.backend.fail(launch, LaunchShed(
+                    f"launch {launch.id} shed: estimated finish misses its "
+                    f"deadline under the offered load"))
+                return launch.handle
             self._cv.notify_all()
         return launch.handle
 

@@ -97,9 +97,9 @@ class LaunchState:
     """
 
     __slots__ = ("id", "scheduler", "tenant", "weight", "t_submit",
-                 "fuse_key", "slots", "members", "member_span",
-                 "wfq_cost_scale", "done_pkgs", "outstanding", "failed",
-                 "finalized", "fused", "stats")
+                 "deadline", "fuse_key", "fuse_bucket", "slots", "members",
+                 "member_span", "wfq_cost_scale", "done_pkgs", "outstanding",
+                 "failed", "finalized", "fused", "stats")
 
     def __init__(self, launch_id: int, scheduler: Scheduler, *,
                  tenant: Optional[str] = None, weight: float = 1.0,
@@ -109,7 +109,9 @@ class LaunchState:
         self.tenant = tenant if tenant is not None else f"launch-{launch_id}"
         self.weight = float(weight)
         self.t_submit = t_submit
+        self.deadline: Optional[float] = None   # absolute, backend clock
         self.fuse_key = None
+        self.fuse_bucket: Optional[int] = None  # pad size under fuse_buckets
         self.slots = 1
         self.members: Optional[list["LaunchState"]] = None
         self.member_span = 1
@@ -251,6 +253,37 @@ class ExecutionLoop:
         self.admission.admit(launch, self.backend.now() if now is None
                              else now)
 
+    def offer(self, launch: LaunchState, now: Optional[float] = None) -> bool:
+        """Offer one arriving launch: shed it, or admit it (logged).
+
+        The open-loop entry point both substrates use for timed traffic:
+        assigns the config's default SLO deadline when the launch has
+        none, asks the admission controller's deadline shed estimator
+        for a verdict, and admits on acceptance. The decision depends
+        only on the arrival sequence and the config (see
+        :meth:`~repro.core.admission.AdmissionController.offer`), which
+        is what makes replayed accept/shed sequences identical across
+        the real engine and the DES.
+
+        Args:
+            launch: the arriving launch; its ``deadline`` (absolute, on
+                this backend's clock) may already be set by the caller.
+            now: arrival time; defaults to the backend clock.
+
+        Returns:
+            ``True`` when the launch was admitted, ``False`` when shed
+            (the caller surfaces the rejection — the engine resolves the
+            handle with :class:`~repro.core.admission.LaunchShed`).
+        """
+        t = self.backend.now() if now is None else now
+        cfg = self.admission.config
+        if launch.deadline is None and cfg.slo_ms is not None:
+            launch.deadline = t + cfg.slo_ms / 1e3
+        if not self.admission.offer(launch, t):
+            return False
+        self.admission.admit(launch, t)
+        return True
+
     # -- package flow ------------------------------------------------------
     def pull(self, unit: int, *, now: Optional[float] = None,
              force_flush: bool = False
@@ -333,6 +366,9 @@ class ExecutionLoop:
         fused.tenant = f"fused-{fused.id}"
         fused.weight = sum(m.weight for m in members)
         fused.t_submit = min(m.t_submit for m in members)
+        # EDF urgency of a batch is its most urgent member's deadline
+        fused.deadline = min((m.deadline for m in members
+                              if m.deadline is not None), default=None)
         fused.members = list(members)
         for m in members:
             m.fused = True

@@ -38,7 +38,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .admission import AdmissionConfig, coerce_admission
+from .admission import AdmissionConfig, coerce_admission, fusion_bucket
 from .dataplane import DataPlaneCounters
 from .energy import EnergyReport, PowerModel, energy_report
 from .exec import Backend, ExecutionLoop, LaunchState
@@ -187,6 +187,7 @@ class SimBackend(Backend):
         # (t_complete, tenant, items) per dispatched package
         self.service: list[tuple[float, str, int]] = []
         self.delivered: list[_SimLaunchState] = []
+        self.shed: list[_SimLaunchState] = []    # rejected at admission
         self._prefix: dict[tuple[int, str], Optional[np.ndarray]] = {}
 
     # -- substrate contract -------------------------------------------------
@@ -268,11 +269,17 @@ class SimBackend(Backend):
             The fused sim launch (tenant/weight set by the loop).
         """
         base = members[0].workload
-        k, T = len(members), base.total
-        if any(m.workload.weights is not None for m in members):
-            weights = np.concatenate(
-                [m.workload.weights if m.workload.weights is not None
-                 else np.ones(T) for m in members])
+        k = len(members)
+        # bucketed members pad up to the shared power-of-2 bucket (pad
+        # items are modeled at unit weight — the engine really computes
+        # them); exact-shape fusion has bucket == total, no padding
+        T = members[0].fuse_bucket or max(m.workload.total for m in members)
+        if any(m.workload.weights is not None for m in members) \
+                or any(m.workload.total != T for m in members):
+            weights = np.concatenate([np.concatenate([
+                m.workload.weights if m.workload.weights is not None
+                else np.ones(m.workload.total),
+                np.ones(T - m.workload.total)]) for m in members])
         else:
             weights = None
         wl = Workload(
@@ -288,6 +295,7 @@ class SimBackend(Backend):
         fused = _SimLaunchState(launch_id, sched, wl)
         fused.member_span = T
         fused.wfq_cost_scale = 1
+        fused.fuse_bucket = T
         return fused
 
     def launch_counters(self, launch: _SimLaunchState) -> DataPlaneCounters:
@@ -344,7 +352,10 @@ class SimBackend(Backend):
             self.t = t
             while pending and pending[0].t_submit <= t + 1e-12:
                 entry = pending.popleft()
-                loop.admit(entry, now=entry.t_submit)
+                # open-loop arrival: the shed estimator may reject the
+                # entry outright (same decision sequence as the engine)
+                if not loop.offer(entry, now=entry.t_submit):
+                    self.shed.append(entry)
             work = loop.pull(i, now=t, force_flush=not pending)
             if work is None:
                 # nothing for this unit *now*: park until the next
@@ -374,11 +385,14 @@ def _run_sim(entries: Sequence[_SimLaunchState], units: Sequence["SimUnit"],
     loop = ExecutionLoop(backend, [u.name for u in units], cfg,
                          validate=validate)
     backend.run(loop, entries)
-    if len(backend.delivered) != len(entries):
+    settled = len(backend.delivered) + len(backend.shed)
+    if settled != len(entries):
+        shed_set = set(map(id, backend.shed))
         stuck = sorted(e.tenant for e in entries
-                       if e.stats is None and not e.failed)
+                       if e.stats is None and not e.failed
+                       and id(e) not in shed_set)
         raise RuntimeError(
-            f"simulation finished {len(backend.delivered)}/{len(entries)} "
+            f"simulation finished {settled}/{len(entries)} "
             f"launches; admission wedged (undrained tenants: "
             f"{stuck or 'in-controller'}) — this is a scheduling bug, "
             f"not a caller error")
@@ -467,6 +481,9 @@ class LaunchSpec:
         tenant: fairness flow (defaults to a unique per-launch tenant).
         weight: relative WFQ share of the tenant.
         t_submit: virtual submission time.
+        deadline_s: relative SLO deadline in seconds after ``t_submit``;
+            ``None`` falls back to the admission config's ``slo_ms``
+            default (when set). Drives EDF urgency and load shedding.
     """
 
     workload: Workload
@@ -474,6 +491,7 @@ class LaunchSpec:
     tenant: str = ""
     weight: float = 1.0
     t_submit: float = 0.0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -487,6 +505,7 @@ class LaunchSimResult:
     items: int
     num_packages: int          # real dispatches that served this launch
     fused: bool = False        # served through a coalesced batch
+    deadline: Optional[float] = None   # absolute virtual-time SLO target
     data: DataPlaneCounters = dataclasses.field(
         default_factory=DataPlaneCounters)
 
@@ -494,6 +513,24 @@ class LaunchSimResult:
     def latency_s(self) -> float:
         """Submit-to-last-collection latency in virtual seconds."""
         return self.t_finish - self.t_submit
+
+    @property
+    def deadline_missed(self) -> Optional[bool]:
+        """Whether the launch finished past its deadline (None = no SLO)."""
+        if self.deadline is None:
+            return None
+        return self.t_finish > self.deadline
+
+
+@dataclasses.dataclass
+class ShedRecord:
+    """One launch the admission layer rejected instead of serving."""
+
+    tenant: str
+    workload: str
+    t_submit: float
+    items: int
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -517,12 +554,37 @@ class MultiSimResult:
     host_busy_s: float
     # (t_complete, tenant, items) per dispatched package — service curve
     service: list[tuple[float, str, int]]
+    shed: list[ShedRecord] = dataclasses.field(default_factory=list)
+    # ("accept" | "shed", tenant) per offered launch, in offer order
+    decisions: list[tuple[str, str]] = dataclasses.field(
+        default_factory=list)
+    # member-tenant tuples per materialized fused batch
+    fusion_groups: list[tuple[str, ...]] = dataclasses.field(
+        default_factory=list)
     data: DataPlaneCounters = dataclasses.field(
         default_factory=DataPlaneCounters)
 
     def latencies(self) -> list[float]:
         """Per-launch latencies in completion order."""
         return [r.latency_s for r in self.launches]
+
+    def shed_fraction(self) -> float:
+        """Rejected launches as a fraction of everything offered."""
+        offered = len(self.launches) + len(self.shed)
+        return len(self.shed) / offered if offered else 0.0
+
+    def deadline_miss_rate(self) -> float:
+        """Admitted launches that finished past their deadline.
+
+        Returns:
+            Misses over admitted deadline-carrying launches (0.0 when no
+            launch carried a deadline). Shed launches are not counted —
+            they never ran; :meth:`shed_fraction` reports them.
+        """
+        with_slo = [r for r in self.launches if r.deadline is not None]
+        if not with_slo:
+            return 0.0
+        return sum(bool(r.deadline_missed) for r in with_slo) / len(with_slo)
 
     def tenant_service_until(self, t: float) -> dict[str, int]:
         """Work-items completed per tenant up to virtual time ``t``.
@@ -607,6 +669,9 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence["SimUnit"], *,
         if not cfg.fuse or ls.workload.total > cfg.fuse_threshold:
             return None
         wl = ls.workload
+        if cfg.fuse_buckets:
+            return (wl.name, "bucket", fusion_bucket(wl.total),
+                    wl.bytes_in_per_item, wl.bytes_out_per_item)
         return (wl.name, wl.total, wl.bytes_in_per_item,
                 wl.bytes_out_per_item)
 
@@ -616,6 +681,12 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence["SimUnit"], *,
                                 tenant=ls.tenant or f"launch-{i}",
                                 weight=ls.weight, t_submit=ls.t_submit)
         entry.fuse_key = fuse_key(ls)
+        if entry.fuse_key is not None and cfg.fuse_buckets:
+            entry.fuse_bucket = fusion_bucket(ls.workload.total)
+        if ls.deadline_s is not None:
+            entry.deadline = ls.t_submit + ls.deadline_s
+        elif cfg.slo_ms is not None:
+            entry.deadline = ls.t_submit + cfg.slo_ms / 1e3
         entries.append(entry)
 
     backend, loop = _run_sim(entries, units, cfg, memory, costs, validate)
@@ -624,7 +695,12 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence["SimUnit"], *,
         tenant=e.tenant, workload=e.workload.name, t_submit=e.t_submit,
         t_finish=max(p.t_collected for p in e.stats.packages),
         items=e.scheduler.total, num_packages=e.stats.num_packages,
-        fused=e.fused, data=e.stats.data) for e in backend.delivered]
+        fused=e.fused, deadline=e.deadline,
+        data=e.stats.data) for e in backend.delivered]
+
+    shed = [ShedRecord(tenant=e.tenant, workload=e.workload.name,
+                       t_submit=e.t_submit, items=e.workload.total,
+                       deadline=e.deadline) for e in backend.shed]
 
     return MultiSimResult(
         total_s=backend.last_collect,
@@ -634,5 +710,8 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence["SimUnit"], *,
         fused_members=loop.admission.fused_members,
         host_busy_s=backend.host_busy,
         service=backend.service,
+        shed=shed,
+        decisions=list(loop.admission.decision_log),
+        fusion_groups=list(loop.admission.fusion_log),
         data=backend.counters,
     )

@@ -302,6 +302,137 @@ def coexec_multi_rows(spec=None, *, tenants=None, policies=None,
     return rows
 
 
+def trace_from_spec(spec, capacity_items_s: float):
+    """Build (or load) the open-loop trace the spec's traffic section asks
+    for.
+
+    Args:
+        spec: a ``CoexecSpec`` with ``traffic.arrival != "closed"``.
+        capacity_items_s: modeled serving capacity in work-items/s, used
+            to turn ``traffic.load`` into an arrival rate when
+            ``traffic.rate`` is 0.
+
+    Returns:
+        A :class:`repro.core.Trace`.
+    """
+    from ..core import Trace, synthesize_trace
+
+    tr = spec.traffic
+    if tr.trace:
+        return Trace.load(tr.trace)
+    items = spec.workload.items
+    rate = tr.rate if tr.rate > 0 else tr.load * capacity_items_s / items
+    return synthesize_trace(
+        tr.arrivals, rate, arrival=tr.arrival,
+        tenants=spec.workload.tenants or 8, items=items,
+        item_jitter=tr.item_jitter, slo_ms=spec.admission.slo_ms,
+        burst=tr.burst, burst_duty=tr.burst_duty, seed=tr.seed)
+
+
+def traffic_rows(spec=None, *, loads=None, admissions=None,
+                 arrival_kinds=None, tenants=None) -> list[dict]:
+    """Open-loop SLO sweep on the DES: one aggregate row per (arrival
+    process, load multiple, admission mode) with admitted-launch
+    p50/p99 latency, deadline-miss rate, shed fraction and fusion
+    counters. Sweep axes default to the single point the spec describes;
+    pass tuples to sweep. Shared by ``serve --coexec sim --arrival ...``
+    and ``benchmarks.run traffic``.
+
+    Each admission mode is a dict of ``AdmissionSpec.replace`` overrides
+    (e.g. ``{"policy": "edf", "preempt": True, "shed": True}``); a
+    string is shorthand for ``{"policy": <string>}``.
+    """
+    from ..core import capacity_items_per_s, paper_workload, replay_trace_sim
+
+    if spec is None:
+        spec = default_serve_spec()
+    _, cpu, gpu = paper_workload(spec.workload.name)
+    units = [cpu, gpu]
+    cap = capacity_items_per_s(units)
+    if loads is None:
+        loads = (spec.traffic.load,)
+    if admissions is None:
+        admissions = ({},)
+    if arrival_kinds is None:
+        arrival_kinds = (spec.traffic.arrival
+                         if spec.traffic.arrival != "closed" else "poisson",)
+    if tenants is None:
+        tenants = spec.workload.tenants or 8
+    rows = []
+    for arrival in arrival_kinds:
+        for load in loads:
+            tspec = spec.replace(
+                traffic=spec.traffic.replace(arrival=arrival, load=load),
+                workload=spec.workload.replace(tenants=tenants))
+            trace = trace_from_spec(tspec, cap)
+            # a file trace describes itself; the spec's synthesis knobs
+            # didn't shape it
+            row_arrival = arrival
+            row_tenants = tenants
+            if tspec.traffic.trace:
+                row_arrival = str(trace.meta.get("arrival", "trace"))
+                row_tenants = len(trace.tenants())
+            for mode in admissions:
+                if isinstance(mode, str):
+                    mode = {"policy": mode}
+                adm = tspec.admission.replace(**mode)
+                rep = replay_trace_sim(trace, units,
+                                       admission=adm.to_config())
+                r = rep.result
+                rows.append(dict(
+                    workload=spec.workload.name, arrival=row_arrival,
+                    tenants=row_tenants, load=float(load),
+                    admission=adm.policy, preempt=adm.preempt,
+                    shed=adm.shed, slo_ms=adm.slo_ms,
+                    arrivals=len(trace),
+                    admitted=len(r.launches), shed_count=len(r.shed),
+                    p50_ms=rep.p50_ms(), p99_ms=rep.p99_ms(),
+                    miss_rate=rep.miss_rate(),
+                    shed_fraction=rep.shed_fraction(),
+                    packages=r.dispatched_packages,
+                    fused_batches=r.fused_batches,
+                    total_ms=1e3 * r.total_s))
+    return rows
+
+
+def traffic_tenant_rows(spec=None) -> list[dict]:
+    """Per-tenant serving outcome of the spec's open-loop replay: one row
+    per tenant with arrivals/admitted/shed counts, p50/p99 admitted
+    latency and deadline-miss rate — the serve columns the SLO work
+    surfaces.
+    """
+    from ..core import capacity_items_per_s, paper_workload, replay_trace_sim
+
+    if spec is None:
+        spec = default_serve_spec()
+    _, cpu, gpu = paper_workload(spec.workload.name)
+    units = [cpu, gpu]
+    trace = trace_from_spec(spec, capacity_items_per_s(units))
+    rep = replay_trace_sim(trace, units, spec=spec)
+    return [dict(tenant=t.tenant, arrivals=t.arrivals, admitted=t.admitted,
+                 shed=t.shed, p50_ms=t.p50_ms, p99_ms=t.p99_ms,
+                 miss_rate=t.miss_rate) for t in rep.rows]
+
+
+def serve_coexec_traffic(spec) -> None:
+    """Open-loop serve: aggregate row plus per-tenant p50/p99/miss/shed."""
+    for row in traffic_rows(spec):
+        print(f"[serve/traffic] {row['workload']}/{row['arrival']}"
+              f"/{row['tenants']}t load={row['load']:.2f} "
+              f"{row['admission']}"
+              f"{'+preempt' if row['preempt'] else ''}"
+              f"{'+shed' if row['shed'] else ''}: "
+              f"{row['admitted']}/{row['arrivals']} admitted "
+              f"(shed {row['shed_count']}), "
+              f"p50={row['p50_ms']:.2f}ms p99={row['p99_ms']:.2f}ms "
+              f"miss={row['miss_rate']:.3f}")
+    for row in traffic_tenant_rows(spec):
+        print(f"[serve/traffic]   {row['tenant']:>8s}: "
+              f"arrivals={row['arrivals']:4d} admitted={row['admitted']:4d} "
+              f"shed={row['shed']:3d} p50={row['p50_ms']:8.2f}ms "
+              f"p99={row['p99_ms']:8.2f}ms miss={row['miss_rate']:.3f}")
+
+
 def serve_coexec_real(spec) -> None:
     for row in coexec_real_rows(spec):
         print(f"[serve/coexec] {row['kernel']}[{row['impl']}]"
@@ -321,6 +452,8 @@ def serve_coexec_real(spec) -> None:
 
 
 def serve_coexec_sim(spec) -> None:
+    if spec.traffic.arrival != "closed" or spec.traffic.trace:
+        return serve_coexec_traffic(spec)
     multi = (spec.admission.policy != "fifo" or spec.admission.fuse
              or spec.workload.tenants is not None)
     if multi:

@@ -2,7 +2,8 @@
 
 The tier-1 suite must collect and run on a bare container without
 `hypothesis` installed. This module exposes the small subset the tests use
-(`given`, `settings`, `st.integers/floats/sampled_from`); when hypothesis
+(`given`, `settings`, `st.integers/floats/sampled_from/booleans/
+fixed_dictionaries`); when hypothesis
 is importable it is re-exported unchanged (the CI property job exercises
 that path), otherwise a seeded-random fallback generates a bounded number
 of cases per test deterministically.
@@ -58,6 +59,17 @@ except ImportError:
         def draw(self, rng):
             return self.options[int(rng.integers(len(self.options)))]
 
+    class _Booleans(_Strategy):
+        def draw(self, rng):
+            return bool(rng.integers(2))
+
+    class _FixedDicts(_Strategy):
+        def __init__(self, mapping):
+            self.mapping = dict(mapping)
+
+        def draw(self, rng):
+            return {k: s.draw(rng) for k, s in self.mapping.items()}
+
     class _St:
         @staticmethod
         def integers(min_value: int, max_value: int) -> _Strategy:
@@ -70,6 +82,14 @@ except ImportError:
         @staticmethod
         def sampled_from(options) -> _Strategy:
             return _SampledFrom(options)
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Booleans()
+
+        @staticmethod
+        def fixed_dictionaries(mapping) -> _Strategy:
+            return _FixedDicts(mapping)
 
     st = _St()
 
