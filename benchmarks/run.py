@@ -19,8 +19,11 @@ and staging-copy counters, and ``BENCH_coexec_multi.json`` (path via
 fairness curves included, so the preemption win is a tracked quantity.
 The ``kernels`` suite likewise writes ``BENCH_kernels.json`` (path via
 ``--bench-kernels-json``) with one row per (wrapper, impl) pair along
-the ``pallas``/``xla``/``ref`` implementation axis. All three documents
-carry ``schema_version``/``suite`` fields and are validated by
+the ``pallas``/``xla``/``ref`` implementation axis, and the ``cluster``
+suite writes ``BENCH_cluster.json`` (path via ``--bench-cluster-json``)
+with the elastic-pool failure/autoscale scenarios and their exact-once
+audit columns. All of these documents carry
+``schema_version``/``suite`` fields and are validated by
 ``scripts/check_bench_schema.py`` in CI's docs job.
 """
 from __future__ import annotations
@@ -67,6 +70,10 @@ def build_parser(suite_names) -> argparse.ArgumentParser:
                     metavar="PATH",
                     help="where to write the machine-readable open-loop "
                          "SLO traffic results (default: %(default)s)")
+    ap.add_argument("--bench-cluster-json", default="BENCH_cluster.json",
+                    metavar="PATH",
+                    help="where to write the machine-readable elastic "
+                         "cluster results (default: %(default)s)")
     add_spec_args(ap)
     return ap
 
@@ -94,14 +101,14 @@ def write_bench_doc(path: str, suite: str, spec, rows: list) -> None:
 def main() -> None:
     from repro.api import registry_listing, spec_from_args
 
-    from . import (hetero_bench, kernel_micro, paper_figs, roofline_table,
-                   traffic_bench)
+    from . import (cluster_bench, hetero_bench, kernel_micro, paper_figs,
+                   roofline_table, traffic_bench)
     from repro.launch.serve import default_serve_spec
 
     ap = build_parser(
         list(dict(paper_figs.ALL))
         + ["kernels", "hetero", "coexec", "coexec-multi", "roofline",
-           "traffic"])
+           "traffic", "cluster"])
     args = ap.parse_args()
     if args.list:
         print(registry_listing())
@@ -137,6 +144,12 @@ def main() -> None:
                         structured)
         return traffic_bench.run(spec, structured=structured)
 
+    def cluster_suite():
+        structured = cluster_bench.structured_rows(spec, smoke=args.smoke)
+        write_bench_doc(args.bench_cluster_json, "cluster", spec,
+                        structured)
+        return cluster_bench.run(spec, structured=structured)
+
     suites = dict(paper_figs.ALL)
     suites["kernels"] = kernels_suite
     suites["hetero"] = hetero_bench.run
@@ -144,6 +157,7 @@ def main() -> None:
     suites["coexec-multi"] = coexec_multi_suite
     suites["roofline"] = roofline_table.run
     suites["traffic"] = traffic_suite
+    suites["cluster"] = cluster_suite
 
     wanted = args.suites or list(suites)
     unknown = [key for key in wanted if key not in suites]

@@ -3,7 +3,8 @@
 
 Validates the JSON documents ``benchmarks.run`` writes
 (``BENCH_coexec.json`` / ``BENCH_coexec_multi.json`` /
-``BENCH_kernels.json`` / ``BENCH_traffic.json``) so CI fails fast
+``BENCH_kernels.json`` / ``BENCH_traffic.json`` /
+``BENCH_cluster.json``) so CI fails fast
 when a row key is renamed or dropped — downstream perf-trajectory
 tooling reads these artifacts across PRs, which makes their shape an
 API. Stdlib-only, enforced in CI's docs job and in tier-1 via
@@ -18,7 +19,8 @@ Checks per document:
   ``REQUIRED``), with numeric values where numbers are expected.
 
     python scripts/check_bench_schema.py BENCH_coexec.json \\
-        BENCH_coexec_multi.json BENCH_kernels.json BENCH_traffic.json
+        BENCH_coexec_multi.json BENCH_kernels.json BENCH_traffic.json \\
+        BENCH_cluster.json
 """
 from __future__ import annotations
 
@@ -59,6 +61,17 @@ REQUIRED: dict[str, dict[str, set]] = {
                     "shed_count", "p50_ms", "p99_ms", "miss_rate",
                     "shed_fraction", "packages", "fused_batches",
                     "total_ms"},
+    },
+    "cluster": {
+        "all": {"name", "workload", "arrival", "admission", "load",
+                "min_units", "max_units", "autoscale", "arrivals",
+                "admitted", "shed_count", "completed", "lost",
+                "duplicated", "reissued", "kills", "joins", "resizes",
+                "p50_ms", "p99_ms"},
+        "numeric": {"load", "min_units", "max_units", "arrivals",
+                    "admitted", "shed_count", "completed", "lost",
+                    "duplicated", "reissued", "kills", "joins",
+                    "resizes", "p50_ms", "p99_ms"},
     },
 }
 
@@ -104,7 +117,8 @@ def check_doc(path: str, doc) -> list[str]:
 def main(argv: list[str]) -> int:
     """Validate every artifact path given; returns the exit code."""
     paths = argv or ["BENCH_coexec.json", "BENCH_coexec_multi.json",
-                     "BENCH_kernels.json", "BENCH_traffic.json"]
+                     "BENCH_kernels.json", "BENCH_traffic.json",
+                     "BENCH_cluster.json"]
     errors: list[str] = []
     for path in paths:
         try:

@@ -35,12 +35,13 @@ from .registry import (KernelPlugin, SchedulerPlugin, WorkloadPlugin,
                        speed_hint_policies, temporary_plugins,
                        validate_scheduler_options, workload_names,
                        workload_plugin)
-from .spec import (SPEC_VERSION, AdmissionSpec, CoexecSpec,
+from .spec import (SPEC_VERSION, AdmissionSpec, ClusterSpec, CoexecSpec,
                    CoexecSpecBuilder, MemorySpec, SchedulerSpec,
                    TrafficSpec, UnitsSpec, WorkloadSpec)
 
 __all__ = [
-    "AdmissionSpec", "CoexecSpec", "CoexecSpecBuilder", "KernelPlugin",
+    "AdmissionSpec", "ClusterSpec", "CoexecSpec", "CoexecSpecBuilder",
+    "KernelPlugin",
     "MemorySpec", "SPEC_SECTIONS", "SPEC_VERSION", "SchedulerPlugin",
     "SchedulerSpec", "TrafficSpec", "UnitsSpec", "WorkloadPlugin",
     "WorkloadSpec",

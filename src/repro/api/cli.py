@@ -35,7 +35,7 @@ __all__ = ["SPEC_SECTIONS", "add_spec_args", "spec_from_args",
 
 # section order fixes flag ordering in --help and in args_from_spec output
 SPEC_SECTIONS = ("scheduler", "admission", "workload", "units", "memory",
-                 "traffic")
+                 "traffic", "cluster")
 
 
 def _section_class(section: str) -> type:

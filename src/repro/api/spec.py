@@ -41,8 +41,8 @@ from . import registry
 
 __all__ = [
     "UnitsSpec", "SchedulerSpec", "AdmissionSpec", "MemorySpec",
-    "WorkloadSpec", "TrafficSpec", "CoexecSpec", "CoexecSpecBuilder",
-    "SPEC_VERSION",
+    "WorkloadSpec", "TrafficSpec", "ClusterSpec", "CoexecSpec",
+    "CoexecSpecBuilder", "SPEC_VERSION",
 ]
 
 SPEC_VERSION = 1
@@ -594,6 +594,112 @@ class TrafficSpec(_SubSpec):
 
 
 @dataclasses.dataclass(frozen=True)
+class ClusterSpec(_SubSpec):
+    """Elastic cluster tier: pool sizing, failure detection, autoscaling.
+
+    Configures :mod:`repro.core.cluster`: the provisioned pool ceiling
+    and active floor, the supervisor's heartbeat/grace/straggler knobs,
+    an optional committed :class:`~repro.core.cluster.FailurePlan` to
+    inject, and the admission-depth autoscaler's hysteresis band.
+    Disabled by default — the static unit set of the paper's runtime.
+    """
+
+    enabled: bool = dataclasses.field(
+        default=False, metadata=_cli(
+            "cluster", "serve through the elastic cluster tier "
+                       "(resizable pool + failure recovery)"))
+    min_units: int = dataclasses.field(
+        default=1, metadata=_cli(
+            "cluster-min-units", "active units at start and the "
+                                 "scale-in floor"))
+    max_units: Optional[int] = dataclasses.field(
+        default=None, metadata=_cli(
+            "cluster-max-units", "provisioned pool ceiling (default: "
+                                 "the built unit count)"))
+    heartbeat_s: float = dataclasses.field(
+        default=0.05, metadata=_cli(
+            "cluster-heartbeat-s", "expected liveness beat interval in "
+                                   "seconds"))
+    grace_s: float = dataclasses.field(
+        default=0.2, metadata=_cli(
+            "cluster-grace-s", "silence beyond this declares a unit "
+                               "dead"))
+    straggler_factor: float = dataclasses.field(
+        default=4.0, metadata=_cli(
+            "cluster-straggler-factor", "outstanding-age multiple of the "
+                                        "EWMA package service time that "
+                                        "flags a straggler"))
+    failure_plan: str = dataclasses.field(
+        default="", metadata=_cli(
+            "cluster-failure-plan", "JSON FailurePlan to inject "
+                                    "(scripted kill/join timeline)"))
+    autoscale: bool = dataclasses.field(
+        default=False, metadata=_cli(
+            "cluster-autoscale", "resize the pool from admission queue "
+                                 "depth between min and max units"))
+    scale_up_depth: int = dataclasses.field(
+        default=8, metadata=_cli(
+            "cluster-scale-up-depth", "queue depth that (sustained) "
+                                      "triggers scale-out"))
+    scale_down_depth: int = dataclasses.field(
+        default=1, metadata=_cli(
+            "cluster-scale-down-depth", "queue depth at or below which "
+                                        "(sustained) the pool scales in"))
+    sustain_s: float = dataclasses.field(
+        default=0.1, metadata=_cli(
+            "cluster-sustain-s", "seconds the backlog must persist "
+                                 "before scale-out"))
+    idle_s: float = dataclasses.field(
+        default=0.5, metadata=_cli(
+            "cluster-idle-s", "seconds of idleness before scale-in"))
+    cooldown_s: float = dataclasses.field(
+        default=0.25, metadata=_cli(
+            "cluster-cooldown-s", "minimum seconds between consecutive "
+                                  "resizes"))
+
+    def validate(self) -> None:
+        """Check pool bounds, detector intervals and the hysteresis band.
+
+        Raises:
+            ValueError: inverted pool bounds, non-positive intervals, or
+                a hysteresis band with scale_down >= scale_up.
+        """
+        if self.min_units < 1:
+            raise ValueError("min_units must be >= 1")
+        if self.max_units is not None and self.max_units < self.min_units:
+            raise ValueError(f"max_units ({self.max_units}) must be >= "
+                             f"min_units ({self.min_units})")
+        if self.heartbeat_s <= 0 or self.grace_s <= 0:
+            raise ValueError("heartbeat_s and grace_s must be positive")
+        if self.straggler_factor <= 0:
+            raise ValueError("straggler_factor must be positive")
+        if self.scale_down_depth >= self.scale_up_depth:
+            raise ValueError("hysteresis needs scale_down_depth < "
+                             "scale_up_depth")
+        if self.sustain_s < 0 or self.idle_s < 0 or self.cooldown_s < 0:
+            raise ValueError("sustain_s/idle_s/cooldown_s must be >= 0")
+
+    def load_plan(self):
+        """The configured failure plan, loaded (``None`` when unset).
+
+        Returns:
+            A :class:`~repro.core.cluster.FailurePlan`, or ``None``.
+        """
+        if not self.failure_plan:
+            return None
+        from ..core.cluster import FailurePlan
+
+        return FailurePlan.load(self.failure_plan)
+
+    def autoscaler_opts(self) -> dict:
+        """Keyword arguments for :class:`~repro.core.cluster.Autoscaler`."""
+        return dict(scale_up_depth=self.scale_up_depth,
+                    scale_down_depth=self.scale_down_depth,
+                    sustain_s=self.sustain_s, idle_s=self.idle_s,
+                    cooldown_s=self.cooldown_s)
+
+
+@dataclasses.dataclass(frozen=True)
 class CoexecSpec(_SubSpec):
     """The single declarative description of one co-execution setup.
 
@@ -615,6 +721,7 @@ class CoexecSpec(_SubSpec):
     memory: MemorySpec = dataclasses.field(default_factory=MemorySpec)
     workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
     traffic: TrafficSpec = dataclasses.field(default_factory=TrafficSpec)
+    cluster: ClusterSpec = dataclasses.field(default_factory=ClusterSpec)
 
     # -- round-trip serialization ------------------------------------------
     def to_dict(self) -> dict:
@@ -627,6 +734,7 @@ class CoexecSpec(_SubSpec):
             "memory": self.memory.to_dict(),
             "workload": self.workload.to_dict(),
             "traffic": self.traffic.to_dict(),
+            "cluster": self.cluster.to_dict(),
         }
 
     @classmethod
@@ -653,6 +761,7 @@ class CoexecSpec(_SubSpec):
             memory=MemorySpec.from_dict(data.get("memory", {})),
             workload=WorkloadSpec.from_dict(data.get("workload", {})),
             traffic=TrafficSpec.from_dict(data.get("traffic", {})),
+            cluster=ClusterSpec.from_dict(data.get("cluster", {})),
         )
 
     def to_json(self, **dumps_kw) -> str:
@@ -689,6 +798,7 @@ class CoexecSpec(_SubSpec):
         self.memory.validate()
         self.workload.validate()
         self.traffic.validate()
+        self.cluster.validate()
         if self.units.dist:
             n = self.units.count if self.units.count is not None \
                 else max(len(self.units.dist), 1)
@@ -915,6 +1025,38 @@ class CoexecSpecBuilder:
         if changes:
             tr = tr.replace(**changes)
         return self._update(traffic=tr)
+
+    def cluster(self, on: bool = True, *,
+                min_units: Optional[int] = None,
+                max_units: Optional[int] = None,
+                autoscale: Optional[bool] = None,
+                failure_plan: Optional[str] = None,
+                **changes) -> "CoexecSpecBuilder":
+        """Configure the elastic cluster tier.
+
+        Args:
+            on: serve through the resizable pool.
+            min_units: active floor (``None`` leaves it unchanged).
+            max_units: provisioned ceiling.
+            autoscale: resize on admission queue depth.
+            failure_plan: path to a committed FailurePlan JSON.
+            **changes: any other :class:`ClusterSpec` field.
+
+        Returns:
+            The builder.
+        """
+        cl = self._spec.cluster.replace(enabled=bool(on))
+        if min_units is not None:
+            cl = cl.replace(min_units=int(min_units))
+        if max_units is not None:
+            cl = cl.replace(max_units=int(max_units))
+        if autoscale is not None:
+            cl = cl.replace(autoscale=bool(autoscale))
+        if failure_plan is not None:
+            cl = cl.replace(failure_plan=str(failure_plan))
+        if changes:
+            cl = cl.replace(**changes)
+        return self._update(cluster=cl)
 
     def fuse(self, on: bool = True, *,
              threshold: Optional[int] = None,

@@ -31,10 +31,19 @@ Public surface:
     DataPlaneCounters, make_plane               — real USM/BUFFERS data plane
     PowerModel, energy_report, edp_ratio        — energy/EDP model (§5.2)
     paper_workload, ALL_BENCHMARKS              — Table 1 profiles
+    UnitPool, Supervisor, Autoscaler,
+        FailurePlan, replay_trace_cluster       — elastic cluster tier:
+                                                  resizable pool, failure
+                                                  detection, exact re-issue
+                                                  (repro.core.cluster)
 """
 from .admission import (ADMISSION_POLICIES, AdmissionConfig,
                         AdmissionController, AdmissionFull, LaunchShed,
                         fusion_bucket, jain_index, service_fairness_curve)
+from .cluster import (Autoscaler, ClusterRealBackend, ClusterReplay,
+                      ClusterSimBackend, FailurePlan, InjectedFailure,
+                      Supervisor, UnitPool, absorb_share, grant_share,
+                      replay_cluster_lockstep, replay_trace_cluster)
 from .dataplane import (ArgRole, ArgSpec, CoexecKernel, DataPlaneCounters,
                         OutputSpec, as_coexec_kernel, make_plane)
 from .energy import (EnergyReport, PowerModel, PAPER_POWER, TPU_POWER,
@@ -61,21 +70,24 @@ from .workloads import (ALL_BENCHMARKS, IRREGULAR, REGULAR, SPECS,
 __all__ = [
     "ADMISSION_POLICIES", "ALL_BENCHMARKS", "AdmissionConfig",
     "AdmissionController", "AdmissionFull", "ArgRole", "ArgSpec",
-    "Arrival", "CoexecEngine", "CoexecKernel", "CoexecutorRuntime",
-    "DataPlaneCounters", "DynamicScheduler", "EnergyReport",
-    "EwmaThroughput", "ExecutionLoop", "HGuidedScheduler", "IRREGULAR",
-    "JaxUnit", "LaunchHandle", "LaunchShed", "LaunchSimResult",
-    "LaunchSpec", "LaunchState", "LaunchStats", "LaunchWaitTimeout",
-    "MemoryCosts", "MemoryModel", "MultiSimResult", "OutputSpec",
-    "PAPER_POWER", "Package", "PowerModel", "REGULAR", "Range", "SPECS",
+    "Arrival", "Autoscaler", "ClusterRealBackend", "ClusterReplay",
+    "ClusterSimBackend", "CoexecEngine", "CoexecKernel",
+    "CoexecutorRuntime", "DataPlaneCounters", "DynamicScheduler",
+    "EnergyReport", "EwmaThroughput", "ExecutionLoop", "FailurePlan",
+    "HGuidedScheduler", "IRREGULAR", "InjectedFailure", "JaxUnit",
+    "LaunchHandle", "LaunchShed", "LaunchSimResult", "LaunchSpec",
+    "LaunchState", "LaunchStats", "LaunchWaitTimeout", "MemoryCosts",
+    "MemoryModel", "MultiSimResult", "OutputSpec", "PAPER_POWER",
+    "Package", "PowerModel", "REGULAR", "Range", "SPECS",
     "SPEED_HINT_POLICIES", "Scheduler", "ShedRecord", "SimResult",
-    "SimUnit", "SpeedBoard", "StaticScheduler", "TPU_MEMORY_COSTS",
-    "TPU_POWER", "TenantRow", "Trace", "TrafficReplay",
-    "WorkStealingScheduler", "Workload", "as_coexec_kernel",
-    "capacity_items_per_s", "counits_from_devices", "edp_ratio",
-    "energy_report", "fusion_bucket", "geomean", "jain_index",
-    "make_plane", "paper_workload", "replay_trace_lockstep",
-    "replay_trace_sim", "service_fairness_curve", "simulate",
-    "simulate_multi", "solo_run", "static_bounds", "synthesize_trace",
-    "tenant_rows", "validate_cover",
+    "SimUnit", "SpeedBoard", "StaticScheduler", "Supervisor",
+    "TPU_MEMORY_COSTS", "TPU_POWER", "TenantRow", "Trace",
+    "TrafficReplay", "UnitPool", "WorkStealingScheduler", "Workload",
+    "absorb_share", "as_coexec_kernel", "capacity_items_per_s",
+    "counits_from_devices", "edp_ratio", "energy_report", "fusion_bucket",
+    "geomean", "grant_share", "jain_index", "make_plane",
+    "paper_workload", "replay_cluster_lockstep", "replay_trace_cluster",
+    "replay_trace_lockstep", "replay_trace_sim", "service_fairness_curve",
+    "simulate", "simulate_multi", "solo_run", "static_bounds",
+    "synthesize_trace", "tenant_rows", "validate_cover",
 ]

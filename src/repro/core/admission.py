@@ -254,7 +254,8 @@ class AdmissionController:
     def __init__(self, num_units: int,
                  config: Optional[AdmissionConfig] = None, *,
                  fuse_materialize: Optional[Callable] = None,
-                 speed_refresh: Optional[Callable] = None):
+                 speed_refresh: Optional[Callable] = None,
+                 on_activate: Optional[Callable] = None):
         """Build a controller.
 
         Args:
@@ -265,11 +266,15 @@ class AdmissionController:
                 when ``None``, staged groups are admitted member-by-member.
             speed_refresh: optional per-entry hook invoked right before
                 pulling a package (the engine refreshes HGuided speeds).
+            on_activate: optional hook invoked with each entry as it
+                becomes schedulable (the execution loop strips dead-unit
+                scheduler reservations here in elastic-cluster mode).
         """
         self.num_units = int(num_units)
         self.config = config or AdmissionConfig()
         self._fuse_materialize = fuse_materialize
         self._speed_refresh = speed_refresh
+        self._on_activate = on_activate
         self._active: list = []                     # FIFO admit order
         self._tenants: dict[str, _TenantQueue] = {}
         self._ring: list[str] = []                  # DRR service order
@@ -300,6 +305,10 @@ class AdmissionController:
     def drained(self) -> bool:
         """True when no admitted or staged work remains anywhere."""
         return not self._active and not self._staged
+
+    def active_entries(self) -> list:
+        """Schedulable entries in admit order (staged members excluded)."""
+        return list(self._active)
 
     # -- admission ---------------------------------------------------------
     def offer(self, entry, now: float = 0.0) -> bool:
@@ -378,6 +387,8 @@ class AdmissionController:
     def _activate(self, entry) -> None:
         """Make an entry schedulable (joins its tenant's DRR flow)."""
         self._active.append(entry)
+        if self._on_activate is not None:
+            self._on_activate(entry)
         # wfq_cost_scale converts an entry's package sizes to work-items
         # (engine-side fused batches schedule in member units, each worth
         # one member's whole index space of credit)

@@ -249,6 +249,7 @@ class RealBackend(Backend):
         self.plane = plane
         self.board = board
         self.condition = condition
+        self.loop = None        # set by the engine for elastic membership
         self._fused_kernels: dict = {}
 
     # -- substrate contract -------------------------------------------------
@@ -266,6 +267,12 @@ class RealBackend(Backend):
             pkg: the package to execute; the plane stamps
                 ``t_complete``/``t_collected``.
         """
+        if self.loop is not None and unit in self.loop.dead_units:
+            # the unit was declared dead after this worker pulled: the
+            # package is already disowned and its range re-issued, so
+            # executing it would double-compute (and double-count) —
+            # drop it; the loop's ledger drops the zombie completion too
+            return
         self.plane.execute(self.units[unit], launch.plan, pkg)
         if self.board is not None:
             self.board.record(unit, pkg.size,
@@ -431,6 +438,7 @@ class CoexecEngine:
                                    condition=self._cv)
         self.loop = ExecutionLoop(self.backend,
                                   [u.name for u in self.units], cfg)
+        self.backend.loop = self.loop   # dead-unit dispatch guard
         self._threads: list[threading.Thread] = []
         self._stop = False
         self._started = False
@@ -498,6 +506,47 @@ class CoexecEngine:
         if wait:
             for t in self._threads:
                 t.join()
+
+    def kill_unit(self, unit_idx: int) -> int:
+        """Declare one Coexecution Unit dead; its work re-issues exactly.
+
+        The unit's in-flight packages are disowned and their exact ranges
+        re-emitted to the surviving units (the loop's ownership ledger
+        guarantees exact-once accounting), per-unit scheduler
+        reservations are harvested, and the unit's worker thread parks —
+        a completion it races in is dropped as a zombie. Pending
+        ``LaunchHandle`` objects resolve normally once survivors finish the
+        re-issued cover; no handle ever spuriously times out or errors
+        because a unit died.
+
+        Args:
+            unit_idx: index of the unit to fail.
+
+        Returns:
+            Number of in-flight/reserved ranges queued for re-issue.
+
+        Raises:
+            RuntimeError: killing the last live unit (nothing could
+                serve the re-issued work).
+        """
+        with self._cv:
+            live = len(self.units) - len(self.loop.dead_units)
+            if unit_idx not in self.loop.dead_units and live <= 1:
+                raise RuntimeError("cannot kill the last live unit")
+            moved = self.loop.unit_lost(unit_idx)
+            self._cv.notify_all()
+        return moved
+
+    def join_unit(self, unit_idx: int) -> None:
+        """Bring a previously killed unit back into the pool.
+
+        Args:
+            unit_idx: index of a provisioned (possibly dead) unit.
+        """
+        with self._cv:
+            self.loop.unit_joined(unit_idx,
+                                  speed=self.units[unit_idx].speed_hint)
+            self._cv.notify_all()
 
     def __enter__(self) -> "CoexecEngine":
         """Start the engine on context entry."""

@@ -35,6 +35,7 @@ one-place change that both substrates inherit structurally.
 from __future__ import annotations
 
 import abc
+import collections
 import dataclasses
 import itertools
 from typing import Optional, Sequence
@@ -99,7 +100,7 @@ class LaunchState:
     __slots__ = ("id", "scheduler", "tenant", "weight", "t_submit",
                  "deadline", "fuse_key", "fuse_bucket", "slots", "members",
                  "member_span", "wfq_cost_scale", "done_pkgs", "outstanding",
-                 "failed", "finalized", "fused", "stats")
+                 "pending_reissue", "failed", "finalized", "fused", "stats")
 
     def __init__(self, launch_id: int, scheduler: Scheduler, *,
                  tenant: Optional[str] = None, weight: float = 1.0,
@@ -118,6 +119,7 @@ class LaunchState:
         self.wfq_cost_scale = 1
         self.done_pkgs: list[Package] = []
         self.outstanding = 0          # issued but not yet collected
+        self.pending_reissue = 0      # ranges queued for re-issue (unit loss)
         self.failed = False
         self.finalized = False
         self.fused = False            # served through a coalesced batch
@@ -199,6 +201,17 @@ class Backend(abc.ABC):
     def on_package(self, launch: LaunchState, pkg: Package) -> None:
         """Observe one collected package (sim: service-curve sampling)."""
 
+    def package_lost(self, launch: LaunchState, pkg: Package) -> None:
+        """Roll back substrate accounting of a package lost to unit death.
+
+        Called by :meth:`ExecutionLoop.unit_lost` for every in-flight
+        package the dead unit owned, *before* its range is queued for
+        re-issue. A backend that charged counters or modeled cost at
+        dispatch time undoes that here so the disturbed run's accounting
+        equals an undisturbed one (the lost attempt never happened as far
+        as the data plane is concerned). Default: nothing was charged yet.
+        """
+
 
 class ExecutionLoop:
     """The one Commander loop both backends drive.
@@ -227,10 +240,21 @@ class ExecutionLoop:
         self.unit_names = list(unit_names)
         self.validate = validate
         self._ids = itertools.count()
+        # Elastic-cluster state: which unit indices are currently dead, a
+        # per-unit ownership ledger of in-flight packages keyed by
+        # (launch id, package seq), and the queue of ranges harvested from
+        # dead units awaiting exact re-issue to survivors.
+        self.dead_units: set[int] = set()
+        self._owned: dict[int, dict[tuple[int, int],
+                                    tuple[LaunchState, Package]]] = {}
+        self._reissue: collections.deque[tuple[LaunchState, Range]] = \
+            collections.deque()
+        self.reissued = 0             # packages re-emitted after unit loss
         self.admission = AdmissionController(
             len(self.unit_names), config,
             fuse_materialize=self._materialize_fused,
-            speed_refresh=backend.refresh_speeds)
+            speed_refresh=backend.refresh_speeds,
+            on_activate=self._scrub_dead_units)
 
     # -- identity / capacity -----------------------------------------------
     def next_id(self) -> int:
@@ -305,13 +329,34 @@ class ExecutionLoop:
             ``(launch, package)``, or ``None`` when nothing can serve
             this unit right now.
         """
+        if unit in self.dead_units:
+            return None
         t = self.backend.now() if now is None else now
         self.admission.flush(t, force=force_flush)
+        # Recovery work jumps the queue: a re-issued range was already
+        # admitted and WFQ-charged at its original issue, so serving it
+        # first keeps fairness attribution exact and clears the backlog a
+        # dead unit left behind before new packages are cut.
+        while self._reissue:
+            launch, rng = self._reissue.popleft()
+            launch.pending_reissue -= 1
+            if launch.failed or launch.finalized:
+                continue
+            pkg = launch.scheduler.reissue(rng, unit)
+            launch.outstanding += 1
+            pkg.t_issue = t
+            self._owned.setdefault(unit, {})[(launch.id, pkg.seq)] = \
+                (launch, pkg)
+            self.admission.dispatched += 1
+            self.reissued += 1
+            return launch, pkg
         got = self.admission.next_work(unit)
         if got is not None:
             launch, pkg = got
             launch.outstanding += 1
             pkg.t_issue = t
+            self._owned.setdefault(unit, {})[(launch.id, pkg.seq)] = \
+                (launch, pkg)
         return got
 
     def complete(self, launch: LaunchState, pkg: Package,
@@ -323,7 +368,17 @@ class ExecutionLoop:
             pkg: the package the backend just executed/modeled.
             error: the package's failure, if it had one — fails the whole
                 launch (first error wins).
+
+        A package whose issuing unit died since the pull was *disowned*
+        by :meth:`unit_lost` (its range is already queued for re-issue);
+        a late completion from such a zombie worker is dropped here so
+        the work-item is never counted twice.
         """
+        owned = self._owned.get(pkg.unit)
+        key = (launch.id, pkg.seq)
+        if owned is None or key not in owned:
+            return      # disowned: the unit died, the range was re-issued
+        del owned[key]
         launch.outstanding -= 1
         if error is not None:
             self.fail(launch, error)
@@ -332,7 +387,8 @@ class ExecutionLoop:
             return      # a sibling package already failed the launch
         launch.done_pkgs.append(pkg)
         self.backend.on_package(launch, pkg)
-        if launch.scheduler.done() and launch.outstanding == 0:
+        if (launch.scheduler.done() and launch.outstanding == 0
+                and launch.pending_reissue == 0):
             self._finalize(launch)
 
     def fail(self, launch: LaunchState, err: BaseException) -> None:
@@ -351,6 +407,117 @@ class ExecutionLoop:
         for target in (launch.members if launch.members is not None
                        else [launch]):
             self.backend.fail(target, err)
+
+    # -- elastic membership ------------------------------------------------
+    def in_flight_of(self, unit: int) -> int:
+        """Number of issued-but-uncollected packages a unit currently owns."""
+        return len(self._owned.get(unit, ()))
+
+    def oldest_issue(self, unit: int) -> Optional[float]:
+        """Issue time of the unit's longest-outstanding package (or None).
+
+        The supervisor's straggler detector compares this age against the
+        pool's typical package service time.
+        """
+        owned = self._owned.get(unit)
+        if not owned:
+            return None
+        return min(p.t_issue for _, p in owned.values())
+
+    def unit_lost(self, unit: int) -> int:
+        """Declare one unit dead and queue its work for exact re-issue.
+
+        Idempotent per death. Two kinds of work migrate to survivors:
+
+        * **in-flight packages** the unit pulled but never completed —
+          each is disowned (a zombie completion is dropped by
+          :meth:`complete`), rolled back through
+          :meth:`Backend.package_lost`, and its exact :class:`Range`
+          queued for re-emission;
+        * **reserved un-issued work** a partitioned scheduler set aside
+          for this unit (a static region, work-stealing chunks) —
+          harvested via :meth:`~repro.core.scheduler.Scheduler.unit_lost`
+          from every active launch so nothing strands on a dead unit.
+
+        Because a re-issued range is bitwise the same interval, survivors
+        recompute exactly the lost work-items: the finished launch is
+        bitwise-identical to an undisturbed run and per-launch counters
+        balance exactly (the lost attempt is uncounted, the re-issue
+        recounted).
+
+        Args:
+            unit: index of the dead Coexecution Unit.
+
+        Returns:
+            Number of ranges queued for re-issue by this call.
+        """
+        if unit in self.dead_units:
+            return 0
+        self.dead_units.add(unit)
+        moved = 0
+        for launch, pkg in self._owned.pop(unit, {}).values():
+            launch.outstanding -= 1
+            if launch.failed or launch.finalized:
+                continue    # nothing to recover for an aborted launch
+            self.backend.package_lost(launch, pkg)
+            self.admission.dispatched -= 1
+            launch.pending_reissue += 1
+            self._reissue.append((launch, Range(pkg.offset, pkg.size)))
+            moved += 1
+        for entry in self.admission.active_entries():
+            moved += self._harvest_reserved(entry, unit)
+        return moved
+
+    def unit_joined(self, unit: int, *, name: Optional[str] = None,
+                    speed: Optional[float] = None) -> None:
+        """Bring a unit (back) into the pool.
+
+        A known index is a revival — the dormant/dead unit simply starts
+        pulling again (its statically reserved regions were given away at
+        loss time; adaptive policies serve it naturally). An index one
+        past the end grows the pool, and every active launch's scheduler
+        is notified so per-unit structures exist before the first pull.
+
+        Args:
+            unit: index of the joining Coexecution Unit.
+            name: display name for a brand-new unit.
+            speed: relative throughput hint for adaptive schedulers.
+        """
+        if unit < len(self.unit_names):
+            self.dead_units.discard(unit)
+            return
+        if unit != len(self.unit_names):
+            raise ValueError(f"unit {unit} would leave a gap in the pool "
+                             f"(size {len(self.unit_names)})")
+        self.unit_names.append(name or f"unit{unit}")
+        self.admission.num_units = len(self.unit_names)
+        for entry in self.admission.active_entries():
+            hook = getattr(entry.scheduler, "unit_joined", None)
+            if hook is not None:
+                hook(unit, speed=speed)
+
+    def _harvest_reserved(self, entry: LaunchState, unit: int) -> int:
+        """Queue one launch's dead-unit scheduler reservations for re-issue."""
+        hook = getattr(entry.scheduler, "unit_lost", None)
+        if hook is None or entry.failed or entry.finalized:
+            return 0
+        moved = 0
+        for rng in hook(unit):
+            entry.pending_reissue += 1
+            self._reissue.append((entry, rng))
+            moved += 1
+        return moved
+
+    def _scrub_dead_units(self, entry: LaunchState) -> None:
+        """Strip dead-unit reservations from a newly activated launch.
+
+        A launch admitted (or a fusion group materialized) while part of
+        the pool is dead carries scheduler regions no one will ever pull;
+        they move straight to the re-issue queue so the launch cannot
+        wedge waiting on a unit that is not coming back.
+        """
+        for unit in self.dead_units:
+            self._harvest_reserved(entry, unit)
 
     # -- fusion ------------------------------------------------------------
     def _materialize_fused(self, members: list[LaunchState]) -> LaunchState:

@@ -160,6 +160,55 @@ class Scheduler(abc.ABC):
         self.issued.append(pkg)
         return pkg
 
+    # -- elastic-cluster hooks ---------------------------------------------
+    def reissue(self, rng: Range, unit: int) -> Package:
+        """Re-emit a previously issued range after its unit died.
+
+        The range was already cut from the index space (the cursor moved
+        when it was first issued), so this only mints a fresh package
+        around the *same* interval for a surviving unit — which is what
+        makes recovery bitwise-identical to an undisturbed run.
+
+        Args:
+            rng: the exact lost interval, as first issued.
+            unit: the surviving Coexecution Unit taking the work over.
+        """
+        pkg = Package(rng=rng, seq=self._seq, unit=unit)
+        self._seq += 1
+        self.issued.append(pkg)
+        return pkg
+
+    def unit_lost(self, unit: int) -> list[Range]:
+        """Release work reserved for a dead unit.
+
+        Policies with per-unit reservations (static regions, work-stealing
+        deques) override this to hand the un-issued remainder back as
+        ranges the execution loop re-issues to survivors; cursor-based
+        policies reserve nothing, so the default releases nothing.
+
+        Args:
+            unit: index of the dead Coexecution Unit.
+
+        Returns:
+            Ranges no longer servable by this scheduler itself (they are
+            accounted as issued here; the loop re-emits them).
+        """
+        return []
+
+    def unit_joined(self, unit: int, speed: Optional[float] = None) -> None:
+        """Accommodate a unit joining (or growing) the pool.
+
+        The base scheduler only tracks the unit count; policies with
+        per-unit structures (speeds, regions, deques) extend them so the
+        newcomer can pull immediately.
+
+        Args:
+            unit: index of the joining Coexecution Unit.
+            speed: optional relative-throughput hint for the newcomer.
+        """
+        if unit >= self.num_units:
+            self.num_units = unit + 1
+
 
 class StaticScheduler(Scheduler):
     """One package per unit, split ∝ relative speed (paper's `Static`)."""
@@ -222,6 +271,33 @@ class StaticScheduler(Scheduler):
         self._cursor += size
         self.issued.append(pkg)
         return pkg
+
+    def unit_lost(self, unit: int) -> list[Range]:
+        """Hand back the un-served remainder of the dead unit's region.
+
+        The region is marked drained (cursor advanced) so the launch can
+        still complete: the released range is re-issued by the execution
+        loop to whichever survivor idles first — the one adaptation the
+        paper's static policy ever makes.
+        """
+        if unit >= len(self._next):
+            return []
+        lo, hi = self._next[unit], self._bounds[unit + 1]
+        if lo >= hi:
+            return []
+        self._next[unit] = hi
+        self._cursor += hi - lo
+        return [Range(lo, hi - lo)]
+
+    def unit_joined(self, unit: int, speed: Optional[float] = None) -> None:
+        """A late joiner gets an empty region — static splits are fixed."""
+        super().unit_joined(unit, speed)
+        while len(self._next) < self.num_units:
+            self._next.append(self.total)
+            self._bounds.append(self.total)
+            self._sizes.append(0)
+            self.speeds.append(float(speed) if speed and speed > 0 else
+                               sum(self.speeds) / len(self.speeds))
 
 
 class DynamicScheduler(Scheduler):
@@ -291,6 +367,19 @@ class HGuidedScheduler(Scheduler):
         """Online speed refinement from the profiler (EWMA throughput)."""
         if speed > 0:
             self.speeds[unit] = float(speed)
+
+    def unit_joined(self, unit: int, speed: Optional[float] = None) -> None:
+        """Grant the newcomer a speed share (hetero's ``add_group`` move).
+
+        With no hint it enters at the pool's mean speed, shrinking every
+        incumbent's *relative* share proportionally — the same
+        renormalizing grant :func:`repro.core.cluster.grant_share`
+        models — and the guided sizing formula adapts from the next pull.
+        """
+        super().unit_joined(unit, speed)
+        while len(self.speeds) < self.num_units:
+            self.speeds.append(float(speed) if speed and speed > 0 else
+                               sum(self.speeds) / len(self.speeds))
 
 
 class WorkStealingScheduler(Scheduler):
@@ -406,6 +495,32 @@ class WorkStealingScheduler(Scheduler):
         self._cursor += rng.size
         self.issued.append(pkg)
         return pkg
+
+    def unit_lost(self, unit: int) -> list[Range]:
+        """Drain the dead unit's deque; its chunks go to the re-issue queue.
+
+        Survivors can no longer steal from it (load drops to zero), and
+        the released chunks keep their seed boundaries, so the total
+        package count stays deterministic across the disturbance.
+        """
+        if unit >= len(self._deques):
+            return []
+        dq = self._deques[unit]
+        freed = list(dq)
+        dq.clear()
+        moved = sum(r.size for r in freed)
+        self._load[unit] = 0
+        self._cursor += moved
+        return freed
+
+    def unit_joined(self, unit: int, speed: Optional[float] = None) -> None:
+        """A late joiner starts empty and steals its first chunks."""
+        super().unit_joined(unit, speed)
+        while len(self._deques) < self.num_units:
+            self._deques.append(collections.deque())
+            self._load.append(0)
+            self.speeds.append(float(speed) if speed and speed > 0 else
+                               sum(self.speeds) / len(self.speeds))
 
 
 # ---------------------------------------------------------------------------

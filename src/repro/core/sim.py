@@ -207,31 +207,15 @@ class SimBackend(Backend):
         """
         wl = launch.workload
         u = self.units[unit]
-        n = len(self.units)
         in_bytes = pkg.size * wl.bytes_in_per_item
         out_bytes = pkg.size * wl.bytes_out_per_item
         _count_package(self.counters, self.memory, in_bytes, out_bytes)
         _count_package(launch.counters, self.memory, in_bytes, out_bytes)
 
+        launch_cost, compute_end = self._model_compute(unit, launch, pkg)
         # package emission on this unit's manager thread
-        launch_cost = self.costs.launch_cost(self.memory, int(in_bytes))
         self.host_busy += launch_cost
         pkg.t_launch = pkg.t_issue + launch_cost
-
-        # compute; LLC contention applies while any *other* unit is busy
-        pfx = self._prefix_for(wl, u)
-        if pfx is None:
-            base = pkg.size / u.speed
-        else:
-            base = float(pfx[pkg.offset + pkg.size] - pfx[pkg.offset]) \
-                / u.speed
-        others_busy = any(self.busy_until[j] > pkg.t_launch
-                          for j in range(n) if j != unit)
-        factor = 1.0
-        if others_busy and wl.contention_scale > 0.0:
-            pen = self.costs.contention_penalty(wl.working_set_bytes)
-            factor = 1.0 + wl.contention_scale * (pen - 1.0)
-        compute_end = pkg.t_launch + base * factor
         self.busy_until[unit] = compute_end
         self.unit_busy[u.name] += compute_end - pkg.t_launch
         self.unit_finish[u.name] = max(self.unit_finish[u.name], compute_end)
@@ -249,6 +233,37 @@ class SimBackend(Backend):
 
     def wait_next_event(self) -> None:
         """No-op: :meth:`run` advances virtual time through its heap."""
+
+    def _model_compute(self, unit: int, launch: _SimLaunchState,
+                       pkg: Package) -> tuple[float, float]:
+        """Price one package without mutating any state.
+
+        Given the backend's *current* busy horizons and the package's
+        stamped ``t_issue``, returns ``(launch_cost, compute_end)`` —
+        exactly the timeline :meth:`dispatch` would commit. Factored out
+        so the elastic-cluster backend can ask "would this package finish
+        before its unit's scripted death?" and, when not, model the
+        attempt as lost without ever charging its cost.
+        """
+        wl = launch.workload
+        u = self.units[unit]
+        in_bytes = pkg.size * wl.bytes_in_per_item
+        launch_cost = self.costs.launch_cost(self.memory, int(in_bytes))
+        t_launch = pkg.t_issue + launch_cost
+        # compute; LLC contention applies while any *other* unit is busy
+        pfx = self._prefix_for(wl, u)
+        if pfx is None:
+            base = pkg.size / u.speed
+        else:
+            base = float(pfx[pkg.offset + pkg.size] - pfx[pkg.offset]) \
+                / u.speed
+        others_busy = any(self.busy_until[j] > t_launch
+                          for j in range(len(self.units)) if j != unit)
+        factor = 1.0
+        if others_busy and wl.contention_scale > 0.0:
+            pen = self.costs.contention_penalty(wl.working_set_bytes)
+            factor = 1.0 + wl.contention_scale * (pen - 1.0)
+        return launch_cost, t_launch + base * factor
 
     # -- payload hooks ------------------------------------------------------
     def fuse_payload(self, members: list[_SimLaunchState],

@@ -22,19 +22,15 @@ import dataclasses
 from typing import Callable, Optional
 
 from ..checkpoint import Checkpointer
+# FailurePlan and InjectedFailure moved to the serving cluster tier
+# (repro.core.cluster) when it absorbed this module's failure-injection
+# machinery; re-exported here so training code keeps its import path.
+# The step-keyed ``events`` dict this loop consumes is unchanged — the
+# cluster adds the time-keyed ``timeline`` and JSON save/load on top.
+from ..core.cluster import FailurePlan, InjectedFailure
 
-
-class InjectedFailure(RuntimeError):
-    pass
-
-
-@dataclasses.dataclass
-class FailurePlan:
-    """step → action; actions: "crash" (restart) or "kill:<group>"."""
-    events: dict[int, str]
-
-    def check(self, step: int) -> Optional[str]:
-        return self.events.get(step)
+__all__ = ["FailurePlan", "InjectedFailure", "Supervisor",
+           "SupervisorReport"]
 
 
 @dataclasses.dataclass

@@ -27,6 +27,11 @@ from __future__ import annotations
 import abc
 from typing import Optional
 
+# the scale-down/scale-up ratio moves are shared with the serving
+# cluster tier's Supervisor (they were absorbed into repro.core.cluster
+# as pure functions when the elastic pool landed)
+from ..core.cluster import absorb_share, grant_share
+
 
 class RebalancePolicy(abc.ABC):
     name = "base"
@@ -42,18 +47,11 @@ class RebalancePolicy(abc.ABC):
 
     def drop_group(self, name: str) -> None:
         """Elastic scale-down: dead group's share redistributes ∝ rest."""
-        if name not in self.shares_:
-            return
-        self.shares_.pop(name)
-        tot = sum(self.shares_.values())
-        if tot > 0:
-            self.shares_ = {k: v / tot for k, v in self.shares_.items()}
+        self.shares_ = absorb_share(self.shares_, name)
 
     def add_group(self, name: str, hint_share: float) -> None:
         """Elastic scale-up: newcomer enters at its hint share."""
-        scale = 1.0 - hint_share
-        self.shares_ = {k: v * scale for k, v in self.shares_.items()}
-        self.shares_[name] = hint_share
+        self.shares_ = grant_share(self.shares_, name, hint_share)
 
     @abc.abstractmethod
     def update(self, step: int, measured: dict[str, float]) -> bool:

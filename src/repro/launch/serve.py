@@ -395,6 +395,91 @@ def traffic_rows(spec=None, *, loads=None, admissions=None,
     return rows
 
 
+def cluster_pool_units(spec, n: int) -> list:
+    """Provision ``n`` simulated pool units from the workload's pair.
+
+    The paper's calibrated CPU/GPU units are cloned round-robin across
+    the pool slots, so an elastic pool keeps the heterogeneous speed mix
+    the profiles were calibrated against.
+    """
+    from ..core import SimUnit, paper_workload
+
+    _, cpu, gpu = paper_workload(spec.workload.name)
+    pair = (cpu, gpu)
+    return [SimUnit(f"{pair[i % 2].name}{i}", pair[i % 2].kind,
+                    speed=pair[i % 2].speed, alpha=pair[i % 2].alpha,
+                    setup_s=pair[i % 2].setup_s) for i in range(n)]
+
+
+def cluster_rows(spec=None, *, plans=None) -> list[dict]:
+    """Elastic-cluster serve on the DES: one audit row per failure plan.
+
+    Replays the spec's open-loop trace through
+    :func:`repro.core.replay_trace_cluster` — the runtime-resizable pool
+    with exact package re-issue — and reports the exact-once audit
+    (``lost``/``duplicated`` must be 0) next to the latency percentiles.
+    ``plans`` maps row names to :class:`repro.core.FailurePlan` objects
+    (``None`` plans run undisturbed); it defaults to the single plan the
+    spec's ``cluster.failure_plan`` names, or an undisturbed run. Shared
+    by ``serve --coexec sim --cluster`` and ``benchmarks.run cluster``.
+    """
+    import dataclasses
+
+    from ..core import capacity_items_per_s, replay_trace_cluster
+
+    if spec is None:
+        spec = default_serve_spec()
+    if spec.traffic.arrival == "closed" and not spec.traffic.trace:
+        # The cluster tier replays an open-loop trace; a closed-loop
+        # spec (the CLI default) has none, so fall back to poisson
+        # arrivals instead of rejecting the run.
+        spec = dataclasses.replace(
+            spec, traffic=dataclasses.replace(spec.traffic,
+                                              arrival="poisson"))
+    cl = spec.cluster
+    n = cl.max_units if cl.max_units is not None else max(cl.min_units, 4)
+    units = cluster_pool_units(spec, n)
+    active = units[:cl.min_units]
+    trace = trace_from_spec(spec, capacity_items_per_s(active))
+    if plans is None:
+        plans = {"plan" if cl.failure_plan else "undisturbed":
+                 cl.load_plan()}
+    rows = []
+    for name, plan in plans.items():
+        rep = replay_trace_cluster(
+            trace, units, spec=spec, plan=plan,
+            min_units=cl.min_units, autoscale=cl.autoscale,
+            autoscale_opts=cl.autoscaler_opts(),
+            granularity=spec.scheduler.granularity)
+        rows.append(dict(
+            name=name, workload=spec.workload.name,
+            arrival=spec.traffic.arrival, admission=spec.admission.policy,
+            min_units=rep.min_units, max_units=rep.max_units,
+            autoscale=cl.autoscale, arrivals=rep.arrivals,
+            admitted=rep.admitted, shed_count=rep.shed_count,
+            completed=rep.completed, lost=rep.lost,
+            duplicated=rep.duplicated, reissued=rep.reissued,
+            kills=len(rep.kills), joins=len(rep.joins),
+            resizes=len(rep.scale_events),
+            p50_ms=rep.p50_ms(), p99_ms=rep.p99_ms()))
+    return rows
+
+
+def serve_coexec_cluster(spec) -> None:
+    """Elastic-cluster serve: audit + latency row per failure plan."""
+    for row in cluster_rows(spec):
+        print(f"[serve/cluster] {row['workload']}/{row['arrival']}"
+              f"/{row['admission']} pool={row['min_units']}.."
+              f"{row['max_units']}"
+              f"{'+autoscale' if row['autoscale'] else ''} "
+              f"({row['name']}): {row['admitted']}/{row['arrivals']} "
+              f"admitted, {row['completed']} completed, "
+              f"lost={row['lost']} dup={row['duplicated']} "
+              f"reissued={row['reissued']} kills={row['kills']} "
+              f"joins={row['joins']} resizes={row['resizes']}, "
+              f"p50={row['p50_ms']:.2f}ms p99={row['p99_ms']:.2f}ms")
+
+
 def traffic_tenant_rows(spec=None) -> list[dict]:
     """Per-tenant serving outcome of the spec's open-loop replay: one row
     per tenant with arrivals/admitted/shed counts, p50/p99 admitted
@@ -452,6 +537,8 @@ def serve_coexec_real(spec) -> None:
 
 
 def serve_coexec_sim(spec) -> None:
+    if spec.cluster.enabled:
+        return serve_coexec_cluster(spec)
     if spec.traffic.arrival != "closed" or spec.traffic.trace:
         return serve_coexec_traffic(spec)
     multi = (spec.admission.policy != "fifo" or spec.admission.fuse

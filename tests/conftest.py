@@ -3,7 +3,15 @@
 Registers the `slow` mark (long dry-run/e2e tests) and keeps the default
 profile fast: slow tests are skipped unless explicitly requested with
 ``--runslow`` or an ``-m`` expression that mentions ``slow``.
+
+Also implements a dependency-free ``timeout`` mark: thread-backed cluster
+tests carry ``@pytest.mark.timeout(N)`` so a wedged engine (a worker that
+never drains after a unit kill) fails the test instead of hanging the
+whole run. Enforced with ``signal.setitimer`` where SIGALRM exists
+(POSIX main thread); elsewhere the mark is a no-op — the tests still
+pass, they just lose the hang guard.
 """
+import signal
 import sys
 from pathlib import Path
 
@@ -27,6 +35,30 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running dry-run/e2e test (excluded from the "
                    "default fast profile; enable with --runslow or -m slow)")
+    config.addinivalue_line(
+        "markers", "timeout(seconds): hard per-test wall-clock limit, "
+                   "SIGALRM-enforced where available")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    mark = item.get_closest_marker("timeout")
+    if mark is None or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    seconds = float(mark.args[0]) if mark.args else 60.0
+
+    def _expired(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded its {seconds:g}s timeout mark")
+
+    previous = signal.signal(signal.SIGALRM, _expired)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, previous)
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,615 @@
+"""Elastic cluster tier: resizable pool, failure recovery, exact re-issue.
+
+The tentpole claim this file pins: pool membership is a *runtime*
+property of the shared control plane, and recovery from a unit death is
+**exact-once** — a killed unit's in-flight packages re-issue to the
+survivors as bitwise-identical ranges, per-launch covers and data-plane
+counters equal an undisturbed run's, and no launch is ever lost or
+duplicated. On top of that:
+
+* real-vs-sim lockstep structural parity across
+  {kill, leave, join} x {wfq, edf} x {preempt} — decision logs, package
+  covers and re-issue counts agree between the threaded engine backend
+  and the DES;
+* a ``LaunchHandle`` never spuriously raises ``LaunchWaitTimeout``
+  because a unit died mid-launch (the regression the ownership ledger
+  exists to prevent);
+* ``FailurePlan`` is a lossless JSON artifact (``save``/``load`` mirror
+  ``Trace``'s) and keeps the training loop's step-keyed ``events``;
+* the supervisor's heartbeat detector, straggler flagging and
+  share bookkeeping (the absorbed ``hetero/rebalance.py`` moves);
+* the autoscaler's hysteresis/sustain/cooldown state machine;
+* a deterministic 1000-unit DES pool surviving scripted failure waves.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import ClusterSpec, CoexecSpec
+from repro.core import (AdmissionConfig, Autoscaler, ClusterSimBackend,
+                        CoexecEngine, DynamicScheduler, ExecutionLoop,
+                        FailurePlan, MemoryCosts, MemoryModel, Range,
+                        SimUnit, Supervisor, UnitPool, Workload,
+                        absorb_share, as_coexec_kernel,
+                        counits_from_devices, grant_share,
+                        replay_cluster_lockstep, replay_trace_cluster,
+                        synthesize_trace)
+from repro.core.cluster import _resolve_unit
+from repro.core.engine import RealBackend, _Launch
+from repro.core.dataplane import make_plane
+from repro.core.sim import _SimLaunchState
+
+from _propcheck import given, settings, st
+
+NUNITS = 3      # cluster lockstep pool: a kill must leave >= 2 survivors
+
+
+def double_kernel(offset, chunk):
+    return chunk * 2.0
+
+
+KERNEL = as_coexec_kernel(double_kernel, 1)
+
+
+def sim_units(n=NUNITS, speed=50_000.0):
+    return [SimUnit(f"u{i}", "cpu", speed=speed, setup_s=1e-3)
+            for i in range(n)]
+
+
+def cluster_cfg(policy="wfq", preempt=False):
+    return AdmissionConfig(policy=policy, preempt=preempt, slo_ms=50.0)
+
+
+def cluster_trace(arrivals=24, items=96, seed=3):
+    return synthesize_trace(arrivals, 40.0, tenants=4, items=items,
+                            item_jitter=0.8, slo_ms=50.0, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Share bookkeeping (the absorbed hetero/rebalance.py moves)
+# ---------------------------------------------------------------------------
+
+def test_grant_and_absorb_share_renormalize():
+    s = grant_share({}, "a", 1.0)
+    s = grant_share(s, "b", 0.25)
+    assert s == {"a": 0.75, "b": 0.25}
+    s = grant_share(s, "c", 0.2)
+    assert abs(sum(s.values()) - 1.0) < 1e-12
+    # survivors keep their relative ratio when one member is absorbed
+    dropped = absorb_share(s, "c")
+    assert abs(dropped["a"] / dropped["b"] - 3.0) < 1e-9
+    assert abs(sum(dropped.values()) - 1.0) < 1e-12
+    # absent names are a no-op; bad hints raise
+    assert absorb_share(dropped, "zzz") == dropped
+    with pytest.raises(ValueError):
+        grant_share(s, "d", 1.5)
+
+
+def test_rebalance_policies_delegate_to_cluster_shares():
+    """hetero's RebalancePolicy drop/add and the cluster supervisor now
+    share one implementation — the moves must agree exactly."""
+    from repro.hetero.rebalance import StaticPolicy
+
+    pol = StaticPolicy({"cpu": 2.0, "gpu": 6.0})
+    ours = dict(pol.shares)
+    pol.add_group("tpu", 0.5)
+    ours = grant_share(ours, "tpu", 0.5)
+    assert pol.shares == ours
+    pol.drop_group("cpu")
+    ours = absorb_share(ours, "cpu")
+    assert pol.shares == ours
+
+
+# ---------------------------------------------------------------------------
+# FailurePlan artifacts
+# ---------------------------------------------------------------------------
+
+def test_failure_plan_json_round_trip_and_save_load(tmp_path):
+    plan = FailurePlan(events={5: "crash", 9: "kill:B"},
+                       timeline=((0.05, "kill:1"), (0.2, "join:u2")))
+    assert FailurePlan.from_json(plan.to_json()) == plan
+    path = tmp_path / "plan.json"
+    plan.save(path)
+    assert FailurePlan.load(path) == plan
+    # the training loop's step-keyed contract is unchanged
+    assert plan.check(5) == "crash"
+    assert plan.check(9) == "kill:B"
+    assert plan.check(2) is None
+    # int keys survive the str round trip
+    loaded = FailurePlan.load(path)
+    assert loaded.events == {5: "crash", 9: "kill:B"}
+
+
+def test_failure_plan_rejects_malformed_input():
+    with pytest.raises(ValueError):
+        FailurePlan.from_dict({"version": 99})
+    with pytest.raises(ValueError):
+        FailurePlan(timeline=((0.1, "explode:1"),)).validate()
+    with pytest.raises(ValueError):
+        FailurePlan(timeline=((-0.1, "kill:1"),)).validate()
+    with pytest.raises(ValueError):
+        FailurePlan(timeline=((0.1, "kill"),)).validate()
+
+
+def test_failure_plan_is_importable_from_ft():
+    """Training code keeps its import path after the absorption."""
+    from repro.core.cluster import FailurePlan as core_plan
+    from repro.ft import FailurePlan as ft_plan
+    from repro.ft import InjectedFailure as ft_err
+    from repro.core.cluster import InjectedFailure as core_err
+
+    assert ft_plan is core_plan
+    assert ft_err is core_err
+
+
+def test_resolve_unit_token():
+    names = ["cpu0", "gpu1", "gpu2"]
+    assert _resolve_unit("1", names) == 1
+    assert _resolve_unit("gpu2", names) == 2
+    with pytest.raises(ValueError):
+        _resolve_unit("7", names)
+    with pytest.raises(ValueError):
+        _resolve_unit("nope", names)
+
+
+def test_committed_example_plan_loads():
+    import pathlib
+
+    path = (pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+            / "failure_plans" / "example_plan.json")
+    plan = FailurePlan.load(path).validate()
+    assert any(a.startswith("kill:") for _, a in plan.timeline)
+
+
+# ---------------------------------------------------------------------------
+# Supervisor: heartbeats, stragglers, membership
+# ---------------------------------------------------------------------------
+
+def _bare_loop(n=NUNITS, cfg=None):
+    units = sim_units(n)
+    backend = ClusterSimBackend(units, MemoryModel.USM, MemoryCosts())
+    loop = ExecutionLoop(backend, [u.name for u in units],
+                         cfg or cluster_cfg())
+    return loop, backend
+
+
+def test_supervisor_heartbeat_detection_declares_silent_units_dead():
+    loop, _ = _bare_loop()
+    sup = Supervisor(loop, heartbeat_s=0.01, grace_s=0.05)
+    for u in range(NUNITS):
+        sup.register(u, 1.0, t=0.0)
+    sup.beat(0, 0.04)
+    sup.beat(1, 0.04)       # unit 2 goes silent after t=0
+    assert sup.check(0.03) == []            # everyone within grace
+    assert sup.check(0.06) == [2]           # only the silent unit dies
+    assert loop.dead_units == {2}
+    assert sup.check(0.06) == []            # idempotent
+    assert [u for _, u in sup.kills] == [2]
+    # its share was absorbed by the survivors
+    assert set(sup.shares) == {"u0", "u1"}
+    assert abs(sum(sup.shares.values()) - 1.0) < 1e-12
+
+
+def test_supervisor_straggler_flagged_once_per_incident():
+    loop, _ = _bare_loop()
+    flagged = []
+    sup = Supervisor(loop, grace_s=1.0, straggler_factor=2.0,
+                     on_straggler=lambda u, age: flagged.append(u))
+    for u in range(NUNITS):
+        sup.register(u, 1.0)
+    # one launch, one package pulled by unit 0 at t=0 and never completed
+    entry = _SimLaunchState(loop.next_id(),
+                            DynamicScheduler(64, NUNITS, num_packages=8),
+                            Workload("t", 64, 8.0, 8.0, 1e4))
+    assert loop.offer(entry, now=0.0)
+    assert loop.pull(0, now=0.0) is not None
+    sup.note_service(0.01)                  # EWMA ~ 10ms service time
+    assert sup.flag_stragglers(0.015) == []         # below the threshold
+    assert sup.flag_stragglers(0.5) == [0]          # way past 2x EWMA
+    assert sup.flag_stragglers(0.6) == []           # same incident: once
+    assert flagged == [0]
+
+
+def test_supervisor_retire_refuses_inflight_work():
+    loop, _ = _bare_loop()
+    sup = Supervisor(loop)
+    for u in range(NUNITS):
+        sup.register(u, 1.0)
+    entry = _SimLaunchState(loop.next_id(),
+                            DynamicScheduler(64, NUNITS, num_packages=8),
+                            Workload("t", 64, 8.0, 8.0, 1e4))
+    assert loop.offer(entry, now=0.0)
+    assert loop.pull(1, now=0.0) is not None
+    with pytest.raises(ValueError):
+        sup.retire_unit(1)
+    sup.retire_unit(2)                      # idle unit retires gracefully
+    assert loop.dead_units == {2}
+    assert [u for _, u in sup.leaves] == [2]
+    assert sup.kills == []
+
+
+# ---------------------------------------------------------------------------
+# UnitPool + Autoscaler
+# ---------------------------------------------------------------------------
+
+def test_unit_pool_grow_shrink_and_drain_guard():
+    loop, _ = _bare_loop(n=4)
+    pool = UnitPool(loop, min_units=2)
+    assert pool.size == 2 and pool.alive == [0, 1]
+    assert loop.dead_units == {2, 3}        # dormant slots park as dead
+    assert pool.grow(1) == [2]
+    assert pool.size == 3
+    # a unit with in-flight work refuses to drain, shrink skips it
+    entry = _SimLaunchState(loop.next_id(),
+                            DynamicScheduler(64, 4, num_packages=8),
+                            Workload("t", 64, 8.0, 8.0, 1e4))
+    assert loop.offer(entry, now=0.0)
+    assert loop.pull(2, now=0.0) is not None
+    assert pool.drain(2) is False
+    # shrink skips the busy unit and retires the idle one instead,
+    # stopping at the floor
+    assert pool.shrink(2) == [1]
+    assert pool.size == 2 and pool.alive == [0, 2]
+    assert pool.shrink(1) == []             # at the floor: refuse
+    got = loop.pull(0, now=0.0)             # finish the work elsewhere
+    while got is not None:
+        launch, pkg = got
+        loop.backend.dispatch(0, launch, pkg)
+        loop.complete(launch, pkg)
+        got = loop.pull(0, now=loop.backend.now())
+    # unit 2's package is still owned by unit 2 — complete it so the
+    # drain guard lifts
+    for (lid, seq), (launch, pkg) in list(loop._owned.get(2, {}).items()):
+        loop.backend.dispatch(2, launch, pkg)
+        loop.complete(launch, pkg)
+    assert pool.drain(2) is True
+    assert pool.size == 1
+    with pytest.raises(ValueError):
+        UnitPool(loop, min_units=9)
+
+
+def test_autoscaler_hysteresis_sustain_and_cooldown():
+    loop, _ = _bare_loop(n=4)
+    pool = UnitPool(loop, min_units=1)
+    scaler = Autoscaler(pool, scale_up_depth=4, scale_down_depth=1,
+                        sustain_s=0.1, idle_s=0.2, cooldown_s=0.5)
+    assert scaler.observe(0.00, 8) == 0     # backlog must sustain first
+    assert scaler.observe(0.05, 8) == 0
+    assert scaler.observe(0.11, 8) == 1     # sustained: scale out
+    assert pool.size == 2
+    assert scaler.observe(0.30, 8) == 0     # cooldown holds
+    assert scaler.observe(0.70, 8) == 1     # cooled: scale out again
+    assert scaler.observe(0.80, 2) == 0     # hysteresis band: hold
+    assert scaler.observe(1.50, 0) == 0     # idle clock starts
+    assert scaler.observe(1.72, 0) == -1    # idle + cooled: scale in
+    assert pool.size == 2
+    assert [d for _, d in scaler.actions] == [1, 1, -1]
+    with pytest.raises(ValueError):
+        Autoscaler(pool, scale_up_depth=2, scale_down_depth=2)
+
+
+# ---------------------------------------------------------------------------
+# Exact-once re-issue: the tentpole invariant
+# ---------------------------------------------------------------------------
+
+def _pool_units(n):
+    return sim_units(n=n, speed=20_000.0)
+
+
+def _kill_trace(seed=3):
+    return synthesize_trace(60, 40.0, tenants=4, items=4096,
+                            item_jitter=0.8, slo_ms=200.0, seed=seed)
+
+
+@pytest.mark.parametrize("policy", ["wfq", "edf"])
+def test_kill_one_of_four_is_bitwise_identical_to_undisturbed(policy):
+    """Acceptance: kill 1-of-4 units mid-serve — every launch completes,
+    per-launch package covers and data-plane counters are bitwise
+    identical to an undisturbed run, nothing lost or duplicated."""
+    trace = _kill_trace()
+    units = _pool_units(4)
+    r0 = replay_trace_cluster(trace, units, admission=policy)
+    plan = FailurePlan(timeline=((0.2, "kill:3"),))
+    r1 = replay_trace_cluster(trace, units, admission=policy, plan=plan)
+    assert r1.kills == [(0.2, 3)]
+    assert r1.reissued > 0                  # the kill caught work in flight
+    assert r1.lost == 0 and r1.duplicated == 0
+    assert r1.completed == r0.completed == len(trace)
+    assert r1.covers() == r0.covers()
+    assert r1.data_totals() == r0.data_totals()
+
+
+def test_kill_join_wave_keeps_exact_accounting():
+    trace = _kill_trace()
+    units = _pool_units(4)
+    r0 = replay_trace_cluster(trace, units, admission="wfq")
+    plan = FailurePlan(timeline=((0.2, "kill:3"), (0.5, "kill:1"),
+                                 (0.8, "join:3"), (1.0, "join:1")))
+    r1 = replay_trace_cluster(trace, units, admission="wfq", plan=plan)
+    assert len(r1.kills) == 2 and len(r1.joins) == 2
+    assert r1.lost == 0 and r1.duplicated == 0
+    assert r1.covers() == r0.covers()
+    assert r1.data_totals() == r0.data_totals()
+
+
+def test_killing_the_whole_pool_wedges_loudly():
+    trace = _kill_trace()
+    units = _pool_units(2)
+    plan = FailurePlan(timeline=((0.1, "kill:0"), (0.1, "kill:1")))
+    with pytest.raises(RuntimeError, match="wedged"):
+        replay_trace_cluster(trace, units, admission="wfq", plan=plan)
+
+
+@settings(max_examples=10)
+@given(cfg=st.fixed_dictionaries(dict(
+    seed=st.integers(0, 10_000),
+    kill_unit=st.integers(0, 3),
+    t_kill=st.floats(0.05, 1.2),
+    policy=st.sampled_from(["wfq", "edf", "fifo"]),
+    join_back=st.booleans())))
+def test_property_reissue_accounting_sums_exactly(cfg):
+    """Property: for any (seed, victim, kill time, policy), the disturbed
+    run's per-launch covers and data totals equal the undisturbed run's,
+    with zero launches lost or duplicated."""
+    trace = synthesize_trace(24, 50.0, tenants=3, items=2048,
+                             item_jitter=0.6, slo_ms=200.0,
+                             seed=cfg["seed"])
+    units = _pool_units(4)
+    timeline = [(cfg["t_kill"], f"kill:{cfg['kill_unit']}")]
+    if cfg["join_back"]:
+        timeline.append((cfg["t_kill"] + 0.3, f"join:{cfg['kill_unit']}"))
+    r0 = replay_trace_cluster(trace, units, admission=cfg["policy"])
+    r1 = replay_trace_cluster(trace, units, admission=cfg["policy"],
+                              plan=FailurePlan(timeline=tuple(timeline)))
+    assert r1.lost == 0 and r1.duplicated == 0
+    assert r1.covers() == r0.covers()
+    assert r1.data_totals() == r0.data_totals()
+
+
+# ---------------------------------------------------------------------------
+# Real-vs-sim lockstep structural parity
+# ---------------------------------------------------------------------------
+
+EVENT_SCRIPTS = {
+    "kill": [(5, "kill:2")],
+    "leave": [(5, "leave:2")],
+    "kill+join": [(5, "kill:2"), (14, "join:2")],
+}
+
+
+def run_cluster_lockstep_real(trace, cfg, events):
+    units = counits_from_devices(jax.local_devices()[:1] * NUNITS,
+                                 kinds=["cpu"] * NUNITS,
+                                 speed_hints=[1.0 / NUNITS] * NUNITS)
+    backend = RealBackend(units, make_plane(MemoryModel.USM))
+    loop = ExecutionLoop(backend, [u.name for u in units], cfg)
+    backend.loop = loop
+    datas = {}
+
+    def make_launch(a, lp):
+        sched = DynamicScheduler(a.items, NUNITS, num_packages=8)
+        d = np.random.default_rng(a.items).normal(
+            size=a.items).astype(np.float32)
+        out = np.zeros(a.items, np.float32)
+        launch = _Launch(lp.next_id(), sched, KERNEL, [d], out,
+                         adaptive=False)
+        launch.plan = backend.plane.plan(KERNEL, [d], out, a.items)
+        launch.tenant = a.tenant
+        launch.weight = a.weight
+        datas[launch.id] = d
+        return launch
+
+    admitted, shed = replay_cluster_lockstep(trace, loop, make_launch,
+                                             events=events)
+    return loop, admitted, shed, datas
+
+
+def run_cluster_lockstep_sim(trace, cfg, events):
+    units = sim_units(speed=1000.0)
+    backend = ClusterSimBackend(units, MemoryModel.USM, MemoryCosts())
+    loop = ExecutionLoop(backend, [u.name for u in units], cfg)
+
+    def make_launch(a, lp):
+        return _SimLaunchState(
+            lp.next_id(), DynamicScheduler(a.items, NUNITS, num_packages=8),
+            Workload("traffic", a.items, 8.0, 8.0, 1e4), tenant=a.tenant,
+            weight=a.weight)
+
+    admitted, shed = replay_cluster_lockstep(trace, loop, make_launch,
+                                             events=events)
+    return loop, admitted, shed
+
+
+@pytest.mark.parametrize("script", sorted(EVENT_SCRIPTS))
+@pytest.mark.parametrize("policy", ["wfq", "edf"])
+@pytest.mark.parametrize("preempt", [False, True])
+def test_cluster_lockstep_parity_real_vs_sim(script, policy, preempt):
+    """Acceptance (structure): identical trace + config + membership
+    events = identical admission decisions, identical per-launch package
+    covers and identical re-issue counts on the threaded backend and the
+    DES — and the real results stay exact through kills and joins."""
+    cfg = cluster_cfg(policy, preempt)
+    trace = cluster_trace()
+    events = EVENT_SCRIPTS[script]
+
+    real_loop, real_adm, real_shed, datas = \
+        run_cluster_lockstep_real(trace, cfg, events)
+    sim_loop, sim_adm, sim_shed = run_cluster_lockstep_sim(trace, cfg,
+                                                           events)
+
+    assert real_loop.admission.decision_log == \
+        sim_loop.admission.decision_log
+    assert len(real_adm) == len(sim_adm) > 0
+    assert len(real_shed) == len(sim_shed)
+    assert real_loop.reissued == sim_loop.reissued
+    if script.startswith("kill"):
+        assert real_loop.reissued > 0
+    covers_real = {l.id: tuple(sorted((p.offset, p.size)
+                                      for p in l.stats.packages))
+                   for l in real_adm}
+    covers_sim = {l.id: tuple(sorted((p.offset, p.size)
+                                     for p in l.stats.packages))
+                  for l in sim_adm}
+    assert covers_real == covers_sim
+    for launch in real_adm:
+        np.testing.assert_array_equal(launch.handle.result(timeout=5),
+                                      datas[launch.id] * 2.0)
+
+
+def test_lockstep_events_match_cluster_sim_covers():
+    """The same kill produces the same covers whether driven by the
+    lockstep harness or the ClusterSimBackend event pump (undisturbed
+    reference: both must equal the no-event run)."""
+    cfg = cluster_cfg("wfq")
+    trace = cluster_trace()
+    base_loop, base_adm, _ = run_cluster_lockstep_sim(trace, cfg, [])
+    kill_loop, kill_adm, _ = run_cluster_lockstep_sim(
+        trace, cfg, EVENT_SCRIPTS["kill"])
+    base_covers = {l.id: tuple(sorted((p.offset, p.size)
+                                      for p in l.stats.packages))
+                   for l in base_adm}
+    kill_covers = {l.id: tuple(sorted((p.offset, p.size)
+                                      for p in l.stats.packages))
+                   for l in kill_adm}
+    assert kill_covers == base_covers
+    assert kill_loop.reissued > 0
+
+
+# ---------------------------------------------------------------------------
+# Thread-backed engine: kill mid-launch (the LaunchWaitTimeout regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_engine_kill_unit_mid_launch_resolves_exactly():
+    """Regression: a unit killed with packages in flight must never make
+    a pending LaunchHandle time out or error — survivors pick up the
+    re-issued ranges and the handle resolves with exact results."""
+    units = counits_from_devices(jax.local_devices()[:1] * NUNITS,
+                                 kinds=["cpu"] * NUNITS,
+                                 speed_hints=[1.0 / NUNITS] * NUNITS)
+    spec = CoexecSpec.builder().admission(wfq=True).build()
+    eng = CoexecEngine(units, spec=spec).start()
+    try:
+        n = 4096
+        x = np.arange(n, dtype=np.float32)
+        outs = [np.zeros(n, np.float32) for _ in range(3)]
+        handles = [eng.submit(DynamicScheduler(n, NUNITS, num_packages=64),
+                              KERNEL, [x], out, tenant=f"t{i}")
+                   for i, out in enumerate(outs)]
+        eng.kill_unit(2)
+        for h in handles:
+            np.testing.assert_array_equal(h.result(timeout=30), x * 2.0)
+        assert 2 in eng.loop.dead_units
+        # the pool revives and keeps serving
+        eng.join_unit(2)
+        out2 = np.zeros(n, np.float32)
+        h = eng.submit(DynamicScheduler(n, NUNITS, num_packages=16),
+                       KERNEL, [x], out2)
+        np.testing.assert_array_equal(h.result(timeout=30), x * 2.0)
+        assert eng.loop.dead_units == set()
+    finally:
+        eng.shutdown()
+
+
+@pytest.mark.timeout(60)
+def test_engine_kill_refuses_last_live_unit():
+    units = counits_from_devices(jax.local_devices()[:1] * 2,
+                                 kinds=["cpu", "cpu"],
+                                 speed_hints=[0.5, 0.5])
+    eng = CoexecEngine(units).start()
+    try:
+        eng.kill_unit(0)
+        with pytest.raises(RuntimeError, match="last live unit"):
+            eng.kill_unit(1)
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Scale + spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_thousand_unit_pool_survives_failure_wave():
+    """A 1000-slot DES pool with scripted kill/join waves stays exact."""
+    trace = synthesize_trace(40, 200.0, tenants=8, items=4096,
+                             item_jitter=0.5, slo_ms=500.0, seed=7)
+    units = [SimUnit(f"u{i}", "cpu", speed=5_000.0, setup_s=1e-3)
+             for i in range(1000)]
+    plan = FailurePlan(
+        timeline=tuple((0.02 + 0.002 * i, f"kill:{i}") for i in range(20))
+        + tuple((0.2 + 0.002 * i, f"join:{i}") for i in range(10)))
+    r = replay_trace_cluster(trace, units, admission="wfq", plan=plan)
+    assert r.max_units == 1000
+    assert r.completed == len(trace)
+    assert r.lost == 0 and r.duplicated == 0
+    assert len(r.kills) == 20 and len(r.joins) == 10
+
+
+def test_autoscale_halves_burst_p99_vs_fixed_floor():
+    """Acceptance: under a burst trace, autoscaling 2 -> 8 must at least
+    halve admitted p99 latency vs the fixed 2-unit floor."""
+    units = [SimUnit(f"u{i}", "cpu", speed=10_000.0, setup_s=1e-3)
+             for i in range(8)]
+    trace = synthesize_trace(96, 14.0, arrival="burst", burst=6.0,
+                             burst_duty=0.15, tenants=4, items=2048,
+                             item_jitter=0.3, slo_ms=2000.0, seed=11)
+    fixed = replay_trace_cluster(trace, units[:2], admission="wfq")
+    auto = replay_trace_cluster(
+        trace, units, admission="wfq", min_units=2, autoscale=True,
+        autoscale_opts=dict(scale_up_depth=4, scale_down_depth=1,
+                            sustain_s=0.02, idle_s=0.5, cooldown_s=0.05))
+    assert auto.scale_events                 # the pool actually resized
+    assert auto.lost == 0 and auto.duplicated == 0
+    assert auto.p99_ms() <= fixed.p99_ms() / 2
+
+
+def test_cluster_spec_validates_and_round_trips():
+    spec = (CoexecSpec.builder()
+            .cluster(True, min_units=2, max_units=8, autoscale=True,
+                     grace_s=0.5)
+            .build())
+    assert spec.cluster.enabled and spec.cluster.max_units == 8
+    assert CoexecSpec.from_json(spec.to_json()) == spec
+    opts = spec.cluster.autoscaler_opts()
+    assert opts["scale_up_depth"] == 8 and opts["cooldown_s"] == 0.25
+    for bad in (dict(min_units=0), dict(min_units=4, max_units=2),
+                dict(grace_s=0.0), dict(scale_up_depth=1),
+                dict(straggler_factor=0.0)):
+        with pytest.raises(ValueError):
+            ClusterSpec(**bad).validate()
+
+
+def test_cluster_cli_flags_round_trip():
+    import argparse
+
+    from repro.api import add_spec_args, args_from_spec, spec_from_args
+
+    ap = argparse.ArgumentParser()
+    add_spec_args(ap)
+    argv = ["--cluster", "--cluster-min-units", "2",
+            "--cluster-max-units", "6", "--cluster-autoscale",
+            "--cluster-grace-s", "0.4"]
+    spec = spec_from_args(ap.parse_args(argv))
+    assert spec.cluster.enabled and spec.cluster.grace_s == 0.4
+    assert sorted(args_from_spec(spec)) == sorted(argv)
+
+
+def test_scheduler_unit_hooks_cover_exactly():
+    """StaticScheduler hands back its region remainder on unit loss;
+    work-stealing drains the dead deque — either way the re-issued
+    ranges tile exactly what the dead unit still owed."""
+    from repro.core import StaticScheduler, WorkStealingScheduler
+
+    sched = StaticScheduler(100, NUNITS, speeds=[1.0, 1.0, 2.0])
+    first = sched.next_package(2)
+    freed = sched.unit_lost(2)
+    assert sum(r.size for r in freed) + first.size == \
+        sched._bounds[3] - sched._bounds[2]
+    assert sched.unit_lost(2) == []          # nothing left to free
+
+    ws = WorkStealingScheduler(96, NUNITS, chunks_per_unit=4)
+    owed = sum(r.size for r in ws._deques[1])
+    freed = ws.unit_lost(1)
+    assert sum(r.size for r in freed) == owed
+    assert not ws._deques[1]
