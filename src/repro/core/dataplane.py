@@ -51,7 +51,7 @@ from .memory import MemoryModel
 try:  # jax is always present in this repo, but keep the DES importable alone
     import jax
     import jax.numpy as jnp
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
     jax = None
     jnp = None
 
