@@ -234,7 +234,7 @@ def registry_listing() -> str:
                     dflt = "=default" if a.default is not None else ""
                     args.append(f"{a.name}[broadcast{dflt}]")
             args_desc = ", ".join(args)
-        except Exception:
+        except (TypeError, ValueError, KeyError):
             # a factory with required options cannot be probed for its
             # argument semantics; still list the kernel itself
             args_desc = "(factory needs options)"
