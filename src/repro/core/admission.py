@@ -275,19 +275,19 @@ class AdmissionController:
         self._fuse_materialize = fuse_materialize
         self._speed_refresh = speed_refresh
         self._on_activate = on_activate
-        self._active: list = []                     # FIFO admit order
-        self._tenants: dict[str, _TenantQueue] = {}
-        self._ring: list[str] = []                  # DRR service order
-        self._rr = 0
-        self._staged: dict = {}                     # fuse_key -> group
-        self._in_flight = 0
-        self._auto_quantum = 1
+        self._active: list = []     # FIFO admit order; guarded-by: caller
+        self._tenants: dict[str, _TenantQueue] = {}  # guarded-by: caller
+        self._ring: list[str] = []  # DRR service order; guarded-by: caller
+        self._rr = 0  # guarded-by: caller
+        self._staged: dict = {}     # fuse_key -> group; guarded-by: caller
+        self._in_flight = 0  # guarded-by: caller
+        self._auto_quantum = 1  # guarded-by: caller
         self.dispatched = 0
         self.fused_batches = 0
         self.fused_members = 0
         self.offered = 0
         self.shed_count = 0
-        self._vfinish = 0.0         # shed estimator's virtual finish time
+        self._vfinish = 0.0  # shed estimator's virtual finish; guarded-by: caller
         self.decision_log: list[tuple[str, str]] = []
         self.fusion_log: list[tuple[str, ...]] = []
 

@@ -252,11 +252,11 @@ class Supervisor:
         self.grace_s = float(grace_s)
         self.straggler_factor = float(straggler_factor)
         self.on_straggler = on_straggler
-        self._beats: dict[int, float] = {}
-        self._speed: dict[int, float] = {}
-        self._service_ema: Optional[float] = None
-        self._flagged: set[tuple[int, float]] = set()
-        self.shares: dict[str, float] = {}
+        self._beats: dict[int, float] = {}  # guarded-by: caller
+        self._speed: dict[int, float] = {}  # guarded-by: caller
+        self._service_ema: Optional[float] = None  # guarded-by: caller
+        self._flagged: set[tuple[int, float]] = set()  # guarded-by: caller
+        self.shares: dict[str, float] = {}  # guarded-by: caller
         self.kills: list[tuple[float, int]] = []
         self.joins: list[tuple[float, int]] = []
         self.leaves: list[tuple[float, int]] = []
@@ -401,7 +401,8 @@ class UnitPool:
                              f"{self.min_units}..{self.max_units}")
         self.loop = loop
         self.supervisor = supervisor
-        self.speeds = list(speeds) if speeds is not None else [1.0] * total
+        self.speeds = (list(speeds) if speeds is not None  # guarded-by: caller
+                       else [1.0] * total)
         if len(self.speeds) != total:
             raise ValueError("speeds length must match the provisioned pool")
         for u in range(self.min_units, total):
@@ -509,9 +510,9 @@ class Autoscaler:
         self.idle_s = float(idle_s)
         self.cooldown_s = float(cooldown_s)
         self.step = int(step)
-        self._over_since: Optional[float] = None
-        self._under_since: Optional[float] = None
-        self._last_resize: Optional[float] = None
+        self._over_since: Optional[float] = None  # guarded-by: caller
+        self._under_since: Optional[float] = None  # guarded-by: caller
+        self._last_resize: Optional[float] = None  # guarded-by: caller
         self.actions: list[tuple[float, int]] = []   # (t, signed delta)
 
     def _cooled(self, t: float) -> bool:
@@ -587,8 +588,8 @@ class ClusterSimBackend(SimBackend):
         self.kills: list[tuple[float, int]] = []
         self.joins: list[tuple[float, int]] = []
         self.scale_events: list[tuple[float, int]] = []  # (t, new size)
-        self._kill_at: dict[int, collections.deque[float]] = {}
-        self._doomed: dict[int, tuple[_SimLaunchState, Package]] = {}
+        self._kill_at: dict[int, collections.deque[float]] = {}  # guarded-by: caller
+        self._doomed: dict[int, tuple[_SimLaunchState, Package]] = {}  # guarded-by: caller
 
     def run(self, loop: ExecutionLoop,                      # type: ignore[override]
             entries: Sequence[_SimLaunchState], *,
@@ -758,7 +759,7 @@ def _real_backend_class():
         :class:`ExecutionLoop` right after building it.
         """
 
-        loop: Optional[ExecutionLoop] = None
+        loop: Optional[ExecutionLoop] = None  # guarded-by: caller
 
         def dispatch(self, unit, launch, pkg):
             if self.loop is not None and unit in self.loop.dead_units:

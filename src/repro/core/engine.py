@@ -250,7 +250,7 @@ class RealBackend(Backend):
         self.board = board
         self.condition = condition
         self.loop = None        # set by the engine for elastic membership
-        self._fused_kernels: dict = {}
+        self._fused_kernels: dict = {}  # guarded-by: condition
 
     # -- substrate contract -------------------------------------------------
     def now(self) -> float:
@@ -296,7 +296,7 @@ class RealBackend(Backend):
             for i, s in enumerate(self.board.speeds()):
                 launch.scheduler.update_speed(i, s)
 
-    def _fused_kernel(self, fn: Callable) -> Callable:
+    def _fused_kernel(self, fn: Callable) -> Callable:  # guarded-by: condition
         """Vmapped wrapper computing whole members at member-local offset 0.
 
         A fused package covers whole members, so each member's chunk spans
@@ -439,9 +439,9 @@ class CoexecEngine:
         self.loop = ExecutionLoop(self.backend,
                                   [u.name for u in self.units], cfg)
         self.backend.loop = self.loop   # dead-unit dispatch guard
-        self._threads: list[threading.Thread] = []
-        self._stop = False
-        self._started = False
+        self._threads: list[threading.Thread] = []  # guarded-by: _cv
+        self._stop = False  # guarded-by: _cv
+        self._started = False  # guarded-by: _cv
 
     @classmethod
     def from_spec(cls, spec, *, units: Optional[Sequence[JaxUnit]] = None
@@ -469,7 +469,8 @@ class CoexecEngine:
     @property
     def running(self) -> bool:
         """Whether the engine has started and not yet shut down."""
-        return self._started and not self._stop
+        with self._cv:
+            return self._started and not self._stop
 
     def start(self) -> "CoexecEngine":
         """Spawn the per-unit management threads (idempotent).
@@ -486,11 +487,11 @@ class CoexecEngine:
                     raise RuntimeError("engine was shut down; build a new one")
                 return self
             self._started = True
-            self._threads = [
+            self._threads = threads = [
                 threading.Thread(target=self._worker, args=(i,),
                                  name=f"counit-{u.name}-{i}", daemon=True)
                 for i, u in enumerate(self.units)]
-        for t in self._threads:
+        for t in threads:
             t.start()
         return self
 
@@ -503,8 +504,9 @@ class CoexecEngine:
         with self._cv:
             self._stop = True
             self._cv.notify_all()
+            threads = list(self._threads)
         if wait:
-            for t in self._threads:
+            for t in threads:
                 t.join()
 
     def kill_unit(self, unit_idx: int) -> int:
