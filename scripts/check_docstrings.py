@@ -30,6 +30,7 @@ MODULES = [
     f"{API}/registry.py",
     f"{API}/spec.py",
     f"{CORE}/admission.py",
+    f"{CORE}/cluster.py",
     f"{CORE}/dataplane.py",
     f"{CORE}/energy.py",
     f"{CORE}/engine.py",
@@ -37,6 +38,7 @@ MODULES = [
     f"{CORE}/runtime.py",
     f"{CORE}/scheduler.py",
     f"{CORE}/sim.py",
+    f"{CORE}/traffic.py",
 ]
 
 # Public API surface that must carry full Args/Returns/Raises sections
@@ -54,9 +56,24 @@ STRICT: dict[str, tuple[str, ...]] = {
     "engine.py::CoexecEngine.submit": ("Args:", "Returns:", "Raises:"),
     "engine.py::LaunchHandle.exception": ("Args:", "Returns:", "Raises:"),
     "engine.py::LaunchHandle.result": ("Args:", "Returns:", "Raises:"),
+    "cluster.py::Autoscaler.observe": ("Args:", "Returns:"),
+    "cluster.py::FailurePlan.load": ("Args:", "Returns:"),
+    "cluster.py::Supervisor.check": ("Args:", "Returns:"),
+    "cluster.py::UnitPool.drain": ("Args:", "Returns:"),
+    "cluster.py::UnitPool.grow": ("Args:", "Returns:"),
+    "cluster.py::replay_trace_cluster": ("Args:", "Returns:"),
     "exec.py::Backend.dispatch": ("Args:",),
+    "exec.py::ExecutionLoop.admit": ("Args:",),
     "exec.py::ExecutionLoop.complete": ("Args:",),
+    "exec.py::ExecutionLoop.offer": ("Args:", "Returns:"),
     "exec.py::ExecutionLoop.pull": ("Args:", "Returns:"),
+    "exec.py::ExecutionLoop.unit_joined": ("Args:",),
+    "exec.py::ExecutionLoop.unit_lost": ("Args:", "Returns:"),
+    "traffic.py::Trace.load": ("Args:", "Returns:"),
+    "traffic.py::Trace.save": ("Args:",),
+    "traffic.py::capacity_items_per_s": ("Args:", "Returns:"),
+    "traffic.py::replay_trace_sim": ("Args:", "Returns:"),
+    "traffic.py::synthesize_trace": ("Args:", "Returns:", "Raises:"),
     "runtime.py::CoexecutorRuntime.launch_async": ("Args:", "Returns:",
                                                    "Raises:"),
     "scheduler.py::Scheduler.next_package": ("Args:", "Returns:"),

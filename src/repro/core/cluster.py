@@ -163,6 +163,7 @@ class FailurePlan:
 
     # -- JSON round trip (Trace.save/Trace.load style) ----------------------
     def to_dict(self) -> dict:
+        """Lossless plain-dict form (versioned, JSON-serializable)."""
         return {
             "version": PLAN_VERSION,
             "events": {str(k): str(v)
@@ -172,6 +173,7 @@ class FailurePlan:
 
     @classmethod
     def from_dict(cls, data: dict) -> "FailurePlan":
+        """Inverse of :meth:`to_dict`; validates version and actions."""
         version = data.get("version")
         if version != PLAN_VERSION:
             raise ValueError(f"unsupported failure-plan version {version!r} "
@@ -182,10 +184,12 @@ class FailurePlan:
         return cls(events=events, timeline=timeline).validate()
 
     def to_json(self, indent: Optional[int] = None) -> str:
+        """Serialize :meth:`to_dict` as stable-key JSON text."""
         return json.dumps(self.to_dict(), sort_keys=True, indent=indent)
 
     @classmethod
     def from_json(cls, text: str) -> "FailurePlan":
+        """Inverse of :meth:`to_json`."""
         return cls.from_dict(json.loads(text))
 
     def save(self, path) -> None:
@@ -194,7 +198,14 @@ class FailurePlan:
 
     @classmethod
     def load(cls, path) -> "FailurePlan":
-        """Read a plan previously written by :meth:`save`."""
+        """Read a plan previously written by :meth:`save`.
+
+        Args:
+            path: JSON file written by :meth:`save`.
+
+        Returns:
+            The validated plan.
+        """
         return cls.from_json(pathlib.Path(path).read_text())
 
 
@@ -312,6 +323,9 @@ class Supervisor:
     def check(self, t: float) -> list[int]:
         """Declare units silent for longer than ``grace_s`` dead.
 
+        Args:
+            t: Current backend time in seconds.
+
         Returns:
             The unit indices failed by this check, in index order.
         """
@@ -425,6 +439,10 @@ class UnitPool:
     def grow(self, n: int = 1, *, now: float = 0.0) -> list[int]:
         """Activate up to ``n`` dormant slots (lowest indices first).
 
+        Args:
+            n: Maximum number of slots to activate.
+            now: Backend time stamped on the join events.
+
         Returns:
             The indices actually activated (may be fewer than ``n``).
         """
@@ -447,6 +465,10 @@ class UnitPool:
         for scale-in, where nothing may be lost or re-issued; a unit that
         must leave *now* regardless is a failure
         (:meth:`Supervisor.fail_unit`).
+
+        Args:
+            unit: Index of the unit to retire.
+            now: Backend time stamped on the leave event.
 
         Returns:
             ``True`` when the unit left, ``False`` when it still holds
