@@ -25,7 +25,7 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 SNAPSHOT = REPO / "scripts" / "api_snapshot.txt"
-MODULES = ("repro.api", "repro.core")
+MODULES = ("repro.analysis", "repro.api", "repro.core")
 
 sys.path.insert(0, str(REPO / "src"))
 

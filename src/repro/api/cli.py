@@ -197,11 +197,12 @@ def spec_from_args(args: argparse.Namespace, *,
 def registry_listing() -> str:
     """Human-readable dump of every registered plugin (``--list``).
 
-    One line per registered scheduler, workload and kernel with its
-    declared option fields — the introspection surface both CLIs print,
-    so a freshly registered third-party plugin is discoverable without
-    reading code. Kernels additionally show their per-argument partition
-    semantics (split axis/halo, broadcast, defaults).
+    One line per registered scheduler, workload, kernel and
+    static-analysis pass with its declared option fields — the
+    introspection surface both CLIs print, so a freshly registered
+    third-party plugin is discoverable without reading code. Kernels
+    additionally show their per-argument partition semantics (split
+    axis/halo, broadcast, defaults); analysis passes show their rule ids.
 
     Returns:
         The formatted multi-line listing.
@@ -240,6 +241,13 @@ def registry_listing() -> str:
             args_desc = "(factory needs options)"
         lines.append(f"  {name:14s} args: {args_desc}; options: "
                      f"{', '.join(sorted(plugin.fields)) or '-'}")
+    from repro import analysis
+
+    lines.append("analysis:")
+    for name in analysis.pass_names():
+        plugin = analysis.pass_plugin(name)
+        rules = ", ".join(r.id for r in plugin.rules)
+        lines.append(f"  {name:14s} [{plugin.scope}] rules: {rules}")
     return "\n".join(lines)
 
 
