@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Consolidated lint driver: every repo checker, one summary table.
+
+Runs the five checkers in order — docs, docstrings, API surface, bench
+schema, static analysis — failing fast: the first failure marks the
+remaining checkers as skipped.  The bench-schema step is skipped (not
+failed) when no ``BENCH_*.json`` artifacts exist, unless
+``--require-bench`` is given (CI generates them first and passes it).
+
+Usage: python scripts/lint.py [--require-bench] [--no-fail-fast]
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+BENCH_ARTIFACTS = ("BENCH_coexec.json", "BENCH_coexec_multi.json",
+                   "BENCH_kernels.json", "BENCH_traffic.json",
+                   "BENCH_cluster.json")
+
+CHECKS = (
+    ("docs", "check_docs.py", ()),
+    ("docstrings", "check_docstrings.py", ()),
+    ("api-surface", "check_api.py", ()),
+    ("bench-schema", "check_bench_schema.py", BENCH_ARTIFACTS),
+    ("static-analysis", "check_static.py", ()),
+)
+
+
+def _run(script: str, args: tuple) -> int:
+    """Run one checker as a subprocess, streaming its output."""
+    cmd = [sys.executable, str(ROOT / "scripts" / script), *args]
+    return subprocess.run(cmd, cwd=ROOT).returncode
+
+
+def main() -> int:
+    """Run every checker; print the summary table; exit 1 on any failure."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--require-bench", action="store_true",
+                    help="fail (instead of skip) when BENCH artifacts "
+                         "are missing")
+    ap.add_argument("--no-fail-fast", action="store_true",
+                    help="keep running checkers after a failure")
+    args = ap.parse_args()
+
+    results = []
+    failed = False
+    for name, script, check_args in CHECKS:
+        if failed and not args.no_fail_fast:
+            results.append((name, "SKIP (fail-fast)"))
+            continue
+        if script == "check_bench_schema.py":
+            missing = [a for a in BENCH_ARTIFACTS
+                       if not (ROOT / a).exists()]
+            if missing and not args.require_bench:
+                results.append((name, "SKIP (no artifacts)"))
+                continue
+        print(f"== lint: {name} ({script}) ==", flush=True)
+        rc = _run(script, check_args)
+        results.append((name, "OK" if rc == 0 else f"FAIL (exit {rc})"))
+        failed = failed or rc != 0
+
+    width = max(len(n) for n, _ in results)
+    print("\nlint summary")
+    print("-" * (width + 24))
+    for name, status in results:
+        print(f"{name:<{width}}  {status}")
+    print("-" * (width + 24))
+    if failed:
+        print("lint: FAILED", file=sys.stderr)
+        return 1
+    print("lint: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
