@@ -1,0 +1,18 @@
+"""True-positive fixture: every determinism rule fires once or more."""
+import time
+from datetime import datetime
+
+import numpy as np
+from numpy.random import default_rng
+
+
+def decide(queue):
+    """One violation per determinism rule, line-pinned for the tests."""
+    t = time.perf_counter()             # det-wall-clock
+    stamp = datetime.now()              # det-naive-datetime
+    rng = default_rng()                 # det-unseeded-rng (no seed)
+    noise = np.random.rand(4)           # det-unseeded-rng (global RNG)
+    order = [x for x in {3, 1, 2}]      # det-set-iteration
+    for item in set(queue):             # det-set-iteration
+        pass
+    return t, stamp, rng, noise, order

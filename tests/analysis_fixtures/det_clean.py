@@ -1,0 +1,12 @@
+"""Clean fixture: deterministic decision code the pass must not flag."""
+from numpy.random import default_rng
+
+
+def decide(backend, queue, seed):
+    """Injected clock, seeded RNG, sorted set iteration — all allowed."""
+    t = backend.now()
+    rng = default_rng(seed)
+    order = [x for x in sorted({3, 1, 2})]
+    for item in sorted(set(queue)):
+        pass
+    return t, rng, order

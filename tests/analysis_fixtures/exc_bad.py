@@ -1,0 +1,21 @@
+"""True-positive fixture: every exception-hygiene rule fires once."""
+
+
+class LaunchShed(Exception):
+    """Stand-in for the control-plane shed outcome."""
+
+
+def run(work):
+    """Three handlers, one violation each."""
+    try:
+        work()
+    except:                     # exc-bare-except
+        pass
+    try:
+        work()
+    except Exception:           # exc-broad-except
+        pass
+    try:
+        work()
+    except LaunchShed:          # exc-swallowed-control
+        pass

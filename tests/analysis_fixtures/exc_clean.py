@@ -1,0 +1,26 @@
+"""Clean fixture: handlers that re-raise, log, or inspect the error."""
+import logging
+
+
+class LaunchShed(Exception):
+    """Stand-in for the control-plane shed outcome."""
+
+
+def run(work, shed_log):
+    """Every handler observes or propagates the failure."""
+    try:
+        work()
+    except ValueError:
+        pass                    # narrow type: allowed
+    try:
+        work()
+    except Exception as e:
+        logging.getLogger(__name__).exception("work failed: %s", e)
+    try:
+        work()
+    except BaseException:
+        raise
+    try:
+        work()
+    except LaunchShed as shed:
+        shed_log.append(shed)   # decision recorded, not dropped

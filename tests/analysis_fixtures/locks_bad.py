@@ -1,0 +1,19 @@
+"""True-positive fixture: guarded attribute touched outside its lock."""
+import threading
+
+
+class Engine:
+    """Threaded class with one guarded counter."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = 0  # guarded-by: _lock
+
+    def bump(self):
+        """Correct: mutation under the lock."""
+        with self._lock:
+            self._pending += 1
+
+    def peek(self):
+        """Wrong: unlocked read of the guarded counter."""
+        return self._pending  # lock-guard fires here

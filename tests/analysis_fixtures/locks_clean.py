@@ -1,0 +1,26 @@
+"""Clean fixture: every guarded access is locked, annotated, or exempt."""
+import threading
+
+
+class Engine:
+    """Threaded class that follows the guarded-by discipline."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = 0  # guarded-by: _lock
+        self._log = []     # guarded-by: caller
+
+    def bump(self):
+        """Mutation under the lock."""
+        with self._lock:
+            self._pending += 1
+
+    def flush(self):  # guarded-by: _lock
+        """Caller-holds contract via the def-line annotation."""
+        n = self._pending
+        self._pending = 0
+        return n
+
+    def note(self, msg):
+        """Caller-serialized attribute needs no with-block."""
+        self._log.append(msg)

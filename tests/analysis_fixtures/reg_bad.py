@@ -1,0 +1,16 @@
+"""Fixture: registration declaring an option the factory does not accept."""
+from repro.api.registry import register_scheduler
+
+
+class BadScheduler:
+    """Accepts ``chunk`` (and the implied ``granularity``) only."""
+
+    def __init__(self, total, num_units, *, chunk=1, granularity=1):
+        self.total = total
+        self.num_units = num_units
+        self.chunk = chunk
+        self.granularity = granularity
+
+
+register_scheduler("fixture-bad", BadScheduler,
+                   fields=("chunk", "typo_option"))  # con-plugin-fields

@@ -1,0 +1,15 @@
+"""Fixture: registration whose declared fields match the factory."""
+from repro.api.registry import register_scheduler
+
+
+class GoodScheduler:
+    """Accepts exactly the declared options plus implied granularity."""
+
+    def __init__(self, total, num_units, *, chunk=1, granularity=1):
+        self.total = total
+        self.num_units = num_units
+        self.chunk = chunk
+        self.granularity = granularity
+
+
+register_scheduler("fixture-good", GoodScheduler, fields=("chunk",))

@@ -1,0 +1,23 @@
+"""Fixture spec: one field without _cli metadata, one without a doc row."""
+import dataclasses
+
+
+def _cli(flag, help_, **extra):
+    """Mini copy of the spec metadata helper."""
+    return {"cli": flag, "help": help_, **extra}
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaSpec:
+    """Two fields: ``rate`` is wired up, ``burst`` is not."""
+
+    rate: float = dataclasses.field(
+        default=0.0, metadata=_cli("rate", "offered rate"))
+    burst: float = 1.0  # con-spec-cli: surfaces no CLI flag
+
+
+@dataclasses.dataclass(frozen=True)
+class CoexecSpec:
+    """Root spec with a single section."""
+
+    alpha: AlphaSpec = dataclasses.field(default_factory=AlphaSpec)

@@ -1,0 +1,24 @@
+"""Fixture spec: every field carries _cli metadata and has a doc row."""
+import dataclasses
+
+
+def _cli(flag, help_, **extra):
+    """Mini copy of the spec metadata helper."""
+    return {"cli": flag, "help": help_, **extra}
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaSpec:
+    """Both fields wired to CLI flags."""
+
+    rate: float = dataclasses.field(
+        default=0.0, metadata=_cli("rate", "offered rate"))
+    burst: float = dataclasses.field(
+        default=1.0, metadata=_cli("burst", "on-phase multiplier"))
+
+
+@dataclasses.dataclass(frozen=True)
+class CoexecSpec:
+    """Root spec with a single section."""
+
+    alpha: AlphaSpec = dataclasses.field(default_factory=AlphaSpec)

@@ -1,0 +1,251 @@
+"""The static-analysis subsystem holds its own contracts.
+
+Fixture-backed true-positive and clean cases for every rule, the
+suppression round trip (honored, unused, over-budget), the seeded
+lock-guard mutation (deleting one ``with self._cv:`` from a copy of
+``engine.py`` must turn the locks pass red), registry semantics, and the
+repo itself staying clean under ``python -m repro.analysis``.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (AnalysisPass, Rule, load_source, pass_names,
+                            pass_plugin, register_pass, run_passes,
+                            temporary_passes)
+from repro.analysis.consistency import (check_plugin_registrations,
+                                        check_spec_cli_docs)
+from repro.analysis.determinism import check_determinism
+from repro.analysis.exceptions import check_exceptions
+from repro.analysis.locks import check_locks
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = pathlib.Path(__file__).resolve().parent / "analysis_fixtures"
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_determinism_true_positives():
+    findings = check_determinism(load_source(FIXTURES / "det_bad.py"))
+    assert _rules(findings) == ["det-naive-datetime", "det-set-iteration",
+                                "det-unseeded-rng", "det-wall-clock"]
+    # both unseeded-RNG shapes fire: argless default_rng and np.random.*
+    assert sum(f.rule == "det-unseeded-rng" for f in findings) == 2
+    assert sum(f.rule == "det-set-iteration" for f in findings) == 2
+
+
+def test_determinism_clean():
+    assert check_determinism(load_source(FIXTURES / "det_clean.py")) == []
+
+
+def test_determinism_scope_is_the_decision_path():
+    globs = pass_plugin("determinism").default_globs
+    for mod in ("exec", "admission", "traffic", "sim", "cluster"):
+        assert f"src/repro/core/{mod}.py" in globs
+
+
+# ---------------------------------------------------------------------------
+# lock discipline
+# ---------------------------------------------------------------------------
+
+def test_locks_true_positive():
+    findings = check_locks(load_source(FIXTURES / "locks_bad.py"))
+    assert _rules(findings) == ["lock-guard"]
+    (f,) = findings
+    assert "_pending" in f.message and "_lock" in f.message
+
+
+def test_locks_clean():
+    assert check_locks(load_source(FIXTURES / "locks_clean.py")) == []
+
+
+def test_locks_mutation_of_engine_turns_red(tmp_path):
+    """Deleting one ``with self._cv:`` from engine.py must be caught."""
+    source = (REPO / "src/repro/core/engine.py").read_text()
+    guarded = ("        with self._cv:\n"
+               "            self._stop = True\n"
+               "            self._cv.notify_all()\n"
+               "            threads = list(self._threads)\n")
+    unguarded = ("        self._stop = True\n"
+                 "        self._cv.notify_all()\n"
+                 "        threads = list(self._threads)\n")
+    assert guarded in source, "engine.py shutdown lock block moved; " \
+                              "update the mutation fixture"
+
+    pristine = tmp_path / "engine_pristine.py"
+    pristine.write_text(source)
+    assert check_locks(load_source(pristine)) == []
+
+    mutated = tmp_path / "engine_mutated.py"
+    mutated.write_text(source.replace(guarded, unguarded))
+    findings = check_locks(load_source(mutated))
+    assert any(f.rule == "lock-guard" and "_stop" in f.message
+               for f in findings)
+    assert any(f.rule == "lock-guard" and "_threads" in f.message
+               for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# exception hygiene
+# ---------------------------------------------------------------------------
+
+def test_exceptions_true_positives():
+    findings = check_exceptions(load_source(FIXTURES / "exc_bad.py"))
+    assert _rules(findings) == ["exc-bare-except", "exc-broad-except",
+                                "exc-swallowed-control"]
+
+
+def test_exceptions_clean():
+    assert check_exceptions(load_source(FIXTURES / "exc_clean.py")) == []
+
+
+# ---------------------------------------------------------------------------
+# spec/CLI/registry consistency
+# ---------------------------------------------------------------------------
+
+def test_consistency_spec_true_positives():
+    findings = check_spec_cli_docs(FIXTURES / "spec_bad.py",
+                                   FIXTURES / "spec_bad.md")
+    assert sum(f.rule == "con-spec-cli" for f in findings) == 1
+    docs = [f for f in findings if f.rule == "con-spec-doc"]
+    messages = " | ".join(f.message for f in docs)
+    assert "alpha.burst" in messages       # missing row
+    assert "alpha.ghost" in messages       # stale row
+
+
+def test_consistency_spec_clean():
+    assert check_spec_cli_docs(FIXTURES / "spec_clean.py",
+                               FIXTURES / "spec_clean.md") == []
+
+
+def test_consistency_registration_true_positive():
+    findings = check_plugin_registrations([FIXTURES / "reg_bad.py"])
+    assert _rules(findings) == ["con-plugin-fields"]
+    assert "typo_option" in findings[0].message
+
+
+def test_consistency_registration_clean():
+    assert check_plugin_registrations([FIXTURES / "reg_clean.py"]) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def _write_module(tmp_path, body):
+    p = tmp_path / "mod.py"
+    p.write_text(body)
+    return p
+
+
+def test_suppression_silences_a_finding(tmp_path):
+    p = _write_module(tmp_path, (
+        '"""Mod."""\n'
+        "import time\n"
+        "t = time.perf_counter()  # lint: disable=det-wall-clock\n"))
+    findings = run_passes([pass_plugin("determinism")], tmp_path,
+                          paths=[str(p)])
+    assert findings == []
+
+
+def test_unused_suppression_is_flagged(tmp_path):
+    p = _write_module(tmp_path, (
+        '"""Mod."""\n'
+        "x = 1  # lint: disable=det-wall-clock\n"))
+    findings = run_passes([pass_plugin("determinism")], tmp_path,
+                          paths=[str(p)])
+    assert _rules(findings) == ["unused-suppression"]
+
+
+def test_unknown_rule_suppression_is_ignored(tmp_path):
+    # a rule no selected pass checks is not "unused" — another pass owns it
+    p = _write_module(tmp_path, (
+        '"""Mod."""\n'
+        "x = 1  # lint: disable=lock-guard\n"))
+    findings = run_passes([pass_plugin("determinism")], tmp_path,
+                          paths=[str(p)])
+    assert findings == []
+
+
+def test_suppression_budget_enforced(tmp_path):
+    p = _write_module(tmp_path, (
+        '"""Mod."""\n'
+        "import time\n"
+        "a = time.time()  # lint: disable=det-wall-clock\n"
+        "b = time.time()  # lint: disable=det-wall-clock\n"))
+    over = run_passes([pass_plugin("determinism")], tmp_path,
+                      paths=[str(p)], budget=1)
+    assert _rules(over) == ["suppression-budget"]
+    under = run_passes([pass_plugin("determinism")], tmp_path,
+                       paths=[str(p)], budget=2)
+    assert under == []
+
+
+# ---------------------------------------------------------------------------
+# registry + driver
+# ---------------------------------------------------------------------------
+
+def test_builtin_passes_registered():
+    assert set(pass_names()) >= {"determinism", "locks", "exceptions",
+                                 "consistency"}
+
+
+def test_register_pass_rejects_duplicates_and_scopes():
+    dummy = AnalysisPass(name="dummy", checker=lambda src: [],
+                         rules=(Rule("dummy-rule", "test"),),
+                         description="test pass")
+    with temporary_passes():
+        register_pass(dummy)
+        with pytest.raises(ValueError, match="already registered"):
+            register_pass(dummy)
+        register_pass(dummy, overwrite=True)
+        with pytest.raises(ValueError, match="scope"):
+            register_pass(AnalysisPass(
+                name="weird", checker=lambda src: [], rules=(),
+                description="bad scope", scope="universe"))
+    assert "dummy" not in pass_names()
+
+
+def test_registry_listing_has_analysis_section():
+    from repro.api.cli import registry_listing
+    listing = registry_listing()
+    assert "analysis:" in listing
+    for name in ("determinism", "locks", "exceptions", "consistency"):
+        assert name in listing
+    assert "lock-guard" in listing
+
+
+def _run_module(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, *args],
+                          capture_output=True, text=True, timeout=120,
+                          env=env, cwd=cwd or REPO)
+
+
+def test_repo_is_clean_under_the_driver():
+    proc = _run_module("-m", "repro.analysis", "--root", str(REPO))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repro.analysis: OK" in proc.stdout
+
+
+def test_check_static_writes_report(tmp_path):
+    report = tmp_path / "report.json"
+    proc = _run_module(str(REPO / "scripts" / "check_static.py"),
+                       "--report", str(report), cwd=tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "check_static: OK" in proc.stdout
+    import json
+    data = json.loads(report.read_text())
+    assert data["schema_version"] == 1
+    assert data["count"] == 0
