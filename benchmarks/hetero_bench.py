@@ -49,36 +49,52 @@ def coexec_structured_rows(spec=None, *, smoke: bool = False) -> list[dict]:
 
     base = spec if spec is not None else default_serve_spec()
     rows: list[dict] = []
+    # serial vs pipelined per-unit dispatch is always part of the sweep
+    # (depth 1 vs 2, plus the spec's own depth if deeper) so the JSON
+    # artifact tracks what overlap buys across PRs
+    depths = tuple(sorted({1, 2, int(base.units.pipeline_depth)}))
     # simulated path: one regular + one irregular paper workload, both
     # memory cost models (USM vs BUFFERS is now an end-to-end axis)
     for wl_name in ("taylor", "mandelbrot"):
         for mem in ("usm", "buffers"):
-            wl_spec = base.replace(
-                workload=base.workload.replace(name=wl_name),
-                memory=base.memory.replace(model=mem))
-            for r in coexec_sim_rows(wl_spec):
-                rows.append(dict(kind="sim", workload=wl_name, memory=mem,
-                                 **{k: r[k] for k in
-                                    ("policy", "seconds", "packages",
-                                     "balance", "steals", "dispatches",
-                                     "h2d_copies", "d2h_copies")}))
+            for depth in depths:
+                wl_spec = base.replace(
+                    workload=base.workload.replace(name=wl_name),
+                    memory=base.memory.replace(model=mem),
+                    units=base.units.replace(pipeline_depth=depth))
+                for r in coexec_sim_rows(wl_spec):
+                    rows.append(dict(
+                        kind="sim", workload=wl_name, memory=mem,
+                        pipeline_depth=depth,
+                        **{k: r[k] for k in
+                           ("policy", "seconds", "packages",
+                            "balance", "steals", "dispatches",
+                            "h2d_copies", "d2h_copies",
+                            "device_idle_frac", "host_overhead_frac")}))
     # real path: concurrent launch_async requests on the engine, both
-    # data planes, serving the workload's registered kernel. Units are
-    # shared across the sweep so each kernel jit-compiles once.
+    # data planes × pipeline depths, serving the workload's registered
+    # kernel. Units are shared across the sweep so each kernel
+    # jit-compiles once (depth is an engine property, not a unit one).
     items, requests = (1 << 12, 4) if smoke else (1 << 14, 8)
     units = base.build_units()
     for mem in ("usm", "buffers"):
-        real_spec = base.replace(
-            workload=base.workload.replace(
-                name="taylor", items=items, requests=requests,
-                concurrent=requests),
-            memory=base.memory.replace(model=mem))
-        for r in coexec_real_rows(real_spec, units=units):
-            rows.append(dict(kind="real", workload=r["kernel"], **{
-                k: r[k] for k in
-                ("kernel", "memory", "policy", "requests", "n", "seconds",
-                 "packages", "req_per_s", "items_per_s", "dispatches",
-                 "h2d_copies", "d2h_copies", "p50_ms", "p99_ms")}))
+        for depth in depths:
+            real_spec = base.replace(
+                workload=base.workload.replace(
+                    name="taylor", items=items, requests=requests,
+                    concurrent=requests),
+                memory=base.memory.replace(model=mem),
+                units=base.units.replace(pipeline_depth=depth))
+            for r in coexec_real_rows(real_spec, units=units):
+                rows.append(dict(
+                    kind="real", workload=r["kernel"],
+                    pipeline_depth=depth,
+                    **{k: r[k] for k in
+                       ("kernel", "memory", "policy", "requests", "n",
+                        "seconds", "packages", "req_per_s", "items_per_s",
+                        "dispatches", "h2d_copies", "d2h_copies",
+                        "device_idle_frac", "host_overhead_frac",
+                        "p50_ms", "p99_ms")}))
     return rows
 
 
@@ -96,22 +112,25 @@ def run_coexec(spec=None, *, smoke: bool = False, structured=None):
         structured = coexec_structured_rows(spec, smoke=smoke)
     rows = []
     for r in structured:
+        depth = r.get("pipeline_depth", 1)
         if r["kind"] == "sim":
             rows.append((f"coexec-sim/{r['workload']}/{r['policy']}"
-                         f"/{r['memory']}",
+                         f"/{r['memory']}/d{depth}",
                          round(r["seconds"] * 1e3, 1),
                          f"packages={r['packages']};"
                          f"balance={r['balance']:.2f};"
                          f"steals={r['steals']};"
-                         f"h2d={r['h2d_copies']};d2h={r['d2h_copies']}"))
+                         f"h2d={r['h2d_copies']};d2h={r['d2h_copies']};"
+                         f"idle={r['device_idle_frac']:.2f}"))
         else:
             rows.append((f"coexec-real/{r['kernel']}/{r['policy']}"
-                         f"/{r['memory']}",
+                         f"/{r['memory']}/d{depth}",
                          round(r["seconds"] * 1e3, 1),
                          f"requests={r['requests']};"
                          f"packages={r['packages']};"
                          f"req_per_s={r['req_per_s']:.1f};"
                          f"h2d={r['h2d_copies']};d2h={r['d2h_copies']};"
+                         f"idle={r['device_idle_frac']:.2f};"
                          f"p99_ms={r['p99_ms']:.1f}"))
     return rows
 

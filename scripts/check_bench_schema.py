@@ -34,9 +34,12 @@ SCHEMA_VERSION = 2
 REQUIRED: dict[str, dict[str, set]] = {
     "coexec": {
         "all": {"kind", "workload", "memory", "policy", "seconds",
-                "packages", "dispatches", "h2d_copies", "d2h_copies"},
+                "packages", "dispatches", "h2d_copies", "d2h_copies",
+                "pipeline_depth", "device_idle_frac",
+                "host_overhead_frac"},
         "numeric": {"seconds", "packages", "dispatches", "h2d_copies",
-                    "d2h_copies"},
+                    "d2h_copies", "pipeline_depth", "device_idle_frac",
+                    "host_overhead_frac"},
     },
     "coexec-multi": {
         "all": {"workload", "tenants", "admission", "fuse", "preempt",

@@ -133,6 +133,10 @@ class UnitsSpec(_SubSpec):
         default=(), metadata=_cli(
             "dist", "computing-power shares: one value = first unit's "
                     "share (paper's dist(0.35)), or per-unit comma list"))
+    pipeline_depth: int = dataclasses.field(
+        default=1, metadata=_cli(
+            "pipeline-depth", "packages a unit may have in flight at "
+                              "once (1 = serial stage/compute/collect)"))
 
     def resolve_dist(self, num_units: int) -> Optional[list[float]]:
         """Expand ``dist`` into per-unit shares for ``num_units`` units.
@@ -803,6 +807,9 @@ class CoexecSpec(_SubSpec):
             n = self.units.count if self.units.count is not None \
                 else max(len(self.units.dist), 1)
             self.units.resolve_dist(n)
+        if int(self.units.pipeline_depth) < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, "
+                             f"got {self.units.pipeline_depth!r}")
         return self
 
     # -- builders -----------------------------------------------------------
@@ -926,11 +933,19 @@ class CoexecSpecBuilder:
 
     def units(self, count: Optional[int] = None,
               kinds: Sequence[str] = (),
-              speed_hints: Sequence[float] = ()) -> "CoexecSpecBuilder":
+              speed_hints: Sequence[float] = (),
+              pipeline_depth: Optional[int] = None) -> "CoexecSpecBuilder":
         """Describe the Coexecution Units to build."""
+        depth = self._spec.units.pipeline_depth if pipeline_depth is None \
+            else int(pipeline_depth)
         return self._update(units=self._spec.units.replace(
             count=count, kinds=tuple(kinds),
-            speed_hints=tuple(speed_hints)))
+            speed_hints=tuple(speed_hints), pipeline_depth=depth))
+
+    def pipeline_depth(self, depth: int) -> "CoexecSpecBuilder":
+        """Set how many packages a unit may have in flight at once."""
+        return self._update(units=self._spec.units.replace(
+            pipeline_depth=int(depth)))
 
     def dist(self, *shares: float) -> "CoexecSpecBuilder":
         """Computing-power hint: one first-unit share, or per-unit shares."""

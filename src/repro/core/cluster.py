@@ -605,13 +605,21 @@ class ClusterSimBackend(SimBackend):
     """
 
     def __init__(self, units: Sequence[SimUnit], memory: MemoryModel,
-                 costs: MemoryCosts):
-        super().__init__(units, memory, costs)
+                 costs: MemoryCosts, *, pipeline_depth: int = 1):
+        super().__init__(units, memory, costs,
+                         pipeline_depth=pipeline_depth)
         self.kills: list[tuple[float, int]] = []
         self.joins: list[tuple[float, int]] = []
         self.scale_events: list[tuple[float, int]] = []  # (t, new size)
         self._kill_at: dict[int, collections.deque[float]] = {}  # guarded-by: caller
-        self._doomed: dict[int, tuple[_SimLaunchState, Package]] = {}  # guarded-by: caller
+        # packages held in flight on a unit that dies before finishing
+        # them — up to pipeline_depth per unit, issue order preserved
+        self._doomed: dict[int, list[tuple[_SimLaunchState, Package]]] = {}  # guarded-by: caller
+
+    def _doomed_full(self, unit: int) -> bool:
+        """Whether the unit's in-flight pipeline is saturated with doomed
+        packages (it must stop pulling until its scripted kill fires)."""
+        return len(self._doomed.get(unit, ())) >= self.pipeline_depth
 
     def run(self, loop: ExecutionLoop,                      # type: ignore[override]
             entries: Sequence[_SimLaunchState], *,
@@ -653,7 +661,7 @@ class ClusterSimBackend(SimBackend):
         def wake_all(t: float) -> None:
             parked.clear()
             for j in range(len(self.units)):
-                if j not in loop.dead_units and j not in self._doomed:
+                if j not in loop.dead_units and not self._doomed_full(j):
                     heapq.heappush(evq, (t + 1e-9, 1, next(tie), "idle", j))
 
         while evq:
@@ -692,7 +700,7 @@ class ClusterSimBackend(SimBackend):
                 if supervisor is not None:
                     supervisor.flag_stragglers(t)
                 continue
-            if i in loop.dead_units or i in self._doomed:
+            if i in loop.dead_units or self._doomed_full(i):
                 continue
             parked.discard(i)
             work = loop.pull(i, now=t, force_flush=not pending)
@@ -718,24 +726,35 @@ class ClusterSimBackend(SimBackend):
             entry, pkg = work
             kills = self._kill_at.get(i)
             if kills:
-                _, compute_end = self._model_compute(i, entry, pkg)
-                if compute_end >= kills[0] - 1e-12:
+                _, _, compute_end = self._model_compute(i, entry, pkg)
+                # in-order per-unit completion: once one in-flight
+                # package runs past the kill, everything pulled behind
+                # it is lost with the unit too
+                if i in self._doomed or compute_end >= kills[0] - 1e-12:
                     # dies mid-package: hold the attempt in flight,
                     # uncharged; the kill event harvests it for re-issue
-                    self._doomed[i] = (entry, pkg)
+                    self._doomed.setdefault(i, []).append((entry, pkg))
+                    if not self._doomed_full(i):
+                        # a pipelined unit keeps pulling until its
+                        # in-flight window is saturated
+                        heapq.heappush(evq, (t + 1e-9, 1, next(tie),
+                                             "idle", i))
                     continue
             self.dispatch(i, entry, pkg)
             loop.complete(entry, pkg)
             if supervisor is not None:
                 supervisor.beat(i, pkg.t_complete)
                 supervisor.note_service(pkg.t_complete - pkg.t_issue)
-            heapq.heappush(evq, (pkg.t_complete, 1, next(tie), "idle", i))
+            # re-arm on the serial clock (busy_until), not the recorded
+            # pipelined completion — keeps pull pacing depth-invariant
+            heapq.heappush(evq, (self.busy_until[i], 1, next(tie),
+                                 "idle", i))
             if parked:
                 # a completion may unblock work for parked units (launch
                 # finalization frees the policy's pull window)
                 for j in sorted(parked):
-                    if j not in loop.dead_units and j not in self._doomed:
-                        heapq.heappush(evq, (pkg.t_complete + 1e-9, 1,
+                    if j not in loop.dead_units and not self._doomed_full(j):
+                        heapq.heappush(evq, (self.busy_until[i] + 1e-9, 1,
                                              next(tie), "idle", j))
                 parked.clear()
 
@@ -996,7 +1015,9 @@ def replay_trace_cluster(trace: Trace, units: Sequence[SimUnit], *,
     if memory is None:
         memory = (spec.memory_model() if spec is not None
                   else MemoryModel.USM)
-    backend = ClusterSimBackend(units, memory, MemoryCosts())
+    depth = int(spec.units.pipeline_depth) if spec is not None else 1
+    backend = ClusterSimBackend(units, memory, MemoryCosts(),
+                                pipeline_depth=depth)
     loop = ExecutionLoop(backend, [u.name for u in units], cfg)
     supervisor = Supervisor(loop) if supervise else None
     pool = UnitPool(loop, min_units=lo, supervisor=supervisor,

@@ -345,6 +345,29 @@ def _split_view(arr: np.ndarray, spec: ArgSpec, offset: int, size: int,
     return view
 
 
+def _fill_split(buf: np.ndarray, arr: np.ndarray, spec: ArgSpec,
+                offset: int, size: int, total: int) -> None:
+    """Assemble one split chunk in place in a reused staging buffer.
+
+    Writes exactly the values :func:`_package_chunks` would produce for
+    the same package — interior slice, zero-filled halo at the edges,
+    zero bucket pad — into ``buf`` (whose split-axis extent must already
+    be ``size + 2*halo + grow``), so the BUFFERS plane's staged operands
+    stay bitwise identical to the USM plane's without a fresh pad
+    allocation per package.
+    """
+    lo = offset - spec.halo
+    hi = offset + size + spec.halo
+    lo_pad = max(0, -lo)
+    index = [slice(None)] * arr.ndim
+    index[spec.axis] = slice(max(lo, 0), min(hi, total))
+    view = arr[tuple(index)]
+    dst = [slice(None)] * buf.ndim
+    dst[spec.axis] = slice(lo_pad, lo_pad + view.shape[spec.axis])
+    buf.fill(0)
+    buf[tuple(dst)] = view
+
+
 def _package_chunks(plan: LaunchPlan, pkg):
     """Yield ``(spec, chunk)`` per argument for one package.
 
@@ -412,27 +435,147 @@ class DataPlane:
     def execute(self, unit, plan: LaunchPlan, pkg) -> None:
         """Run one package end to end on `unit` and commit its output.
 
-        Stages the package's inputs per this plane's memory model,
-        dispatches the kernel, blocks until the result is ready
-        (completion event), and lands the output in the plan's container.
-        Sets ``pkg.t_complete`` / ``pkg.t_collected`` and updates the
-        plan's counters; the caller sets ``pkg.t_issue``.
+        The serial (``pipeline_depth=1``) composition of the three
+        pipeline phases: :meth:`stage` the inputs, :meth:`issue` the
+        kernel, :meth:`complete` the result. Sets ``pkg.t_launch`` /
+        ``pkg.t_complete`` / ``pkg.t_collected`` and updates the plan's
+        counters; the caller sets ``pkg.t_issue``.
 
         Args:
             unit: the :class:`~repro.core.units.JaxUnit` executing it.
             plan: the launch's data-plane state.
             pkg: the :class:`~repro.core.package.Package` to run.
         """
-        args = self._stage(unit, plan, pkg)
+        args = self.stage(unit, plan, pkg)
+        out_dev = self.issue(unit, plan, pkg, args)
+        self.complete(unit, plan, pkg, out_dev)
+
+    def stage(self, unit, plan: LaunchPlan, pkg) -> list:
+        """Phase 1 — materialize the package's inputs for ``unit``.
+
+        Pure host-side work (slicing, padding, ``device_put`` under
+        BUFFERS); safe to run while an earlier package of the same unit
+        is still computing on the device.
+
+        Args:
+            unit: the unit the package will run on.
+            plan: the launch's data-plane state.
+            pkg: the package whose inputs to materialize.
+
+        Returns:
+            The staged argument list for :meth:`issue`.
+        """
+        return self._stage(unit, plan, pkg)
+
+    def issue(self, unit, plan: LaunchPlan, pkg, args: list):
+        """Phase 2 — dispatch the kernel asynchronously on ``unit``.
+
+        Stamps ``pkg.t_launch`` and counts the dispatch, but does *not*
+        wait for the device: the returned handle is an un-materialized
+        device value whose completion :meth:`complete` later awaits, so
+        the caller may overlap further staging with the compute.
+
+        Args:
+            unit: the executing unit.
+            plan: the launch's data-plane state.
+            pkg: the package being dispatched.
+            args: staged arguments from :meth:`stage`.
+
+        Returns:
+            The in-flight device output handle.
+        """
         plan.add(dispatches=1)
-        t0 = time.perf_counter()
-        out_dev = unit.dispatch(plan.kernel.fn, pkg.offset, args)
-        if hasattr(out_dev, "block_until_ready"):
-            out_dev.block_until_ready()
+        pkg.t_launch = time.perf_counter()
+        return unit.dispatch(plan.kernel.fn, pkg.offset, args)
+
+    def complete(self, unit, plan: LaunchPlan, pkg, out_dev, *,
+                 busy_floor: float = 0.0) -> None:
+        """Phase 3 — await the device, attribute busy time, land output.
+
+        Blocks on the device completion event, charges the compute span
+        to ``unit``, collects the result into the plan's output
+        container and stamps ``pkg.t_collected``.
+
+        Args:
+            unit: the unit that ran the package.
+            plan: the launch's data-plane state.
+            pkg: the package to complete.
+            out_dev: the in-flight handle from :meth:`issue`.
+            busy_floor: completion time of the unit's previous package;
+                with several packages in flight their launch→complete
+                spans overlap, so busy time is charged from
+                ``max(t_launch, busy_floor)`` to avoid double-counting
+                the overlapped stretch. ``0.0`` (serial) charges the
+                full launch→complete span, exactly as before the split.
+
+        Raises:
+            TypeError: ``out_dev`` has no ``block_until_ready`` — an
+                unknown output type the async path cannot synchronize
+                on (a silent no-sync here would hand :meth:`_collect`
+                a result that may still be materializing).
+        """
+        sync = getattr(out_dev, "block_until_ready", None)
+        if sync is None:
+            raise TypeError(
+                f"kernel {plan.kernel.name!r} returned "
+                f"{type(out_dev).__name__!r}, which has no "
+                f"block_until_ready; the pipelined data plane cannot "
+                f"synchronize on it (kernels must return a jax array)")
+        sync()
         pkg.t_complete = time.perf_counter()
-        unit.add_busy(pkg.t_complete - t0)
+        unit.add_busy(pkg.t_complete - max(pkg.t_launch, busy_floor))
         self._collect(plan, pkg, out_dev)
         pkg.t_collected = time.perf_counter()
+
+    def prewarm(self, units: Sequence, plan: LaunchPlan,
+                granularity: int) -> None:
+        """Compile every package bucket on every unit before dispatch.
+
+        Package slices are padded to power-of-two compile buckets (see
+        :func:`_package_chunks`), so a launch over ``plan.total`` items
+        can only ever present ``O(log total)`` distinct input shapes.
+        Tracing + compiling each of them here, at plan-build time, keeps
+        JIT compile time out of ``unit.add_busy`` — a bucket's first
+        dispatch would otherwise charge the compile to the unit and
+        poison the dynamic (hguided / work-stealing) speed estimates.
+        Warm-up results are discarded; counters are not touched.
+
+        Warm-up is best-effort: a kernel that fails to trace or compile
+        is left for the real dispatch path, whose error handling fails
+        the launch through its handle — pre-warming must not turn a
+        launch failure into a submit-time exception.
+
+        Args:
+            units: the engine's units (each warms its own jit cache).
+            plan: the launch whose kernel/input shapes to warm.
+            granularity: package alignment — the smallest bucket is
+                ``_bucket(granularity)``.
+        """
+        bucket = _bucket(max(int(granularity), 1))
+        top = _bucket(plan.total)
+        while True:
+            args = []
+            for spec, arr in zip(plan.kernel.args, plan.inputs):
+                if spec.role is ArgRole.SPLIT:
+                    shape = list(np.asarray(arr).shape)
+                    shape[spec.axis] = bucket + 2 * spec.halo
+                    args.append(np.zeros(tuple(shape),
+                                         np.asarray(arr).dtype))
+                else:
+                    args.append(arr)
+            for unit in units:
+                try:
+                    unit.prewarm(plan.kernel.fn, args)
+                except Exception:
+                    import logging
+                    logging.getLogger(__name__).debug(
+                        "pre-warm of kernel %r skipped; first dispatch "
+                        "will compile (or fail through its handle)",
+                        plan.kernel.name, exc_info=True)
+                    return
+            if bucket >= top:
+                break
+            bucket <<= 1
 
     # -- subclass hooks ----------------------------------------------------
     def _stage(self, unit, plan: LaunchPlan, pkg) -> list:
@@ -475,21 +618,63 @@ class BuffersDataPlane(DataPlane):
     accessors are re-created for every command group) are staged with
     ``jax.device_put`` to the unit's device; the result is copied back
     into a per-package host buffer and then merged into the output
-    container. Every copy increments the plan's counters. Chunk shapes
-    are identical to the USM plane's (see :func:`_package_chunks`),
-    which is what makes USM-vs-BUFFERS results *bitwise* identical for a
-    fixed package structure — the same executable runs on the same
-    values; only the data movement differs.
+    container. Every copy increments the plan's counters. Staged values
+    are identical to the USM plane's chunks (same slice + halo + bucket
+    pad as :func:`_package_chunks`, assembled in place), which is what
+    makes USM-vs-BUFFERS results *bitwise* identical for a fixed package
+    structure — the same executable runs on the same values; only the
+    data movement differs.
+
+    Split-argument staging goes through a per-unit scratch pool: the
+    host buffer a package's slice is assembled in is keyed by
+    ``(unit, shape, dtype)`` — one compile bucket, one allocation — and
+    returned to the pool when the package collects, instead of a fresh
+    pad allocation per ``device_put``. A package in flight holds its
+    scratch exclusively, so pipelined staging of package *k+1* can never
+    overwrite buffers package *k* is still computing on. The pool is
+    reuse of *allocations*, not of data movement: every package still
+    pays its per-argument H2D copy and per-package D2H copy-back, so the
+    counters are unchanged.
     """
 
     model = MemoryModel.BUFFERS
 
+    def __init__(self):
+        # free scratch per (unit, shape, dtype); leased scratch per
+        # in-flight (plan, package) until its collect returns it
+        self._scratch: dict[tuple, list] = {}   # guarded-by: _pool_lock
+        self._leases: dict[tuple, list] = {}    # guarded-by: _pool_lock
+        self._pool_lock = threading.Lock()
+
+    def _borrow(self, unit, shape: tuple, dtype) -> tuple:
+        key = (id(unit), tuple(shape), np.dtype(dtype).str)
+        with self._pool_lock:
+            free = self._scratch.get(key)
+            buf = free.pop() if free else None
+        if buf is None:
+            buf = np.empty(tuple(shape), dtype)
+        return key, buf
+
     def _stage(self, unit, plan: LaunchPlan, pkg) -> list:
-        args = []
-        for _, chunk in _package_chunks(plan, pkg):
-            staged = jax.device_put(chunk, unit.device)
-            plan.add(h2d_copies=1, h2d_bytes=np.asarray(chunk).nbytes)
+        grow = _bucket(pkg.size) - pkg.size
+        args, lease = [], []
+        for spec, arr in zip(plan.kernel.args, plan.inputs):
+            if spec.role is ArgRole.SPLIT:
+                shape = list(arr.shape)
+                shape[spec.axis] = pkg.size + 2 * spec.halo + grow
+                key, buf = self._borrow(unit, shape, arr.dtype)
+                _fill_split(buf, arr, spec, pkg.offset, pkg.size,
+                            plan.total)
+                staged = jax.device_put(buf, unit.device)
+                lease.append((key, buf))
+            else:
+                staged = jax.device_put(arr, unit.device)
+                buf = arr
+            plan.add(h2d_copies=1, h2d_bytes=np.asarray(buf).nbytes)
             args.append(staged)
+        if lease:
+            with self._pool_lock:
+                self._leases[(id(plan), pkg.seq)] = lease
         return args
 
     def _collect(self, plan: LaunchPlan, pkg, out_dev) -> None:
@@ -497,6 +682,9 @@ class BuffersDataPlane(DataPlane):
         host = np.asarray(out_dev)
         plan.add(d2h_copies=1, d2h_bytes=host.nbytes)
         plan.out[pkg.offset:pkg.offset + pkg.size] = host[:pkg.size]
+        with self._pool_lock:
+            for key, buf in self._leases.pop((id(plan), pkg.seq), ()):
+                self._scratch.setdefault(key, []).append(buf)
 
 
 _PLANES = {MemoryModel.USM: UsmDataPlane(),

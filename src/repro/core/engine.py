@@ -53,6 +53,7 @@ or, scoped::
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import threading
 import time
@@ -278,12 +279,66 @@ class RealBackend(Backend):
             self.board.record(unit, pkg.size,
                               max(pkg.t_complete - pkg.t_issue, 1e-9))
 
-    def wait_next_event(self, timeout: float = 0.1) -> None:
+    # -- pipelined dispatch (phases of `dispatch`, overlappable) ------------
+    def begin(self, unit: int, launch: _Launch, pkg: Package):
+        """Stage + issue one package without waiting for the device.
+
+        The first two data-plane phases of :meth:`dispatch`: materialize
+        the package's inputs and launch the kernel asynchronously. The
+        worker may then pull and stage further packages while this one
+        computes, up to its pipeline depth.
+
+        Args:
+            unit: index of the serving Coexecution Unit.
+            launch: the owning launch.
+            pkg: the package to put in flight.
+
+        Returns:
+            The in-flight device output handle for :meth:`finish`, or
+            ``None`` when the unit is already dead (the package was
+            disowned and re-issued; its completion is a zombie).
+        """
+        if self.loop is not None and unit in self.loop.dead_units:
+            return None
+        u = self.units[unit]
+        args = self.plane.stage(u, launch.plan, pkg)
+        return self.plane.issue(u, launch.plan, pkg, args)
+
+    def finish(self, unit: int, launch: _Launch, pkg: Package, out_dev,
+               *, busy_floor: float = 0.0) -> None:
+        """Await and collect one in-flight package (phase 3).
+
+        Blocks on the device result, lands it in the launch's output
+        container and feeds the SpeedBoard. ``busy_floor`` is the
+        previous package's completion time on this unit: with several
+        packages in flight their issue→complete spans overlap, so busy
+        time and throughput are measured from whichever is later —
+        issue or the moment the device actually became free.
+
+        Args:
+            unit: index of the serving Coexecution Unit.
+            launch: the owning launch.
+            pkg: the package to complete (in issue order per unit).
+            out_dev: handle from :meth:`begin` (``None`` = dropped).
+            busy_floor: completion time of the unit's previous package.
+        """
+        if out_dev is None:
+            return
+        self.plane.complete(self.units[unit], launch.plan, pkg, out_dev,
+                            busy_floor=busy_floor)
+        if self.board is not None:
+            self.board.record(
+                unit, pkg.size,
+                max(pkg.t_complete - max(pkg.t_issue, busy_floor), 1e-9))
+
+    def wait_next_event(self, timeout: Optional[float] = None) -> None:
         """Park the calling worker on the engine's condition variable.
 
         Args:
-            timeout: max seconds to sleep — also the safety net against
-                lost wakeups. The caller must hold the condition.
+            timeout: max seconds to sleep, or ``None`` to wait for the
+                next notify (every state change — submit, completion,
+                kill/join, shutdown — notifies, so no poll is needed).
+                The caller must hold the condition.
         """
         if self.condition is not None:
             self.condition.wait(timeout=timeout)
@@ -431,6 +486,10 @@ class CoexecEngine:
         # the data plane implementing self.memory: USM = zero-copy shared
         # views + in-place collection, BUFFERS = per-package staging copies
         self.plane = make_plane(self.memory)
+        # packages a unit may have in flight: 1 = serial stage/compute/
+        # collect; >= 2 overlaps staging/collection with device compute
+        self.pipeline_depth = max(
+            1, int(spec.units.pipeline_depth)) if spec is not None else 1
         self.board = SpeedBoard(len(self.units),
                                 hints=[u.speed_hint for u in self.units])
         self._cv = threading.Condition()
@@ -606,6 +665,12 @@ class CoexecEngine:
         """
         kernel = as_coexec_kernel(kernel, len(inputs))
         plan = self.plane.plan(kernel, inputs, out, scheduler.total)
+        # compile every package bucket now (outside the engine lock, and
+        # memoized per unit/shape) so no first dispatch charges JIT
+        # compile time to a unit's busy clock — compile time would
+        # otherwise poison the adaptive speed estimates
+        self.plane.prewarm(self.units, plan,
+                           getattr(scheduler, "granularity", 1))
         if scheduler.num_units != len(self.units):
             raise ValueError(
                 f"scheduler built for {scheduler.num_units} units, engine "
@@ -658,39 +723,97 @@ class CoexecEngine:
         return launch.handle
 
     # -- worker loop -------------------------------------------------------
+    def _retire_oldest(self, unit_idx: int, inflight: collections.deque,
+                       busy_floor: float) -> float:
+        """Complete the unit's oldest in-flight package, in issue order.
+
+        Blocks on the device result outside the lock, then re-enters the
+        loop under ``_cv`` to record the completion — zombies (packages
+        disowned by ``unit_lost`` mid-flight) are dropped by the loop's
+        ownership ledger exactly like the serial path's.
+
+        Args:
+            unit_idx: the worker's unit index.
+            inflight: the worker's in-flight FIFO (oldest first).
+            busy_floor: completion time of the previous package.
+
+        Returns:
+            The new busy floor (this package's completion time).
+        """
+        launch, pkg, out_dev = inflight.popleft()
+        try:
+            self.backend.finish(unit_idx, launch, pkg, out_dev,
+                                busy_floor=busy_floor)
+        except BaseException as e:
+            with self._cv:
+                self.loop.complete(launch, pkg, error=e)
+                self._cv.notify_all()
+            return busy_floor
+        with self._cv:
+            self.loop.complete(launch, pkg)
+            self._cv.notify_all()
+        return pkg.t_complete or busy_floor
+
     def _worker(self, unit_idx: int) -> None:
-        """One Coexecution Unit's management thread: pull, dispatch, complete.
+        """One Coexecution Unit's management thread, pipelined per unit.
+
+        Pull → stage+issue → complete, with up to ``pipeline_depth``
+        packages in flight: while package *k* computes on the device the
+        worker pulls and stages *k+1* and collects *k-1*, so the device
+        no longer idles during host-side pull/stage/collect (and the
+        host no longer idles during compute). ``pipeline_depth=1``
+        degenerates to the serial pull–dispatch–complete loop. In-flight
+        packages retire strictly in issue order, so the scheduler's
+        speed refresh, the ownership ledger and counter attribution see
+        the same per-package event sequence as the serial path.
 
         All control-plane decisions happen inside the shared
         :class:`~repro.core.exec.ExecutionLoop` under the engine lock;
-        only the (expensive) data-plane dispatch runs unlocked.
+        only the (expensive) data-plane phases run unlocked.
         """
+        depth = self.pipeline_depth
+        # this worker's in-flight packages, oldest first — only this
+        # thread touches it, but the *count* it bounds (how many pulled-
+        # but-incomplete packages the unit owns) is mirrored in the
+        # loop's ownership ledger under _cv
+        inflight: collections.deque = collections.deque()
+        busy_floor = 0.0
         while True:
             with self._cv:
                 work = self.loop.pull(unit_idx, force_flush=self._stop)
                 while work is None:
+                    if inflight:
+                        # nothing new to pull: drain the pipeline instead
+                        # of parking on top of unfinished packages
+                        break
                     if self._stop and self.loop.drained():
                         return
-                    # Park until a submit / completion / shutdown wakes us
-                    # (or a staged fusion group ripens). The timeout is
-                    # also a safety net against lost wakeups.
+                    # Park until a submit / completion / shutdown wakes
+                    # us, or — when a staged fusion group is ripening —
+                    # exactly until its flush deadline. Every state
+                    # change notifies the condition, so an untimed wait
+                    # needs no poll-interval safety net.
                     ripen = self.admission.next_ripen_in(time.perf_counter())
-                    wait = 0.1 if ripen is None else min(0.1,
-                                                         max(ripen, 1e-4))
-                    self.backend.wait_next_event(timeout=wait)
+                    self.backend.wait_next_event(
+                        timeout=None if ripen is None else max(ripen, 1e-4))
                     work = self.loop.pull(unit_idx, force_flush=self._stop)
+            if work is None:
+                busy_floor = self._retire_oldest(unit_idx, inflight,
+                                                 busy_floor)
+                continue
             launch, pkg = work
             try:
                 # the engine's data plane stages inputs per the memory
-                # model (USM: zero-copy shared views; BUFFERS: per-package
-                # device_put + copy-back), dispatches on the unit, and
-                # lands the chunk in the launch's output container.
-                self.backend.dispatch(unit_idx, launch, pkg)
+                # model (USM: zero-copy shared views; BUFFERS: pooled
+                # per-package device_put) and issues the kernel on the
+                # unit asynchronously; collection happens at retire time.
+                out_dev = self.backend.begin(unit_idx, launch, pkg)
             except BaseException as e:
                 with self._cv:
                     self.loop.complete(launch, pkg, error=e)
                     self._cv.notify_all()
                 continue
-            with self._cv:
-                self.loop.complete(launch, pkg)
-                self._cv.notify_all()
+            inflight.append((launch, pkg, out_dev))
+            while len(inflight) >= depth:
+                busy_floor = self._retire_oldest(unit_idx, inflight,
+                                                 busy_floor)

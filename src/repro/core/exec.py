@@ -243,7 +243,11 @@ class ExecutionLoop:
         # Elastic-cluster state: which unit indices are currently dead, a
         # per-unit ownership ledger of in-flight packages keyed by
         # (launch id, package seq), and the queue of ranges harvested from
-        # dead units awaiting exact re-issue to survivors.
+        # dead units awaiting exact re-issue to survivors. A pipelined
+        # unit (pipeline_depth >= 2) holds several entries here at once —
+        # one per pulled-but-uncompleted package, in issue order — and
+        # unit_lost disowns *all* of them, so a unit that dies with a
+        # full pipeline re-issues every in-flight range exactly once.
         self.dead_units: set[int] = set()
         self._owned: dict[int, dict[tuple[int, int],
                                     tuple[LaunchState, Package]]] = {}
@@ -410,7 +414,12 @@ class ExecutionLoop:
 
     # -- elastic membership ------------------------------------------------
     def in_flight_of(self, unit: int) -> int:
-        """Number of issued-but-uncollected packages a unit currently owns."""
+        """Number of issued-but-uncollected packages a unit currently owns.
+
+        Bounded by the engine's ``pipeline_depth``: a serial unit owns at
+        most one package between pull and complete, a pipelined worker
+        keeps up to ``depth`` staged/computing/collecting at once.
+        """
         return len(self._owned.get(unit, ()))
 
     def oldest_issue(self, unit: int) -> Optional[float]:

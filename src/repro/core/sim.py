@@ -171,14 +171,27 @@ class SimBackend(Backend):
     """
 
     def __init__(self, units: Sequence["SimUnit"], memory: MemoryModel,
-                 costs: MemoryCosts):
+                 costs: MemoryCosts, *, pipeline_depth: int = 1):
         self.units = list(units)
         self.memory = memory
         self.costs = costs
+        # mirrors the real engine's per-unit dispatch pipeline: with
+        # depth >= 2 a package that arrives back-to-back with the unit's
+        # previous compute was staged *during* that compute, so its
+        # launch cost no longer delays the device (the host still pays
+        # it). The DES runs a two-clock model: scheduler decisions
+        # (pull pacing, contention, kill checks) stay on the *serial*
+        # clock — `busy_until` keeps the serial horizon, which is what
+        # keeps package covers and counter totals depth-invariant for
+        # every policy — while the *recorded* package timeline drops
+        # the hidden launch costs. Depth 1 reproduces the serial
+        # timeline exactly on both clocks.
+        self.pipeline_depth = max(1, int(pipeline_depth))
         n = len(self.units)
         self.t = 0.0
         self.counters = DataPlaneCounters()      # run-wide aggregation
-        self.busy_until = [0.0] * n              # compute-busy horizon
+        self.busy_until = [0.0] * n              # serial compute horizon
+        self._hidden = [0.0] * n  # launch cost hidden per pipeline chain
         self.collector_free = [0.0] * n          # per-unit collection thread
         self.unit_finish = {u.name: 0.0 for u in self.units}
         self.unit_busy = {u.name: 0.0 for u in self.units}
@@ -212,19 +225,39 @@ class SimBackend(Backend):
         _count_package(self.counters, self.memory, in_bytes, out_bytes)
         _count_package(launch.counters, self.memory, in_bytes, out_bytes)
 
-        launch_cost, compute_end = self._model_compute(unit, launch, pkg)
-        # package emission on this unit's manager thread
+        launch_cost, t_launch, compute_end = \
+            self._model_compute(unit, launch, pkg)
+        # pipelined overlap: a package pulled back-to-back with this
+        # unit's previous compute was staged *during* that compute, so
+        # its launch cost is hidden from the recorded device timeline
+        # (the host still pays it). The hidden costs accumulate along
+        # one back-to-back chain and reset when the pipeline drains;
+        # `busy_until` keeps the serial horizon so every scheduling
+        # decision is identical to the depth-1 run.
+        prestaged = (self.pipeline_depth > 1
+                     and self.busy_until[unit] > 0.0
+                     and self.busy_until[unit] >= pkg.t_issue - 1e-12)
+        if prestaged:
+            self._hidden[unit] += launch_cost
+        else:
+            self._hidden[unit] = 0.0
+        shift = self._hidden[unit]
         self.host_busy += launch_cost
-        pkg.t_launch = pkg.t_issue + launch_cost
+        pkg.t_launch = t_launch - shift
+        if prestaged:
+            # staged while the previous package computed: the recorded
+            # issue coincides with the device picking it up
+            pkg.t_issue = pkg.t_launch
         self.busy_until[unit] = compute_end
-        self.unit_busy[u.name] += compute_end - pkg.t_launch
-        self.unit_finish[u.name] = max(self.unit_finish[u.name], compute_end)
-        pkg.t_complete = compute_end
+        self.unit_busy[u.name] += compute_end - t_launch
+        self.unit_finish[u.name] = max(self.unit_finish[u.name],
+                                       compute_end - shift)
+        pkg.t_complete = compute_end - shift
 
         # collection on the unit's manager thread; overlaps the unit's next
         # compute (paper: "overlapping computation and communication") but
         # collections of one unit serialize among themselves.
-        collect_start = max(compute_end, self.collector_free[unit])
+        collect_start = max(pkg.t_complete, self.collector_free[unit])
         collect_cost = self.costs.collect_cost(self.memory, int(out_bytes))
         self.collector_free[unit] = collect_start + collect_cost
         self.host_busy += collect_cost
@@ -235,15 +268,18 @@ class SimBackend(Backend):
         """No-op: :meth:`run` advances virtual time through its heap."""
 
     def _model_compute(self, unit: int, launch: _SimLaunchState,
-                       pkg: Package) -> tuple[float, float]:
+                       pkg: Package) -> tuple[float, float, float]:
         """Price one package without mutating any state.
 
         Given the backend's *current* busy horizons and the package's
-        stamped ``t_issue``, returns ``(launch_cost, compute_end)`` —
-        exactly the timeline :meth:`dispatch` would commit. Factored out
-        so the elastic-cluster backend can ask "would this package finish
-        before its unit's scripted death?" and, when not, model the
-        attempt as lost without ever charging its cost.
+        stamped ``t_issue``, returns ``(launch_cost, t_launch,
+        compute_end)`` — the *serial-clock* timeline :meth:`dispatch`
+        prices decisions with (:meth:`dispatch` then subtracts the
+        pipeline's hidden launch costs from the recorded stamps, never
+        from these). Factored out so the elastic-cluster backend can
+        ask "would this package finish before its unit's scripted
+        death?" and, when not, model the attempt as lost without ever
+        charging its cost.
         """
         wl = launch.workload
         u = self.units[unit]
@@ -263,7 +299,7 @@ class SimBackend(Backend):
         if others_busy and wl.contention_scale > 0.0:
             pen = self.costs.contention_penalty(wl.working_set_bytes)
             factor = 1.0 + wl.contention_scale * (pen - 1.0)
-        return launch_cost, t_launch + base * factor
+        return launch_cost, t_launch, t_launch + base * factor
 
     # -- payload hooks ------------------------------------------------------
     def fuse_payload(self, members: list[_SimLaunchState],
@@ -387,16 +423,20 @@ class SimBackend(Backend):
             entry, pkg = work
             self.dispatch(i, entry, pkg)
             loop.complete(entry, pkg)
-            # the unit may request its next package as soon as compute ends
-            heapq.heappush(evq, (pkg.t_complete, tie, i))
+            # the unit re-arms on the serial clock (busy_until), not the
+            # recorded pipelined completion — pull pacing is what keeps
+            # scheduler decisions depth-invariant
+            heapq.heappush(evq, (self.busy_until[i], tie, i))
             tie += 1
 
 
 def _run_sim(entries: Sequence[_SimLaunchState], units: Sequence["SimUnit"],
              cfg: AdmissionConfig, memory: MemoryModel, costs: MemoryCosts,
-             validate: bool) -> tuple[SimBackend, ExecutionLoop]:
+             validate: bool, pipeline_depth: int = 1
+             ) -> tuple[SimBackend, ExecutionLoop]:
     """Drive the shared loop over a SimBackend until the entries finish."""
-    backend = SimBackend(units, memory, costs)
+    backend = SimBackend(units, memory, costs,
+                         pipeline_depth=pipeline_depth)
     loop = ExecutionLoop(backend, [u.name for u in units], cfg,
                          validate=validate)
     backend.run(loop, entries)
@@ -455,8 +495,9 @@ def simulate(scheduler: Optional[Scheduler], units: Sequence["SimUnit"],
 
     entry = _SimLaunchState(0, scheduler, workload,
                             tenant=f"sim:{workload.name}")
+    depth = int(spec.units.pipeline_depth) if spec is not None else 1
     backend, _ = _run_sim([entry], units, AdmissionConfig(), memory, costs,
-                          validate)
+                          validate, pipeline_depth=depth)
     stats = entry.stats
     return SimResult(
         workload=workload.name,
@@ -704,7 +745,9 @@ def simulate_multi(specs: Sequence[LaunchSpec], units: Sequence["SimUnit"], *,
             entry.deadline = ls.t_submit + cfg.slo_ms / 1e3
         entries.append(entry)
 
-    backend, loop = _run_sim(entries, units, cfg, memory, costs, validate)
+    depth = int(spec.units.pipeline_depth) if spec is not None else 1
+    backend, loop = _run_sim(entries, units, cfg, memory, costs, validate,
+                             pipeline_depth=depth)
 
     results = [LaunchSimResult(
         tenant=e.tenant, workload=e.workload.name, t_submit=e.t_submit,

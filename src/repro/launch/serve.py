@@ -112,18 +112,23 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
             scheduler=spec.scheduler.replace(policy=policy))
         with CoexecutorRuntime.from_spec(pspec, units=units) as rt:
             rt.launch(n, kernel, datas[0])          # warm the jit cache
+            busy0 = sum(u.busy_s for u in units)
             t0 = time.perf_counter()
             served, pkgs, lats, inflight = 0, 0, [], []
             h2d, d2h, dispatches = 0, 0, 0
+            host_s = 0.0        # staging + collection (non-compute) time
             service = []        # (t_complete, tenant, items) per package
 
             def _reap(h, t_sub, tenant):
-                nonlocal served, pkgs, h2d, d2h, dispatches
+                nonlocal served, pkgs, h2d, d2h, dispatches, host_s
                 h.result()
                 served, pkgs = served + 1, pkgs + h.stats.num_packages
                 h2d += h.stats.data.h2d_copies
                 d2h += h.stats.data.d2h_copies
                 dispatches += h.stats.data.dispatches
+                host_s += sum((p.t_launch - p.t_issue)
+                              + (p.t_collected - p.t_complete)
+                              for p in h.stats.packages)
                 service.extend((p.t_complete, tenant, p.size)
                                for p in h.stats.packages)
                 lats.append(time.perf_counter() - t_sub)
@@ -137,6 +142,7 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
             for h, t_sub, tenant in inflight:
                 _reap(h, t_sub, tenant)
             dt = time.perf_counter() - t0
+            busy = sum(u.busy_s for u in units) - busy0
         lats.sort()
         # fairness of throughput across requests + the time-sampled
         # service fairness curve (the measure --preempt tightens), on a
@@ -158,6 +164,9 @@ def coexec_real_rows(spec=None, *, policies=None, units=None) -> list[dict]:
                          items_per_s=served * n / dt,
                          dispatches=dispatches,
                          h2d_copies=h2d, d2h_copies=d2h,
+                         device_idle_frac=max(
+                             0.0, 1.0 - busy / (len(units) * dt)),
+                         host_overhead_frac=host_s / dt,
                          fairness=jain_index(thru),
                          fairness_curve_mean=float(sum(curve) / len(curve)),
                          fairness_curve_min=float(min(curve)),
@@ -186,6 +195,8 @@ def coexec_sim_rows(spec=None, *, policies=None) -> list[dict]:
         sched = spec.scheduler.replace(policy=policy).build(
             wl.total, 2, speeds=[cpu.speed, gpu.speed])
         r = simulate(sched, [cpu, gpu], wl, spec=spec)
+        busy = sum(r.unit_busy_s.values())
+        span = max(r.total_s, 1e-12)
         rows.append(dict(workload=workload, policy=policy,
                          memory=r.memory,
                          seconds=r.total_s, packages=r.num_packages,
@@ -193,7 +204,10 @@ def coexec_sim_rows(spec=None, *, policies=None) -> list[dict]:
                          steals=getattr(sched, "steals", 0),
                          dispatches=r.data.dispatches,
                          h2d_copies=r.data.h2d_copies,
-                         d2h_copies=r.data.d2h_copies))
+                         d2h_copies=r.data.d2h_copies,
+                         device_idle_frac=max(
+                             0.0, 1.0 - busy / (len(r.unit_busy_s) * span)),
+                         host_overhead_frac=r.host_busy_s / span))
     return rows
 
 

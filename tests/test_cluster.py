@@ -405,9 +405,10 @@ def run_cluster_lockstep_real(trace, cfg, events):
     return loop, admitted, shed, datas
 
 
-def run_cluster_lockstep_sim(trace, cfg, events):
+def run_cluster_lockstep_sim(trace, cfg, events, depth=1):
     units = sim_units(speed=1000.0)
-    backend = ClusterSimBackend(units, MemoryModel.USM, MemoryCosts())
+    backend = ClusterSimBackend(units, MemoryModel.USM, MemoryCosts(),
+                                pipeline_depth=depth)
     loop = ExecutionLoop(backend, [u.name for u in units], cfg)
 
     def make_launch(a, lp):
@@ -424,7 +425,9 @@ def run_cluster_lockstep_sim(trace, cfg, events):
 @pytest.mark.parametrize("script", sorted(EVENT_SCRIPTS))
 @pytest.mark.parametrize("policy", ["wfq", "edf"])
 @pytest.mark.parametrize("preempt", [False, True])
-def test_cluster_lockstep_parity_real_vs_sim(script, policy, preempt):
+@pytest.mark.parametrize("depth", [1, 2])
+def test_cluster_lockstep_parity_real_vs_sim(script, policy, preempt,
+                                             depth):
     """Acceptance (structure): identical trace + config + membership
     events = identical admission decisions, identical per-launch package
     covers and identical re-issue counts on the threaded backend and the
@@ -436,7 +439,8 @@ def test_cluster_lockstep_parity_real_vs_sim(script, policy, preempt):
     real_loop, real_adm, real_shed, datas = \
         run_cluster_lockstep_real(trace, cfg, events)
     sim_loop, sim_adm, sim_shed = run_cluster_lockstep_sim(trace, cfg,
-                                                           events)
+                                                           events,
+                                                           depth=depth)
 
     assert real_loop.admission.decision_log == \
         sim_loop.admission.decision_log

@@ -187,9 +187,10 @@ def run_lockstep_real(trace, cfg):
     return loop, admitted, shed, datas
 
 
-def run_lockstep_sim(trace, cfg):
+def run_lockstep_sim(trace, cfg, depth=1):
     units = sim_units(speed=1000.0)
-    backend = SimBackend(units, MemoryModel.USM, MemoryCosts())
+    backend = SimBackend(units, MemoryModel.USM, MemoryCosts(),
+                         pipeline_depth=depth)
     loop = ExecutionLoop(backend, [u.name for u in units], cfg)
 
     def make_launch(a, lp):
@@ -213,15 +214,19 @@ def run_lockstep_sim(trace, cfg):
 @pytest.mark.parametrize("policy", ["fifo", "wfq", "edf"])
 @pytest.mark.parametrize("preempt", [False, True])
 @pytest.mark.parametrize("fuse", [False, True])
-def test_lockstep_parity_real_vs_sim(policy, preempt, fuse):
+@pytest.mark.parametrize("depth", [1, 2])
+def test_lockstep_parity_real_vs_sim(policy, preempt, fuse, depth):
     """Acceptance (structure): identical trace + config + serve order =
     identical accept/shed decision log and identical fusion groupings on
-    the real engine and the DES — and the real results stay exact."""
+    the real engine and the DES — and the real results stay exact.
+    ``pipeline_depth`` is part of the matrix: the DES models pipelining
+    as a recorded-timeline overlay on a serial decision clock, so depth
+    must never perturb structural parity."""
     cfg = lockstep_cfg(policy, preempt, fuse)
     trace = lockstep_trace()
 
     real_loop, real_adm, real_shed, datas = run_lockstep_real(trace, cfg)
-    sim_loop, sim_adm, sim_shed = run_lockstep_sim(trace, cfg)
+    sim_loop, sim_adm, sim_shed = run_lockstep_sim(trace, cfg, depth=depth)
 
     assert real_loop.admission.decision_log == \
         sim_loop.admission.decision_log
